@@ -1,0 +1,113 @@
+"""Figure 6 (App. B.2): convex logistic regression, time-to-accuracy under
+simulated communication cost (comm = 25x one gradient step).
+
+The w8a dataset is offline-unavailable; we use the synthetic sparse
+binary stand-in from repro.data.synthetic.logreg_data with the same
+protocol: grid over (K, H, B_loc), count gradient evaluations +
+communication rounds to a target suboptimality. With a constant step
+size the SGD noise floor sits at ~1e-2 suboptimality on this data, so
+the target is eps = 0.02 (the paper's 0.005 needs their 1/t decayed
+grid-searched step sizes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core.local_sgd import make_local_sgd
+from repro.data.synthetic import logreg_data
+
+N, D = 4096, 100
+LAMBDA = 1.0 / N
+COMM_COST = 25.0
+
+
+def _full_loss(w, x, y):
+    z = x @ w
+    return jnp.mean(jnp.log1p(jnp.exp(-y * z))) + 0.5 * LAMBDA * jnp.sum(w * w)
+
+
+def _loss(params, batch):
+    w = params["w"]
+    z = batch["x"] @ w
+    l = jnp.mean(jnp.log1p(jnp.exp(-batch["y"] * z))) + 0.5 * LAMBDA * jnp.sum(w * w)
+    return l, {"xent": l}
+
+
+def run_config(K, H, B_loc, *, steps=400, lr=8.0, seed=0):
+    x, y = logreg_data(n=N, d=D, seed=0)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    fstar = _fstar(xj, yj)
+    run = RunConfig(model=ModelConfig(name="lr", family="dense", citation=""),
+                    shape=InputShape("c", D, K * B_loc, "train"),
+                    local_sgd=LocalSGDConfig(local_steps=H, local_momentum=0.0,
+                                             nesterov=False),
+                    optim=OptimConfig(base_lr=lr, base_batch=K * B_loc,
+                                      lr_decay_steps=(), weight_decay=0.0))
+    init, local_step, sync = make_local_sgd(run, _loss, num_workers=K)
+    state = init(jax.random.PRNGKey(seed), {"w": jnp.zeros(D)})
+    rng = np.random.default_rng(seed)
+    jstep = jax.jit(local_step)
+    jsync = jax.jit(sync)
+    target = fstar + 0.02
+    evals = comm = 0
+    for t in range(steps):
+        idx = rng.integers(0, N, size=(K, B_loc))
+        b = {"x": xj[idx], "y": yj[idx]}
+        state, _ = jstep(state, b)
+        evals += H and 1
+        if (t + 1) % H == 0:
+            state = jsync(state)
+            comm += 1
+            wbar = state.params["w"][0]
+            if float(_full_loss(wbar, xj, yj)) <= target:
+                sim_time = (t + 1) + comm * COMM_COST
+                return sim_time, t + 1, comm, True
+    return steps + comm * COMM_COST, steps, comm, False
+
+
+_FSTAR_CACHE = {}
+
+
+def _fstar(x, y):
+    key = (x.shape, float(x.sum()))
+    if key not in _FSTAR_CACHE:
+        w = jnp.zeros(x.shape[1])
+        loss_grad = jax.jit(jax.value_and_grad(lambda w: _full_loss(w, x, y)))
+        for i in range(600):  # full-batch GD to near-optimum
+            _, g = loss_grad(w)
+            w = w - 4.0 * g
+        _FSTAR_CACHE[key] = float(_full_loss(w, x, y))
+    return _FSTAR_CACHE[key]
+
+
+def _best_over_lrs(K, H, B_loc):
+    """Paper protocol: best step size by grid search per (K, H, B)."""
+    best = None
+    for lr in (2.0, 4.0, 8.0, 16.0):
+        out = run_config(K=K, H=H, B_loc=B_loc, lr=lr, steps=800)
+        if best is None or (out[3], -out[0]) > (best[3], -best[0]):
+            best = out
+    return best
+
+
+def fig6_convex():
+    base = None
+    for H in (1, 2, 4, 8, 16):
+        sim, steps, comm, hit = _best_over_lrs(K=8, H=H, B_loc=16)
+        if H == 1:
+            base = sim
+        emit(f"fig6/K8_H{H}", sim,
+             f"rel_time={sim/base:.3f};steps={steps};comm={comm};reached={hit}")
+
+
+def fig6b_speedup_over_K():
+    ref = None
+    for K in (1, 2, 4, 8, 16):
+        sim, steps, comm, hit = _best_over_lrs(K=K, H=8, B_loc=16)
+        if K == 1:
+            ref = sim
+        emit(f"fig6b/H8_K{K}", sim, f"speedup={ref/sim:.2f};reached={hit}")

@@ -1,0 +1,42 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) + XLA-fused baseline.
+
+On this CPU container the numbers validate plumbing, not TPU speed; the
+derived column reports bytes-touched so the TPU HBM-bound projection
+(bytes / 819 GB/s) can be read off directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def kernels_bench():
+    n = 1 << 20
+    p = jnp.ones((n,), jnp.float32)
+    g = jnp.full((n,), 0.1, jnp.float32)
+    u = jnp.zeros((n,), jnp.float32)
+
+    f_ref = jax.jit(lambda p, g, u: ref.fused_sgd_ref(
+        p, g, u, 0.1, momentum=0.9, weight_decay=1e-4, nesterov=True))
+    us = time_fn(f_ref, p, g, u)
+    touched = n * 4 * 5  # r p,g,u + w p,u
+    emit("kernels/fused_sgd_xla_ref", us,
+         f"bytes={touched};tpu_hbm_bound_us={touched/819e9*1e6:.2f}")
+
+    f_pal = jax.jit(lambda p, g, u: ops.fused_sgd(
+        p, g, u, lr=0.1, momentum=0.9, weight_decay=1e-4, nesterov=True))
+    us = time_fn(f_pal, p, g, u, iters=3, warmup=1)
+    emit("kernels/fused_sgd_pallas_interpret", us, "interpret=True (CPU)")
+
+    s_ref = jax.jit(ref.sign_compress_ref)
+    us = time_fn(s_ref, p)
+    emit("kernels/sign_compress_xla_ref", us,
+         f"bytes={n*8};tpu_hbm_bound_us={n*8/819e9*1e6:.2f}")
+
+    s_pal = jax.jit(lambda x: ops.sign_compress(x))
+    us = time_fn(s_pal, p, iters=3, warmup=1)
+    emit("kernels/sign_compress_pallas_interpret", us, "interpret=True (CPU)")

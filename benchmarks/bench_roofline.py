@@ -1,0 +1,40 @@
+"""Roofline summary rows from the dry-run JSONs (deliverable g surface).
+
+Reads experiments/dryrun/*.json and emits one row per (arch, shape) with
+the three roofline terms in microseconds (TPU v5e constants) and the
+dominant bottleneck. Full analysis (incl. scan-trip scaling) lives in
+repro.roofline.analysis / EXPERIMENTS.md; this bench gives the quick
+table view from raw dry-run parses.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+CHIPS = 256
+
+
+def roofline_rows():
+    files = sorted(f for f in glob.glob(os.path.join(DRYRUN_DIR, "*__16x16.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dryrun artifacts; run repro.launch.dryrun")
+        return
+    for f in files:
+        rep = json.load(open(f))
+        key = ("local_step" if "local_step" in rep else
+               "prefill" if "prefill" in rep else "decode")
+        r = rep[key]
+        # per-device numbers already (post-SPMD module)
+        t_comp = r["flops"] / PEAK_FLOPS_BF16 * 1e6
+        t_mem = r["bytes_accessed"] / HBM_BW * 1e6
+        t_coll = r["collectives"]["moved_bytes"] / ICI_BW * 1e6
+        dom = max(("compute", t_comp), ("memory", t_mem),
+                  ("collective", t_coll), key=lambda kv: kv[1])[0]
+        emit(f"roofline/{rep['arch']}/{rep['shape']}", max(t_comp, t_mem, t_coll),
+             f"comp_us={t_comp:.0f};mem_us={t_mem:.0f};coll_us={t_coll:.0f};"
+             f"dominant={dom}")

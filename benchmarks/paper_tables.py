@@ -1,0 +1,304 @@
+"""One benchmark per paper table/figure (CIFAR -> synthetic stand-in).
+
+Each function emits CSV rows ``name,us_per_call,derived`` where
+``derived`` carries the table's headline quantity (accuracy, speedup,
+communication rounds, eigenvalue, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (dataset, emit, mlp_init, mlp_loss, test_acc,
+                               time_fn, train_local_sgd)
+from repro.core.noise import gradient_noise_trace
+
+STEPS = 240
+TRAIN, TEST = None, None
+
+
+def _data():
+    global TRAIN, TEST
+    if TRAIN is None:
+        TRAIN, TEST = dataset()
+    return TRAIN, TEST
+
+
+# ---------------------------------------------------------------------------
+# Figure 1 + Table 2: generalization gap and post-local SGD closing it
+# ---------------------------------------------------------------------------
+
+def fig1_generalization_gap():
+    train, test = _data()
+    t0 = time.perf_counter()
+    rows = [
+        ("A1_small_mb", dict(K=1, B_loc=64, H=1)),
+        ("A2_large_mb", dict(K=8, B_loc=64, H=1)),
+        ("A3_huge_mb", dict(K=8, B_loc=256, H=1, lr=0.05)),
+        ("A4_local_sgd", dict(K=8, B_loc=64, H=4)),
+        ("A5_post_local", dict(K=8, B_loc=64, H=4,
+                               post_local_switch=STEPS // 2)),
+    ]
+    accs = {}
+    for name, kw in rows:
+        st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
+        accs[name] = test_acc(st, test)
+        emit(f"fig1/{name}", (time.perf_counter() - t0) * 1e6 / STEPS,
+             f"test_acc={accs[name]:.4f};comm_rounds={comm}")
+    # headline claims, qualitative: post-local >= large-batch baseline
+    emit("fig1/gap_closed", 0.0,
+         f"post_minus_large={accs['A5_post_local'] - accs['A2_large_mb']:+.4f}")
+
+
+def table2_postlocal_vs_minibatch():
+    train, test = _data()
+    combos = [("mb_K4", dict(K=4, B_loc=64, H=1)),
+              ("local_H8_K4", dict(K=4, B_loc=64, H=8)),
+              ("post_H8_K4", dict(K=4, B_loc=64, H=8,
+                                  post_local_switch=STEPS // 2))]
+    for name, kw in combos:
+        t0 = time.perf_counter()
+        st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
+        emit(f"table2/{name}", (time.perf_counter() - t0) * 1e6 / STEPS,
+             f"test_acc={test_acc(st, test):.4f};comm_rounds={comm}")
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / Figure 2(a): scalability of local SGD over K and H
+# ---------------------------------------------------------------------------
+
+def table1_scaling():
+    """Time-to-accuracy speedup model: measured per-step compute time +
+    simulated communication cost (the paper's App. B.2 protocol, comm =
+    25x one gradient step)."""
+    train, test = _data()
+    target = 0.80
+    comm_cost = 25.0  # in units of one local gradient step
+    base_time = None
+    for K in (1, 2, 4, 8):
+        for H in (1, 2, 4, 8):
+            if K == 1 and H > 1:
+                continue
+            st, comm, hist = train_local_sgd(steps=STEPS, train=train, K=K,
+                                             B_loc=32, H=H,
+                                             return_history=True)
+            acc = test_acc(st, test)
+            # simulated wall time: steps (compute, perfectly parallel) + comm
+            sim = STEPS + comm * comm_cost
+            if K == 1 and H == 1:
+                base_time = sim
+            speedup = base_time / sim if base_time else 1.0
+            emit(f"table1/K{K}_H{H}", sim,
+                 f"speedup={speedup:.2f};test_acc={acc:.4f};comm_rounds={comm}")
+
+
+def fig2b_same_effective_batch():
+    """Local SGD vs mini-batch SGD at the same effective batch K*H*B."""
+    train, test = _data()
+    for K in (4, 8):
+        stl, _, _ = train_local_sgd(steps=STEPS, train=train, K=K, B_loc=32, H=4)
+        stm, _, _ = train_local_sgd(steps=STEPS, train=train, K=K, B_loc=128, H=1,
+                                    lr=0.08)
+        emit(f"fig2b/K{K}", 0.0,
+             f"local_H4_acc={test_acc(stl, TEST):.4f};"
+             f"minibatch_same_eff_acc={test_acc(stm, TEST):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 4: post-local SGD + sign compression
+# ---------------------------------------------------------------------------
+
+def table4_sign_compression():
+    train, test = _data()
+    for name, kw in [
+        ("signSGD_H1", dict(sync_compression="sign", H=1)),
+        ("signSGD_post_H8", dict(sync_compression="sign", H=8,
+                                 post_local_switch=STEPS // 2)),
+        ("EFsign_H1", dict(sync_compression="ef_sign", H=1)),
+        ("EFsign_post_H8", dict(sync_compression="ef_sign", H=8,
+                                post_local_switch=STEPS // 2)),
+    ]:
+        st, comm, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=32,
+                                      lr=0.05, **kw)
+        emit(f"table4/{name}", 0.0,
+             f"test_acc={test_acc(st, test):.4f};comm_rounds={comm}")
+
+
+# ---------------------------------------------------------------------------
+# Table 8: local x global momentum grid
+# ---------------------------------------------------------------------------
+
+def table8_momentum():
+    train, test = _data()
+    for gm in (0.0, 0.3, 0.9):
+        st, _, _ = train_local_sgd(steps=STEPS, train=train, K=4, B_loc=32,
+                                   H=2, local_momentum=0.9, global_momentum=gm)
+        emit(f"table8/local0.9_global{gm}", 0.0,
+             f"test_acc={test_acc(st, test):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 14: isotropic noise injection baseline (Neelakantan et al.)
+# ---------------------------------------------------------------------------
+
+def table14_noise_injection():
+    train, test = _data()
+    st_post, _, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=64,
+                                    H=4, post_local_switch=STEPS // 2)
+    st_noise, _, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=64,
+                                     H=1, noise_eta=1e-4)
+    st_mb, _, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=64, H=1)
+    emit("table14/post_local", 0.0, f"test_acc={test_acc(st_post, test):.4f}")
+    emit("table14/isotropic_noise", 0.0, f"test_acc={test_acc(st_noise, test):.4f}")
+    emit("table14/minibatch", 0.0, f"test_acc={test_acc(st_mb, test):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 16/17: hierarchical local SGD
+# ---------------------------------------------------------------------------
+
+def table16_hierarchical():
+    """H * H^b = 8 fixed; vary the split; communication counted per level."""
+    train, test = _data()
+    for H, Hb in [(1, 8), (2, 4), (4, 2), (8, 1)]:
+        st, comm, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=32,
+                                      H=H, block_steps=Hb)
+        # comm rounds split: global every Hb-th sync
+        glob = comm // Hb if Hb > 1 else comm
+        block = comm - glob
+        emit(f"table16/H{H}_Hb{Hb}", 0.0,
+             f"test_acc={test_acc(st, test):.4f};global_sync={glob};"
+             f"block_sync={block}")
+
+
+def table17_network_delay_tolerance():
+    """Simulated time with slow outer links (paper Fig. 19): outer sync
+    costs 50x an inner sync."""
+    for H, Hb in [(2, 1), (2, 4), (2, 16)]:
+        steps = 128
+        syncs = steps // H
+        glob = syncs // Hb
+        block = syncs - glob
+        sim = steps + block * 1.0 + glob * 50.0
+        emit(f"table17/H{H}_Hb{Hb}", sim, f"sim_time_units={sim:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Figure 4 / 13 / 14: flatness — dominant Hessian eigenvalue (power iter)
+# ---------------------------------------------------------------------------
+
+def _dominant_eig(params, batch, iters=20, key=0):
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+
+    def loss_flat(f):
+        return mlp_loss(unravel(f), batch)[0]
+
+    v = jax.random.normal(jax.random.PRNGKey(key), flat.shape)
+    v = v / jnp.linalg.norm(v)
+    hvp = jax.jit(lambda u: jax.jvp(jax.grad(loss_flat), (flat,), (u,))[1])
+    lam = 0.0
+    for _ in range(iters):
+        hv = hvp(v)
+        lam = float(jnp.vdot(v, hv))
+        v = hv / (jnp.linalg.norm(hv) + 1e-12)
+    return lam
+
+
+def fig4_flatness():
+    train, test = _data()
+    batch = {"x": jnp.asarray(train["x"][:1024]), "y": jnp.asarray(train["y"][:1024])}
+    st_mb, _, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=64, H=1)
+    st_post, _, _ = train_local_sgd(steps=STEPS, train=train, K=8, B_loc=64,
+                                    H=4, post_local_switch=STEPS // 2)
+    pm = jax.tree.map(lambda a: a.mean(0), st_mb.params)
+    pp = jax.tree.map(lambda a: a.mean(0), st_post.params)
+    em = _dominant_eig(pm, batch)
+    ep = _dominant_eig(pp, batch)
+    emit("fig4/minibatch_eig", 0.0, f"lambda_max={em:.4f};acc={test_acc(pm, test):.4f}")
+    emit("fig4/postlocal_eig", 0.0, f"lambda_max={ep:.4f};acc={test_acc(pp, test):.4f}")
+    emit("fig4/flatter", 0.0, f"postlocal_minus_minibatch={ep - em:+.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Section 5 eq. (4): K * Sigma(w) noise amplification
+# ---------------------------------------------------------------------------
+
+def sec5_noise_scale():
+    """Between-worker gradient variance scales ~1/B_loc (eq. 4): halving
+    B_loc (the local SGD regime) doubles the injected noise trace."""
+    train, _ = _data()
+    params = mlp_init(jax.random.PRNGKey(0))
+    gfun = jax.jit(jax.vmap(lambda b: jax.grad(
+        lambda p, bb: mlp_loss(p, bb)[0])(params, b)))
+    rng = np.random.default_rng(0)
+    traces = {}
+    for B in (16, 32, 64, 128):
+        idx = rng.integers(0, len(train["x"]), size=(16, B))
+        batch = {"x": jnp.asarray(train["x"][idx]), "y": jnp.asarray(train["y"][idx])}
+        g = gfun(batch)
+        tr, _ = gradient_noise_trace(g)
+        traces[B] = float(tr)
+        emit(f"sec5/noise_trace_B{B}", 0.0, f"trace={float(tr):.5f}")
+    ratio = traces[16] / max(traces[128], 1e-12)
+    emit("sec5/trace_ratio_16_vs_128", 0.0, f"ratio={ratio:.2f};expected~8")
+
+
+# ---------------------------------------------------------------------------
+# Figures 10/11 (App. B.4.2): local-step warmup strategies
+# ---------------------------------------------------------------------------
+
+def fig10_warmup():
+    """H warmed up 1 -> 8 with linear / exponential / constant schedules vs
+    constant-H local SGD (the paper finds warmup unconvincing; we report
+    the comparison)."""
+    train, test = _data()
+    from repro.configs.base import LocalSGDConfig
+    from benchmarks.common import train_local_sgd as tls
+    rows = [("constH8", dict(K=8, B_loc=32, H=8))]
+    for kind in ("linear", "exp", "constant"):
+        rows.append((f"warmup_{kind}", dict(K=8, B_loc=32, H=8)))
+    for name, kw in rows:
+        if name.startswith("warmup"):
+            kind = name.split("_")[1]
+            st, comm, _ = _train_with_warmup(kind, train)
+        else:
+            st, comm, _ = tls(steps=STEPS, train=train, **kw)
+        emit(f"fig10/{name}", 0.0,
+             f"test_acc={test_acc(st, TEST):.4f};comm_rounds={comm}")
+
+
+def _train_with_warmup(kind, train):
+    from benchmarks import common as C
+    from repro.configs.base import (InputShape, LocalSGDConfig, ModelConfig,
+                                    OptimConfig, RunConfig)
+    from repro.core.local_sgd import make_local_sgd
+    from repro.core.schedule import local_steps_at
+    from repro.data.partition import ShardedBatches
+    K, B = 8, 32
+    run = RunConfig(
+        model=ModelConfig(name="mlp", family="dense", citation=""),
+        shape=InputShape("b", C.DIM, K * B, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, warmup_kind=kind,
+                                 warmup_steps=STEPS // 4),
+        optim=OptimConfig(base_lr=0.15, base_batch=K * B,
+                          lr_warmup_steps=STEPS // 20,
+                          lr_decay_steps=(STEPS // 2, 3 * STEPS // 4),
+                          weight_decay=1e-4))
+    init, local_step, sync = make_local_sgd(run, C.mlp_loss, num_workers=K)
+    state = init(jax.random.PRNGKey(1), C.mlp_init(jax.random.PRNGKey(0), 256))
+    it = ShardedBatches(train, K, B, seed=0)
+    jstep, jsync = jax.jit(local_step), jax.jit(sync)
+    since = comm = 0
+    for t in range(STEPS):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, _ = jstep(state, b)
+        since += 1
+        if since >= local_steps_at(run.local_sgd, t):
+            since = 0
+            state = jsync(state)
+            comm += 1
+    return state, comm, None

@@ -1,0 +1,19 @@
+"""repro — 'Don't Use Large Mini-Batches, Use Local SGD' as a multi-pod
+JAX/TPU framework.
+
+Public API tour:
+
+    from repro import configs
+    from repro.configs.base import RunConfig, LocalSGDConfig, OptimConfig
+    from repro.core.local_sgd import make_local_sgd           # Alg. 1/2/5
+    from repro.launch.steps import build_train, build_serve   # mesh-aware
+    from repro.launch.train import fit                        # schedule driver
+    from repro.launch.mesh import make_production_mesh        # 16x16 / 2x16x16
+    from repro.models import lm                               # 6-family model zoo
+    from repro.sharding.layout import (train_layout,
+                                       fsdp_within_worker_layout)
+
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,48 @@
+"""Checkpointing: flat-key npz pytree snapshots + metadata.
+
+Works for any pytree (params, full LocalSGDState). Arrays are pulled to
+host; restore rebuilds the exact tree structure from the template.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, *, step: int | None = None, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **_flatten(tree))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.splitext(path)[0] + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, template):
+    """Restore into the structure of ``template`` (arrays or SDS)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(x) for x in p)
+        arr = data[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=getattr(leaf, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(os.path.splitext(path)[0] + ".meta.json") as f:
+        return json.load(f)

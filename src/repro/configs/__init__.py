@@ -1,0 +1,62 @@
+"""Architecture registry: ``get(name)`` / ``get_smoke(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, BlockDef, InputShape,
+                                LocalSGDConfig, MLAConfig, ModelConfig,
+                                MoEConfig, OptimConfig, RunConfig, SSMConfig)
+
+_MODULES = {
+    "qwen3-32b": "qwen3_32b",
+    "gemma3-1b": "gemma3_1b",
+    "internvl2-76b": "internvl2_76b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "whisper-small": "whisper_small",
+    "zamba2-7b": "zamba2_7b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "phi4-mini-3.8b": "phi4_mini",
+    "minitron-4b": "minitron_4b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "paper-lm": "paper_lm",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "paper-lm")
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _mod(name).smoke()
+
+
+# (arch, shape) combinations excluded from the dry-run matrix, with reasons
+# (see DESIGN.md §Arch-applicability).
+SKIPS: dict[tuple[str, str], str] = {
+    ("qwen3-32b", "long_500k"): "pure full attention (no sub-quadratic variant)",
+    ("internvl2-76b", "long_500k"): "pure full attention",
+    ("deepseek-v2-lite-16b", "long_500k"): "MLA is full attention over cache",
+    ("whisper-small", "long_500k"): "enc-dec full attention; 500k decoder "
+                                    "positions unsupported by family",
+    ("phi4-mini-3.8b", "long_500k"): "pure full attention",
+    ("minitron-4b", "long_500k"): "pure full attention",
+    ("olmoe-1b-7b", "long_500k"): "pure full attention",
+}
+
+
+def runnable_pairs():
+    """All (arch, shape_name) pairs in the dry-run matrix (skips removed)."""
+    out = []
+    for a in ARCHS:
+        for s in INPUT_SHAPES:
+            if (a, s) not in SKIPS:
+                out.append((a, s))
+    return out

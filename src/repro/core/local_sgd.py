@@ -1,0 +1,225 @@
+"""Local SGD / Post-local SGD / Hierarchical local SGD — the paper's core.
+
+Representation: every parameter (and momentum buffer) carries a leading
+worker dim ``W`` sharded over the layout's ``worker_axes``. Local steps
+are the single-worker update lifted with ``jax.vmap`` — GSPMD therefore
+emits *no* cross-worker collectives during the local phase (eq. 2, inner
+loop). Synchronization is a (possibly grouped) mean over the worker dim —
+one all-reduce over the worker axes, amortized ``1/H`` (Alg. 1 line 9/10).
+
+Hierarchical local SGD (Alg. 5): ``sync(state, group=block_size)``
+averages within blocks of consecutive workers; with ``worker_axes =
+('pod','data')`` a block = one pod, so inner syncs ride intra-pod ICI and
+outer syncs the inter-pod links — exactly the paper's Figure 17 mapping.
+
+Variants carried in state:
+* local momentum  — per-worker buffers inside the vmap (App. B.4.1)
+* global momentum — applied to the averaged model difference at sync
+* sign / EF-sign  — compress per-worker model differences before the
+  average (Alg. 3 / Alg. 4)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LocalSGDConfig, OptimConfig, RunConfig
+from repro.core import compression as comp
+from repro.core import noise as noise_mod
+from repro.core.schedule import lr_at
+from repro.optim.lars import apply_lars
+from repro.optim.sgd import apply_sgd, init_momentum
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class LocalSGDState:
+    params: Any          # stacked (W, ...)
+    momentum: Any        # stacked (W, ...)
+    anchor: Any          # single-copy tree (last synced model) or None
+    global_u: Any        # single-copy tree or None
+    ef_memory: Any       # stacked (W, ...) or None
+    step: Any            # () int32
+    rng: Any             # PRNGKey
+
+
+def needs_anchor(cfg: LocalSGDConfig) -> bool:
+    return cfg.global_momentum > 0 or cfg.sync_compression != "none"
+
+
+def stack_tree(tree, W: int):
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), tree)
+
+
+def group_mean(x, group: int):
+    """Mean over blocks of ``group`` consecutive workers, broadcast back."""
+    W = x.shape[0]
+    assert W % group == 0, (W, group)
+    if group == 1:
+        return x
+    xg = x.reshape(W // group, group, *x.shape[1:])
+    m = xg.mean(axis=1, keepdims=True).astype(x.dtype)
+    return jnp.broadcast_to(m, xg.shape).reshape(x.shape)
+
+
+def make_packed_mean(mesh, worker_axes: tuple[str, ...]):
+    """1-bit wire mean over workers via an explicit shard_map boundary.
+
+    GSPMD sharding hints are insufficient here: propagation keeps placing
+    the gather on the uncompressed f32 delta (measured 12-23x the ideal
+    wire bytes; EXPERIMENTS §Perf hillclimb 3). shard_map pins the
+    collective: pack signs shard-local, `lax.all_gather` the uint8
+    payload over the worker axes, unpack + average locally. Within-worker
+    ('model') sharding stays GSPMD-managed via partial-auto mode.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axis = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def packed_mean(d, pack_axis: int = -1):
+        W = d.shape[0]
+
+        def f(local):                     # (1, *shape_local)
+            packed, scale = comp.pack_signs(local, axis=pack_axis)
+            allp = jax.lax.all_gather(packed, axis)       # (W, 1, ...)
+            alls = jax.lax.all_gather(scale, axis)
+            allp = allp.reshape((W,) + packed.shape[1:])
+            alls = alls.reshape(W)
+            return comp.unpack_signs(allp, alls, local.shape[1:],
+                                     axis=pack_axis).mean(axis=0)
+
+        spec = P(axis)
+        g = jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=P(),
+                          check_vma=False, axis_names=set(worker_axes))
+        return g(d)
+
+    return packed_mean
+
+
+def pack_axes_tree(specs, layout):
+    """Per-leaf pack axis: the largest UNSHARDED dim of the stacked leaf
+    (offset +1 for the worker dim). Falls back to the last dim."""
+    from repro.models import base as mbase
+
+    def pick(ps: "mbase.ParamSpec"):
+        best, best_size = -1, -1
+        for i, (a, n) in enumerate(zip(ps.axes, ps.shape)):
+            r = None if a is None else layout.rule(a)
+            sharded = r is not None and layout.axis_size(r) > 1 and \
+                n % max(layout.axis_size(r), 1) == 0
+            if not sharded and n >= 8 and n > best_size:
+                best, best_size = i + 1, n
+        return best if best >= 1 else -1
+
+    return jax.tree.map(pick, specs, is_leaf=mbase.is_spec)
+
+
+def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
+                   wd_mask=None, use_kernel: bool = False,
+                   packed_mean_fn: Callable | None = None):
+    """Build (init, local_step, sync) for a single-worker ``loss_fn``.
+
+    loss_fn(params, batch) -> (loss, metrics dict). The returned
+    ``local_step`` takes per-worker-stacked params/batch.
+    """
+    ls = run.local_sgd
+    opt = run.optim
+    W = num_workers
+    global_batch = run.shape.global_batch
+
+    def init(rng, params_single) -> LocalSGDState:
+        params = stack_tree(params_single, W)
+        return LocalSGDState(
+            params=params,
+            momentum=init_momentum(params),
+            anchor=jax.tree.map(jnp.copy, params_single) if needs_anchor(ls) else None,
+            global_u=(jax.tree.map(jnp.zeros_like, params_single)
+                      if ls.global_momentum > 0 else None),
+            ef_memory=(init_momentum(params) if ls.sync_compression == "ef_sign"
+                       else None),
+            step=jnp.int32(0),
+            rng=rng,
+        )
+
+    def _worker_step(p, u, batch, rng, lr, step):
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        if opt.noise_eta > 0:
+            g = noise_mod.isotropic_noise(g, rng, step=step, eta=opt.noise_eta,
+                                          gamma=opt.noise_gamma)
+        if opt.optimizer == "lars":
+            p, u = apply_lars(p, g, u, lr=lr, trust=opt.lars_trust,
+                              momentum_coef=ls.local_momentum,
+                              weight_decay=opt.weight_decay,
+                              nesterov=ls.nesterov, wd_mask=wd_mask)
+        else:
+            p, u = apply_sgd(p, g, u, lr=lr, momentum_coef=ls.local_momentum,
+                             weight_decay=opt.weight_decay, nesterov=ls.nesterov,
+                             wd_mask=wd_mask, grad_clip=opt.grad_clip,
+                             use_kernel=use_kernel)
+        return p, u, loss, metrics
+
+    def local_step(state: LocalSGDState, batch):
+        """batch: pytree with leading (W, B_loc, ...) dims."""
+        lr = lr_at(opt, state.step, global_batch=global_batch)
+        rngs = jax.random.split(jax.random.fold_in(state.rng, state.step), W)
+        p, u, loss, metrics = jax.vmap(
+            lambda pw, uw, bw, rw: _worker_step(pw, uw, bw, rw, lr, state.step)
+        )(state.params, state.momentum, batch, rngs)
+        metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        metrics = {**metrics, "loss": loss.mean(), "lr": lr}
+        new = LocalSGDState(params=p, momentum=u, anchor=state.anchor,
+                            global_u=state.global_u, ef_memory=state.ef_memory,
+                            step=state.step + 1, rng=state.rng)
+        return new, metrics
+
+    def sync(state: LocalSGDState, *, group: int | None = None) -> LocalSGDState:
+        """Average within worker groups; group=None => all W workers."""
+        g = group or W
+        if not needs_anchor(ls):
+            p = jax.tree.map(lambda x: group_mean(x, g), state.params)
+            return LocalSGDState(params=p, momentum=state.momentum,
+                                 anchor=None, global_u=None,
+                                 ef_memory=None, step=state.step, rng=state.rng)
+
+        assert g == W, "compression / global momentum require flat local SGD"
+        delta = jax.tree.map(lambda a, p: a[None] - p, state.anchor, state.params)
+        ef = state.ef_memory
+        if ls.sync_compression == "sign":
+            delta = comp.sign_compress(delta, use_kernel=use_kernel)
+        elif ls.sync_compression == "ef_sign":
+            delta, ef = comp.ef_compress(delta, ef)
+        if ls.sync_compression != "none" and ls.wire_pack:
+            # 1-bit wire format (see make_packed_mean). Falls back to the
+            # local (meshless) equivalent in CPU tests.
+            pm, axes_tree = packed_mean_fn or (None, None)
+            if pm is None:
+                def pm(d, axis=-1):
+                    packed, scale = comp.pack_signs(d, axis=axis)
+                    return comp.unpack_signs(packed, scale, d.shape[1:],
+                                             axis=axis).mean(axis=0)
+            if axes_tree is None:
+                dbar = jax.tree.map(lambda d: pm(d, -1), delta)
+            else:
+                dbar = jax.tree.map(pm, delta, axes_tree)
+        else:
+            dbar = jax.tree.map(lambda d: d.mean(axis=0), delta)
+
+        gu = state.global_u
+        if ls.global_momentum > 0:
+            gu = jax.tree.map(lambda ug, d: ls.global_momentum * ug + d, gu, dbar)
+            step_tree = gu
+        else:
+            step_tree = dbar
+        anchor = jax.tree.map(lambda a, d: (a.astype(jnp.float32)
+                                            - d.astype(jnp.float32)).astype(a.dtype),
+                              state.anchor, step_tree)
+        p = stack_tree(anchor, W)
+        return LocalSGDState(params=p, momentum=state.momentum, anchor=anchor,
+                             global_u=gu, ef_memory=ef, step=state.step,
+                             rng=state.rng)
+
+    return init, local_step, sync

@@ -1,0 +1,74 @@
+"""Schedules: the paper's H(t) (local-step) schedules and LR schedules.
+
+H(t) schedules (Alg. 2 + App. B.4.2):
+  * constant      H(t) = H                      (local SGD, Alg. 1)
+  * post_local    H(t) = 1 for t <= t', else H  (post-local SGD, Alg. 2)
+  * warmup        H grows 1 -> H over a warmup period: linear / exp / constant
+
+LR schedule (App. A.3/A.4, Goyal et al.): linear scaling by global batch,
+gradual warmup over W steps, step decay (/10) at boundaries.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import LocalSGDConfig, OptimConfig
+
+
+def local_steps_at(cfg: LocalSGDConfig, step: int) -> int:
+    """Number of local steps H for the round starting at ``step`` (host-side)."""
+    H = cfg.local_steps
+    if cfg.post_local_switch >= 0:
+        return 1 if step < cfg.post_local_switch else H
+    if cfg.warmup_kind != "none" and cfg.warmup_steps > 0:
+        frac = min(step / cfg.warmup_steps, 1.0)
+        if cfg.warmup_kind == "linear":
+            return max(1, min(H, int(round(1 + frac * (H - 1)))))
+        if cfg.warmup_kind == "exp":
+            return max(1, min(H, int(2 ** math.floor(frac * math.log2(max(H, 1))))))
+        if cfg.warmup_kind == "constant":
+            return 1 if frac < 1.0 else H
+    return H
+
+
+def sync_boundaries(cfg: LocalSGDConfig, total_steps: int):
+    """Yield (step, level) sync events; level 1 = block (inner), 2 = global.
+
+    With block_steps H^b > 1 (hierarchical, Alg. 5), every H-th step is an
+    inner sync and every (H * H^b)-th an outer sync.
+    """
+    since_sync = 0
+    rounds = 0
+    for t in range(total_steps):
+        H = local_steps_at(cfg, t)
+        since_sync += 1
+        if since_sync >= H:
+            since_sync = 0
+            rounds += 1
+            if cfg.block_steps > 1:
+                yield t, (2 if rounds % cfg.block_steps == 0 else 1)
+            else:
+                yield t, 2
+
+
+def lr_at(cfg: OptimConfig, step, *, global_batch: int):
+    """Linear-scaled LR with gradual warmup and step decay.
+
+    The paper scales the single-worker base LR by (global batch / base
+    batch) and warms up from base_lr to the scaled LR. ``step`` may be a
+    traced jnp scalar (the whole schedule is jnp.where-based).
+    """
+    import jax.numpy as jnp
+
+    scale = global_batch / cfg.base_batch
+    peak = cfg.base_lr * scale
+    step = jnp.asarray(step, jnp.float32)
+    if cfg.lr_warmup_steps:
+        warm = cfg.base_lr + (peak - cfg.base_lr) * (step / cfg.lr_warmup_steps)
+        lr = jnp.where(step < cfg.lr_warmup_steps, warm, peak)
+    else:
+        lr = jnp.asarray(peak, jnp.float32)
+    for b in cfg.lr_decay_steps:
+        lr = jnp.where(step >= b, lr * cfg.lr_decay_factor, lr)
+    return lr

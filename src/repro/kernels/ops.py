@@ -1,0 +1,80 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary tensor shapes by flattening to the (rows, 128) lane
+layout (zero-padding the tail), dispatching the kernel, and restoring the
+original shape. ``interpret`` defaults to True off-TPU so the kernels are
+validated on CPU; on TPU the compiled path is used.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_sgd as _fs
+from repro.kernels import sign_compress as _sc
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _to_2d(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % LANE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANE), pad
+
+
+def _from_2d(y, pad, shape):
+    flat = y.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def fused_sgd(p, g, u, *, lr, momentum: float, weight_decay: float = 0.0,
+              nesterov: bool = True, interpret: bool | None = None):
+    """Fused SGD update; returns (p_new, u_new). lr may be traced."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    p2, pad = _to_2d(p)
+    g2, _ = _to_2d(g)
+    u2, _ = _to_2d(u)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    po, uo = _fs.fused_sgd_2d(p2, g2, u2, lr2, momentum=momentum,
+                              weight_decay=weight_decay, nesterov=nesterov,
+                              interpret=interpret)
+    return _from_2d(po, pad, p.shape), _from_2d(uo, pad, u.shape)
+
+
+def sign_compress(x, *, interpret: bool | None = None):
+    """sign(x) * mean|x| (the Alg. 3/4 compressor)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x2, pad = _to_2d(x)
+    total = _sc.abs_sum_2d(x2, interpret=interpret)
+    scale = (total / x.size).reshape(1, 1)
+    y = _sc.scale_sign_2d(x2, scale, interpret=interpret)
+    return _from_2d(y, pad, x.shape).astype(jnp.float32)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = 0.0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """GQA flash attention. q: (B, S, H, D); k, v: (B, S, KH, D)."""
+    from repro.kernels.flash_attention import flash_attention_bhsd
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

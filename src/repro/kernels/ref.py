@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_sgd_ref(p, g, u, lr, *, momentum: float, weight_decay: float,
+                  nesterov: bool):
+    pf, gf, uf = (a.astype(jnp.float32) for a in (p, g, u))
+    if weight_decay:
+        gf = gf + weight_decay * pf
+    u_new = momentum * uf + gf
+    step = momentum * u_new + gf if nesterov else u_new
+    return (pf - lr * step).astype(p.dtype), u_new.astype(u.dtype)
+
+
+def sign_compress_ref(x):
+    xf = x.astype(jnp.float32)
+    return jnp.sign(xf) * jnp.mean(jnp.abs(xf))
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=0.0):
+    from repro.models.layers import reference_attention
+    return reference_attention(q, k, v, causal=causal, window=window, scale=scale)

@@ -1,0 +1,61 @@
+"""Pallas TPU kernels for the signSGD sync compressor (paper Alg. 3/4).
+
+Compression of the model difference Delta is sign(Delta) * mean|Delta|.
+Two kernels:
+  1. ``abs_sum``    — per-tile |x| partial sums (reduction tree finishes
+                      in jnp; one HBM read of x).
+  2. ``scale_sign`` — y = sign(x) * scale, scale in SMEM (second HBM pass).
+
+Same (rows, 128) lane layout as fused_sgd.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256
+
+
+def _abs_sum_kernel(x_ref, o_ref):
+    o_ref[0, 0] = jnp.sum(jnp.abs(x_ref[...].astype(jnp.float32)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def abs_sum_2d(x, *, interpret: bool = True):
+    rows = x.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    n = pl.cdiv(rows, br)
+    out = pl.pallas_call(
+        _abs_sum_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((br, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out.sum()
+
+
+def _scale_sign_kernel(s_ref, x_ref, o_ref):
+    s = s_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (jnp.sign(x) * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scale_sign_2d(x, scale, *, interpret: bool = True):
+    rows = x.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _scale_sign_kernel,
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(scale, x)

@@ -1,0 +1,103 @@
+"""Input specs per (arch x input shape): concrete batches or
+ShapeDtypeStruct stand-ins (dry-run: weak-type-correct, shardable, no
+device allocation) + their PartitionSpecs.
+
+Modality stubs (the one sanctioned carve-out):
+* audio (whisper): ``frames`` = precomputed mel/conv frame embeddings
+  (B, seq, d_model); decoder tokens are capped at 448 positions.
+* vlm (internvl2): ``prefix_embed`` = ViT patch embeddings
+  (B, num_prefix_tokens, d_model); text fills the rest of seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding.layout import MeshLayout
+
+WHISPER_MAX_DECODER = 448
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_shapes(cfg: ModelConfig, shape: InputShape, num_workers: int):
+    """Shapes for one (W, B_loc, ...) training batch."""
+    W = max(num_workers, 1)
+    assert shape.global_batch % W == 0, (shape.global_batch, W)
+    B = shape.global_batch // W
+    S = shape.seq_len
+    out = {}
+    if cfg.family == "audio":
+        Sd = min(WHISPER_MAX_DECODER, S)
+        out["frames"] = ((W, B, S, cfg.d_model), "act")
+        out["tokens"] = ((W, B, Sd), "tok")
+        out["labels"] = ((W, B, Sd), "tok")
+    elif cfg.family == "vlm":
+        Np = cfg.num_prefix_tokens
+        out["prefix_embed"] = ((W, B, Np, cfg.d_model), "act")
+        out["tokens"] = ((W, B, S - Np), "tok")
+        out["labels"] = ((W, B, S - Np), "tok")
+    else:
+        out["tokens"] = ((W, B, S), "tok")
+        out["labels"] = ((W, B, S), "tok")
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, num_workers: int,
+                      *, act_dtype=jnp.bfloat16):
+    shapes = train_batch_shapes(cfg, shape, num_workers)
+    return {k: _sds(s, jnp.int32 if kind == "tok" else act_dtype)
+            for k, (s, kind) in shapes.items()}
+
+
+def train_batch_pspecs(cfg: ModelConfig, shape: InputShape, lay: MeshLayout):
+    shapes = train_batch_shapes(cfg, shape, 1)
+    out = {}
+    for k, (s, kind) in shapes.items():
+        extra = len(s) - 3  # dims beyond (W, B, S)
+        axes = ["batch", "seq"] + ["embed"] * extra
+        out[k] = lay.spec(*axes, stacked=True, dims=tuple(s[1:]))
+    return out
+
+
+def make_train_batch(cfg: ModelConfig, shape: InputShape, num_workers: int,
+                     *, seed=0, act_dtype=jnp.float32):
+    """Concrete random batch (CPU tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, kind) in train_batch_shapes(cfg, shape, num_workers).items():
+        if kind == "tok":
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s), act_dtype)
+    return out
+
+
+def serve_token_specs(cfg: ModelConfig, shape: InputShape, *, prefill: bool):
+    B, S = shape.global_batch, shape.seq_len
+    if prefill:
+        if cfg.family == "audio":
+            Sd = min(WHISPER_MAX_DECODER, S)
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, Sd), jnp.int32)}
+        if cfg.family == "vlm":
+            Np = cfg.num_prefix_tokens
+            return {"prefix_embed": _sds((B, Np, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, S - Np), jnp.int32)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def serve_token_pspecs(cfg: ModelConfig, shape: InputShape, lay: MeshLayout,
+                       *, prefill: bool):
+    specs = serve_token_specs(cfg, shape, prefill=prefill)
+    out = {}
+    for k, v in specs.items():
+        axes = ["batch", "seq"] + ["embed"] * (len(v.shape) - 2)
+        out[k] = lay.spec(*axes, dims=tuple(v.shape))
+    return out

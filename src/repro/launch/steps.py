@@ -1,0 +1,159 @@
+"""Step builders: wire model zoo + local SGD + layouts into jitted steps.
+
+``build_train(...)`` returns the local-SGD machinery for one arch on one
+mesh/layout: init / local_step / sync(+hierarchical) with full
+in/out_shardings so the same object serves CPU tests (mesh=None), the
+real trainer, and the multi-pod dry-run.
+
+``build_serve(...)`` returns prefill / decode_step for the inference
+shapes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.core.local_sgd import LocalSGDState, make_local_sgd
+from repro.models import base as mbase
+from repro.models import lm
+from repro.launch import inputs as inp
+from repro.sharding.layout import MeshLayout, long_context_serve_layout, serve_layout, train_layout
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclass
+class TrainBundle:
+    cfg: ModelConfig
+    run: RunConfig
+    layout: MeshLayout
+    num_workers: int
+    specs: Any
+    init: Callable
+    local_step: Callable
+    sync: Callable
+    state_shardings: Any = None
+    batch_shardings: Any = None
+
+
+def state_partition_specs(specs, layout: MeshLayout, run: RunConfig):
+    """PartitionSpecs for a LocalSGDState built from param specs."""
+    from repro.core.local_sgd import needs_anchor
+    stacked = mbase.partition_specs(specs, layout, stacked=True)
+    single = mbase.partition_specs(specs, layout, stacked=False)
+    ls = run.local_sgd
+    return LocalSGDState(
+        params=stacked,
+        momentum=stacked,
+        anchor=single if needs_anchor(ls) else None,
+        global_u=single if ls.global_momentum > 0 else None,
+        ef_memory=stacked if ls.sync_compression == "ef_sign" else None,
+        step=P(),
+        rng=P(),
+    )
+
+
+def build_train(run: RunConfig, *, mesh: Mesh | None = None,
+                layout: MeshLayout | None = None, num_workers: int | None = None,
+                use_kernel: bool = False, jit: bool = True) -> TrainBundle:
+    cfg = run.model
+    if layout is None and mesh is not None:
+        worker_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        layout = train_layout(tuple(mesh.axis_names), worker_axes=worker_axes)
+    if layout is not None and mesh is not None:
+        layout = layout.with_mesh(mesh)
+    if num_workers is None:
+        num_workers = layout.num_workers(mesh) if (mesh is not None and layout) else 1
+
+    specs = lm.param_specs(cfg)
+    wd_mask = mbase.norm_param_mask(specs)
+    lay_for_model = layout if mesh is not None else None
+
+    def loss(params, batch):
+        return lm.loss_fn(cfg, params, batch, lay=lay_for_model, scan=True,
+                          remat=run.remat)
+
+    init, local_step, sync = make_local_sgd(run, loss, num_workers=num_workers,
+                                            wd_mask=wd_mask, use_kernel=use_kernel)
+
+    bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
+                         specs=specs, init=init, local_step=local_step, sync=sync)
+
+    if mesh is not None and jit:
+        sspec = state_partition_specs(specs, layout, run)
+        bspec = inp.train_batch_pspecs(cfg, run.shape, layout)
+        ssh = _named(mesh, sspec)
+        bsh = _named(mesh, bspec)
+        bundle.state_shardings = ssh
+        bundle.batch_shardings = bsh
+        bundle.local_step = jax.jit(local_step, in_shardings=(ssh, bsh),
+                                    out_shardings=(ssh, None))
+        bundle.sync = jax.jit(sync, static_argnames=("group",),
+                              in_shardings=(ssh,), out_shardings=ssh)
+    return bundle
+
+
+@dataclass
+class ServeBundle:
+    cfg: ModelConfig
+    layout: MeshLayout
+    specs: Any
+    prefill: Callable
+    decode_step: Callable
+    param_shardings: Any = None
+    cache_shardings: Any = None
+
+
+def build_serve(cfg: ModelConfig, shape: InputShape, *, mesh: Mesh | None = None,
+                layout: MeshLayout | None = None, jit: bool = True,
+                scan: bool = True) -> ServeBundle:
+    if layout is None and mesh is not None:
+        axes = tuple(mesh.axis_names)
+        layout = (long_context_serve_layout(axes) if shape.seq_len >= 262_144
+                  else serve_layout(axes))
+    if layout is not None and mesh is not None:
+        layout = layout.with_mesh(mesh)
+    lay_for_model = layout if mesh is not None else None
+    specs = lm.param_specs(cfg)
+
+    def prefill_fn(params, batch):
+        return lm.prefill(cfg, params, batch["tokens"], lay=lay_for_model,
+                          prefix_embed=batch.get("prefix_embed"),
+                          enc_frames=batch.get("frames"), scan=scan)
+
+    def decode_fn(params, batch, cache, cache_len):
+        return lm.decode_step(cfg, params, batch["tokens"], cache, cache_len,
+                              lay=lay_for_model, scan=scan)
+
+    bundle = ServeBundle(cfg=cfg, layout=layout, specs=specs,
+                         prefill=prefill_fn, decode_step=decode_fn)
+
+    if mesh is not None and jit:
+        psh = _named(mesh, mbase.partition_specs(specs, layout, stacked=False))
+        from repro.launch.inputs import WHISPER_MAX_DECODER
+        self_len = (min(WHISPER_MAX_DECODER, shape.seq_len)
+                    if cfg.cross_attention else shape.seq_len)
+        csh = _named(mesh, lm.cache_partition_specs(
+            cfg, layout, shape.global_batch, self_len,
+            enc_len=shape.seq_len if cfg.cross_attention else None))
+        tsh = _named(mesh, inp.serve_token_pspecs(cfg, shape, layout, prefill=False))
+        logits_sh = NamedSharding(mesh, layout.spec(
+            "batch", None, "vocab",
+            dims=(shape.global_batch, 1, cfg.vocab_size)))
+        bundle.param_shardings = psh
+        bundle.cache_shardings = csh
+        bundle.prefill = jax.jit(prefill_fn, in_shardings=(psh, None),
+                                 out_shardings=(logits_sh, csh))
+        bundle.decode_step = jax.jit(
+            decode_fn, in_shardings=(psh, tsh, csh, None),
+            out_shardings=(logits_sh, csh))
+    return bundle

@@ -1,0 +1,146 @@
+"""Training driver: the paper's schedules on top of the step builders.
+
+``fit`` runs mini-batch SGD / local SGD / post-local SGD / hierarchical
+local SGD purely by LocalSGDConfig — the communication pattern is decided
+host-side exactly like the paper's Alg. 1/2/5 outer loops.
+
+CLI (end-to-end example entry point):
+    PYTHONPATH=src python -m repro.launch.train --arch paper-lm --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
+from repro.core.schedule import local_steps_at
+from repro.data.partition import ShardedBatches
+from repro.data.synthetic import lm_examples, markov_lm
+from repro.launch import steps as steps_mod
+from repro.models import base as mbase
+from repro.models import lm
+
+
+def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
+        eval_every=0, eval_fn=None, log=print, mesh=None, layout=None):
+    """Run the full schedule; returns (state, history)."""
+    bundle = bundle or steps_mod.build_train(run, mesh=mesh, layout=layout)
+    num_steps = num_steps or run.steps
+    ls = run.local_sgd
+
+    rng = jax.random.PRNGKey(seed)
+    params0 = mbase.materialize(bundle.specs, rng,
+                                dtype=jnp.dtype(run.model.param_dtype))
+    state = bundle.init(jax.random.fold_in(rng, 1), params0)
+
+    history = []
+    since_sync = 0
+    rounds = 0
+    comm_rounds = {"block": 0, "global": 0}
+    t_start = time.time()
+    for t in range(num_steps):
+        batch = next(data_iter)
+        state, metrics = bundle.local_step(state, batch)
+        since_sync += 1
+        H = local_steps_at(ls, t)
+        synced = ""
+        if since_sync >= H:
+            since_sync = 0
+            rounds += 1
+            if ls.block_steps > 1 and rounds % ls.block_steps != 0:
+                state = bundle.sync(state, group=bundle.num_workers // max(
+                    1, _num_blocks(bundle)))
+                comm_rounds["block"] += 1
+                synced = "block"
+            else:
+                state = bundle.sync(state)
+                comm_rounds["global"] += 1
+                synced = "global"
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec.update(step=t, synced=synced)
+        history.append(rec)
+        if eval_every and eval_fn and (t + 1) % eval_every == 0:
+            ev = eval_fn(state)
+            rec.update({f"eval_{k}": float(v) for k, v in ev.items()})
+            log(f"step {t+1}: loss={rec['loss']:.4f} "
+                + " ".join(f"eval_{k}={float(v):.4f}" for k, v in ev.items()))
+    wall = time.time() - t_start
+    summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps}
+    return state, history, summary
+
+
+def _num_blocks(bundle) -> int:
+    """Hierarchical blocks: pods if the layout spans a pod axis, else 2."""
+    if bundle.layout is not None and "pod" in bundle.layout.worker_axes:
+        return 2
+    return 2 if bundle.num_workers >= 2 else 1
+
+
+def eval_lm(bundle, data: dict, batch: int = 8):
+    """Mean held-out xent of the (averaged) model."""
+    cfg = bundle.cfg
+
+    @jax.jit
+    def one(params, b):
+        loss, m = lm.loss_fn(cfg, params, b, remat="none")
+        return m["xent"]
+
+    def fn(state):
+        params = jax.tree.map(lambda p: p.mean(axis=0), state.params)
+        losses = []
+        n = len(next(iter(data.values())))
+        for i in range(0, min(n, 4 * batch), batch):
+            b = {k: jnp.asarray(v[i:i + batch]) for k, v in data.items()}
+            losses.append(float(one(params, b)))
+        return {"xent": float(np.mean(losses))}
+    return fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm")
+    ap.add_argument("--smoke", action="store_true", help="use reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--local-steps", type=int, default=4, help="H")
+    ap.add_argument("--block-steps", type=int, default=1, help="H^b")
+    ap.add_argument("--post-local-switch", type=int, default=-1)
+    ap.add_argument("--lr", type=float, default=0.2)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke or args.arch != "paper-lm" \
+        else configs.get("paper-lm")
+    cfg = cfg.replace(max_seq_len=args.seq)
+    shape = InputShape("cli", args.seq, args.workers * args.local_batch, "train")
+    run = RunConfig(
+        model=cfg, shape=shape,
+        local_sgd=LocalSGDConfig(local_steps=args.local_steps,
+                                 block_steps=args.block_steps,
+                                 post_local_switch=args.post_local_switch),
+        optim=OptimConfig(base_lr=args.lr, base_batch=shape.global_batch,
+                          lr_warmup_steps=10,
+                          lr_decay_steps=(args.steps // 2, 3 * args.steps // 4)),
+        steps=args.steps)
+
+    toks = markov_lm(vocab=cfg.vocab_size, num_seqs=1024, seq_len=args.seq)
+    data = lm_examples(toks)
+    held = lm_examples(markov_lm(vocab=cfg.vocab_size, num_seqs=64,
+                                 seq_len=args.seq, sample_seed=123))
+    it = ShardedBatches(data, args.workers, args.local_batch)
+    bundle = steps_mod.build_train(run, num_workers=args.workers)
+    state, hist, summary = fit(run, it, bundle=bundle, num_steps=args.steps,
+                               eval_every=max(args.steps // 5, 1),
+                               eval_fn=eval_lm(bundle, held))
+    print(f"done: final loss={hist[-1]['loss']:.4f} wall={summary['wall_s']:.1f}s "
+          f"comm={summary['comm_rounds']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Abstract parameter-spec system.
+
+Models describe their parameters as a pytree of :class:`ParamSpec` leaves
+(shape + logical axes + initializer). From one spec tree we derive:
+
+* ``materialize``      concrete arrays (CPU tests, examples)
+* ``abstract``         ShapeDtypeStructs (dry-run: no allocation)
+* ``partition_specs``  PartitionSpecs via a MeshLayout (stacked or not)
+* ``stack_specs``      the same tree with a leading worker dim W
+
+so the dry-run never touches device memory and sharding stays declarative.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.layout import MeshLayout
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis per dim (None = replicated)
+    init: str = "normal"               # normal | zeros | ones | embed
+    scale: float = 1.0                 # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    # fan-in scaled normal (He-style, matching the paper's init policy)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    if spec.init == "embed":
+        std = 0.02 * spec.scale
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(specs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(specs, dtype=jnp.bfloat16, *, stacked: int = 0):
+    def mk(s: ParamSpec):
+        shape = ((stacked,) + s.shape) if stacked else s.shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def partition_specs(specs, layout: MeshLayout, *, stacked: bool = False):
+    def mk(s: ParamSpec):
+        return layout.spec(*s.axes, stacked=stacked, dims=s.shape)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def stack(params, num_workers: int):
+    """Replicate a single param tree into a stacked (W, ...) tree."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (num_workers,) + p.shape).copy(), params)
+
+
+def unstack_mean(params):
+    return jax.tree.map(lambda p: p.mean(axis=0), params)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def norm_param_mask(specs):
+    """True for 1-D (norm/bias) params — excluded from weight decay & LARS."""
+    return jax.tree.map(lambda s: len(s.shape) <= 1, specs, is_leaf=is_spec)

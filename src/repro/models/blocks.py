@@ -1,0 +1,358 @@
+"""Transformer blocks: GQA attention, MLA, dense FFN, MoE FFN.
+
+Each mixer/ffn exposes ``*_specs(cfg)`` (ParamSpec tree) and an apply
+function. Apply functions are single-worker; ``ctx`` carries layout,
+positions, cache and mode (train | prefill | decode).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+from repro.models.layers import (apply_rope, chunked_attention, constrain,
+                                 decode_attention, geglu, rms_norm, swiglu)
+from repro.sharding.layout import MeshLayout
+
+
+@dataclass
+class Ctx:
+    """Per-call context threaded through blocks."""
+
+    lay: MeshLayout | None = None
+    mode: str = "train"                  # train | prefill | decode
+    positions: Any = None                # (B, S) absolute positions
+    cache: Any = None                    # this layer's cache dict (or None)
+    cache_len: Any = None                # () int — valid entries incl. current
+    emb0: Any = None                     # initial embeddings (zamba2 skip)
+    enc_out: Any = None                  # encoder output (whisper cross-attn)
+    aux_losses: list = field(default_factory=list)
+    block_q: int = 512
+    block_k: int = 512
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, *, num_heads=None, num_kv_heads=None,
+               cross: bool = False):
+    H = num_heads or cfg.num_heads
+    KH = num_kv_heads or cfg.num_kv_heads or H
+    D = cfg.resolved_head_dim
+    E = cfg.d_model
+    s = {
+        "wq": ParamSpec((E, H * D), ("embed", "heads")),
+        "wk": ParamSpec((E, KH * D), ("embed", "kv_heads")),
+        "wv": ParamSpec((E, KH * D), ("embed", "kv_heads")),
+        "wo": ParamSpec((H * D, E), ("heads", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        s["q_norm"] = ParamSpec((D,), (None,), init="ones")
+        s["k_norm"] = ParamSpec((D,), (None,), init="ones")
+    return s
+
+
+def attn_apply(cfg: ModelConfig, p, x, ctx: Ctx, *, window: int = 0,
+               rope_theta: float | None = None, causal: bool = True,
+               use_rope: bool = True):
+    """Self-attention. x: (B, S, E). Returns (y, new_cache)."""
+    lay = ctx.lay
+    B, S, E = x.shape
+    D = cfg.resolved_head_dim
+    H = p["wq"].shape[1] // D
+    KH = p["wk"].shape[1] // D
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (x @ p["wk"]).reshape(B, S, KH, D)
+    v = (x @ p["wv"]).reshape(B, S, KH, D)
+    q = constrain(q, lay, "batch", "seq", "heads", None)
+    k = constrain(k, lay, "batch", "seq", "kv_heads", None)
+
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, ctx.positions, theta=theta)
+        k = apply_rope(k, ctx.positions, theta=theta)
+
+    new_cache = None
+    if ctx.mode == "decode":
+        cache = ctx.cache
+        write = ctx.cache_len - 1
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
+        kc = constrain(kc, lay, "batch", "kv_seq", "kv_heads", None)
+        vc = constrain(vc, lay, "batch", "kv_seq", "kv_heads", None)
+        out = decode_attention(q, kc, vc, cache_len=ctx.cache_len,
+                               window=window, softcap=cfg.logit_softcap,
+                               scale=cfg.attn_scale, lay=lay)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                softcap=cfg.logit_softcap, scale=cfg.attn_scale,
+                                block_q=ctx.block_q, block_k=ctx.block_k,
+                                differentiable=(ctx.mode == "train"), lay=lay)
+        if ctx.mode == "prefill":
+            new_cache = {"k": constrain(k, lay, "batch", "kv_seq", "kv_heads", None),
+                         "v": constrain(v, lay, "batch", "kv_seq", "kv_heads", None)}
+    y = out.reshape(B, S, H * D) @ p["wo"]
+    return constrain(y, lay, "batch", "seq", "embed"), new_cache
+
+
+def attn_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                    *, num_kv_heads=None):
+    KH = num_kv_heads or cfg.num_kv_heads or cfg.num_heads
+    D = cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, max_len, KH, D), dtype),
+            "v": jnp.zeros((batch, max_len, KH, D), dtype)}
+
+
+def attn_cache_axes():
+    return {"k": ("batch", "kv_seq", "kv_heads", None),
+            "v": ("batch", "kv_seq", "kv_heads", None)}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder). KV computed once from encoder output.
+# ---------------------------------------------------------------------------
+
+def cross_attn_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    lay = ctx.lay
+    B, S, E = x.shape
+    D = cfg.resolved_head_dim
+    H = p["wq"].shape[1] // D
+    KH = p["wk"].shape[1] // D
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    if ctx.mode == "decode" and ctx.cache is not None and "xk" in ctx.cache:
+        k, v = ctx.cache["xk"], ctx.cache["xv"]
+        new_cache = ctx.cache
+    else:
+        enc = ctx.enc_out
+        k = (enc @ p["wk"]).reshape(B, enc.shape[1], KH, D)
+        v = (enc @ p["wv"]).reshape(B, enc.shape[1], KH, D)
+        new_cache = {"xk": k, "xv": v} if ctx.mode == "prefill" else None
+    out = chunked_attention(q, k, v, causal=False,
+                            block_q=ctx.block_q, block_k=ctx.block_k,
+                            differentiable=(ctx.mode == "train"), lay=lay)
+    y = out.reshape(B, S, H * D) @ p["wo"]
+    return constrain(y, lay, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention (arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ModelConfig):
+    m = cfg.mla
+    H, E = cfg.num_heads, cfg.d_model
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": ParamSpec((E, H * dq), ("embed", "heads")),
+        "w_dkv": ParamSpec((E, m.kv_lora_rank + m.qk_rope_dim), ("embed", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": ParamSpec((m.kv_lora_rank, H * m.qk_nope_dim), (None, "heads")),
+        "w_uv": ParamSpec((m.kv_lora_rank, H * m.v_dim), (None, "heads")),
+        "wo": ParamSpec((H * m.v_dim, E), ("heads", "embed")),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    lay = ctx.lay
+    m = cfg.mla
+    B, S, E = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, L = m.qk_nope_dim, m.qk_rope_dim, m.v_dim, m.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q = constrain(q, lay, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, ctx.positions, theta=cfg.rope_theta)
+
+    ckv = x @ p["w_dkv"]                                   # (B,S,L+dr)
+    c, k_rope = ckv[..., :L], ckv[..., L:]
+    c = rms_norm(c, p["kv_norm"], eps=cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], ctx.positions,
+                        theta=cfg.rope_theta)[:, :, 0]     # (B,S,dr)
+
+    if ctx.mode == "decode":
+        cache = ctx.cache
+        write = ctx.cache_len - 1
+        cc = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c.astype(cache["ckv"].dtype), write, axis=1)
+        rc = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), write, axis=1)
+        cc = constrain(cc, lay, "batch", "kv_seq", None)
+        rc = constrain(rc, lay, "batch", "kv_seq", None)
+        # absorbed decode: score in latent space (the MLA memory trick)
+        w_uk = p["w_uk"].reshape(L, H, dn)
+        q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)   # (B,1,H,L)
+        s = (jnp.einsum("bqhl,bkl->bhqk", q_lat, cc, preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhr,bkr->bhqk", q_rope, rc, preferred_element_type=jnp.float32)) * scale
+        Smax = cc.shape[1]
+        valid = jnp.arange(Smax)[None, :] < jnp.asarray(ctx.cache_len).reshape(-1, 1)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        pattn = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhqk,bkl->bqhl", pattn, cc)    # (B,1,H,L)
+        w_uv = p["w_uv"].reshape(L, H, dv)
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, w_uv).astype(x.dtype)
+        new_cache = {"ckv": cc, "k_rope": rc}
+    else:
+        k_nope = (c @ p["w_uk"]).reshape(B, S, H, dn)
+        v = (c @ p["w_uv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        if dv < dn + dr:  # pad v so flash kernel shapes line up, slice after
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        out = chunked_attention(qfull, k, v, causal=True, scale=scale,
+                                block_q=ctx.block_q, block_k=ctx.block_k,
+                                differentiable=(ctx.mode == "train"), lay=lay)
+        out = out[..., :dv]
+        new_cache = ({"ckv": constrain(c, lay, "batch", "kv_seq", None),
+                      "k_rope": constrain(k_rope, lay, "batch", "kv_seq", None)}
+                     if ctx.mode == "prefill" else None)
+
+    y = out.reshape(B, S, H * dv) @ p["wo"]
+    return constrain(y, lay, "batch", "seq", "embed"), new_cache
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype)}
+
+
+def mla_cache_axes():
+    return {"ckv": ("batch", "kv_seq", None), "k_rope": ("batch", "kv_seq", None)}
+
+
+# ---------------------------------------------------------------------------
+# Dense FFNs
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg: ModelConfig, kind: str, *, d_ff=None):
+    E, F = cfg.d_model, d_ff or cfg.d_ff
+    if kind in ("swiglu", "geglu"):
+        return {"wg": ParamSpec((E, F), ("embed", "mlp")),
+                "wu": ParamSpec((E, F), ("embed", "mlp")),
+                "wd": ParamSpec((F, E), ("mlp", "embed"))}
+    if kind == "gelu":
+        return {"w1": ParamSpec((E, F), ("embed", "mlp")),
+                "b1": ParamSpec((F,), ("mlp",), init="zeros"),
+                "w2": ParamSpec((F, E), ("mlp", "embed")),
+                "b2": ParamSpec((E,), (None,), init="zeros")}
+    raise ValueError(kind)
+
+
+def ffn_apply(cfg: ModelConfig, p, x, ctx: Ctx, kind: str):
+    lay = ctx.lay
+    if kind in ("swiglu", "geglu"):
+        act = swiglu if kind == "swiglu" else geglu
+        h = act(x @ p["wg"], x @ p["wu"])
+        h = constrain(h, lay, "batch", "seq", "mlp")
+        y = h @ p["wd"]
+    else:
+        h = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32)).astype(x.dtype)
+        h = constrain(h, lay, "batch", "seq", "mlp")
+        y = h @ p["w2"] + p["b2"]
+    return constrain(y, lay, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — capacity-based gather/scatter dispatch (GSPMD/TPU friendly)
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig):
+    mo = cfg.moe
+    E, X, Fe = cfg.d_model, mo.num_experts, mo.d_expert
+    s = {
+        "router": ParamSpec((E, X), ("embed", "experts"), scale=0.5),
+        "wg": ParamSpec((X, E, Fe), ("experts", "embed", "expert_mlp")),
+        "wu": ParamSpec((X, E, Fe), ("experts", "embed", "expert_mlp")),
+        "wd": ParamSpec((X, Fe, E), ("experts", "expert_mlp", "embed")),
+    }
+    if mo.num_shared:
+        Fs = mo.num_shared * Fe
+        s["shared"] = {"wg": ParamSpec((E, Fs), ("embed", "mlp")),
+                       "wu": ParamSpec((E, Fs), ("embed", "mlp")),
+                       "wd": ParamSpec((Fs, E), ("mlp", "embed"))}
+    return s
+
+
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    mo = cfg.moe
+    c = math.ceil(mo.capacity_factor * mo.top_k * tokens / mo.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def moe_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    """Top-k routed experts with capacity; gather/scatter dispatch.
+
+    Dispatch is index-based (no (T,E,C) one-hot einsum): per routing slot
+    j < top_k, tokens claim positions in their expert's capacity buffer by
+    a cumulative count; overflow tokens are dropped (standard capacity
+    semantics, cf = moe.capacity_factor).
+    """
+    lay = ctx.lay
+    mo = cfg.moe
+    B, S, E = x.shape
+    T = B * S
+    X, K = mo.num_experts, mo.top_k
+    C = moe_capacity(cfg, T)
+
+    xf = x.reshape(T, E)
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, X)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                    # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch-style over all K choices)
+    me = probs.mean(axis=0)                                   # (X,)
+    ce = jnp.zeros((X,), jnp.float32)
+
+    counts = jnp.zeros((X,), jnp.int32)
+    slot_buf = jnp.full((X * C + 1, E), 0.0, x.dtype)
+    slots = []
+    valids = []
+    for j in range(K):
+        oh = jax.nn.one_hot(top_i[:, j], X, dtype=jnp.int32)  # (T, X)
+        ce = ce + oh.sum(axis=0).astype(jnp.float32) / (T * K)
+        pos = jnp.cumsum(oh, axis=0) - oh                      # rank among slot-j
+        pos_t = jnp.take_along_axis(pos, top_i[:, j:j + 1], axis=1)[:, 0]
+        pos_t = pos_t + counts[top_i[:, j]]
+        counts = counts + oh.sum(axis=0)
+        valid = pos_t < C
+        slot = jnp.where(valid, top_i[:, j] * C + pos_t, X * C)
+        slot_buf = slot_buf.at[slot].set(xf, mode="drop")
+        slots.append(slot)
+        valids.append(valid)
+
+    aux = X * jnp.sum(me * ce) * mo.router_aux_weight
+    ctx.aux_losses.append(aux)
+
+    xe = slot_buf[: X * C].reshape(X, C, E)
+    xe = constrain(xe, lay, "experts", None, "embed")
+    h = swiglu(jnp.einsum("xce,xef->xcf", xe, p["wg"]),
+               jnp.einsum("xce,xef->xcf", xe, p["wu"]))
+    h = constrain(h, lay, "experts", None, "expert_mlp")
+    ye = jnp.einsum("xcf,xfe->xce", h, p["wd"]).reshape(X * C, E)
+    ye = jnp.concatenate([ye, jnp.zeros((1, E), ye.dtype)], axis=0)
+
+    out = jnp.zeros((T, E), jnp.float32)
+    for j in range(K):
+        contrib = jnp.take(ye, slots[j], axis=0).astype(jnp.float32)
+        out = out + contrib * (top_p[:, j] * valids[j])[:, None]
+
+    out = out.astype(x.dtype)
+    if mo.num_shared:
+        sp = p["shared"]
+        hs = swiglu(xf @ sp["wg"], xf @ sp["wu"])
+        hs = constrain(hs, lay, None, "mlp")
+        out = out + hs @ sp["wd"]
+    y = out.reshape(B, S, E)
+    return constrain(y, lay, "batch", "seq", "embed")

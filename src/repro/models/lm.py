@@ -1,0 +1,469 @@
+"""Generic decoder LM covering the whole assigned pool.
+
+One config type (:class:`~repro.configs.base.ModelConfig`) + a layer
+schedule of :class:`BlockDef`s assemble dense transformers, MoE, MLA,
+Mamba2 hybrids, xLSTM stacks, encoder-decoder (whisper) and VLM-prefix
+models from the mixers/ffns in ``blocks.py`` / ``mamba2.py`` / ``xlstm.py``.
+
+Layer stacks are grouped by the repeating block pattern and run under
+``lax.scan`` over stacked group params (compile-time control for 80-layer
+archs); the non-multiple remainder runs unscanned. ``scan=False`` unrolls
+everything (used by the roofline probes).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDef, ModelConfig
+from repro.models import blocks as B
+from repro.models import mamba2 as M2
+from repro.models import xlstm as XL
+from repro.models.base import ParamSpec
+from repro.models.layers import constrain, rms_norm, sinusoidal_positions
+from repro.sharding.layout import MeshLayout
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _norm_spec(cfg):
+    return ParamSpec((cfg.d_model,), (None,), init="ones")
+
+
+def _mixer_specs(cfg: ModelConfig, bd: BlockDef):
+    k = bd.mixer
+    if k in ("attn", "attn_sliding"):
+        return B.attn_specs(cfg)
+    if k == "mla":
+        return B.mla_specs(cfg)
+    if k == "mamba2":
+        return M2.mamba2_specs(cfg)
+    if k == "mlstm":
+        return XL.mlstm_specs(cfg)
+    if k == "slstm":
+        return XL.slstm_specs(cfg)
+    if k == "shared_attn":
+        return {}  # weights live in params["shared"]
+    raise ValueError(k)
+
+
+def layer_specs(cfg: ModelConfig, bd: BlockDef, *, cross: bool = False):
+    s: dict = {"ln1": _norm_spec(cfg), "mix": _mixer_specs(cfg, bd)}
+    if cross:
+        s["lnx"] = _norm_spec(cfg)
+        s["xattn"] = B.attn_specs(cfg, cross=True)
+    if bd.ffn != "none":
+        s["ln2"] = _norm_spec(cfg)
+        s["ffn"] = B.moe_specs(cfg) if bd.ffn == "moe" else B.ffn_specs(cfg, bd.ffn)
+    if cfg.post_norm:
+        s["ln1p"] = _norm_spec(cfg)
+        if bd.ffn != "none":
+            s["ln2p"] = _norm_spec(cfg)
+    return s
+
+
+def _stack_specs(tree, n: int):
+    def mk(sp: ParamSpec):
+        return ParamSpec((n,) + sp.shape, ("layers",) + sp.axes, sp.init, sp.scale)
+    return jax.tree.map(mk, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _schedule_groups(cfg: ModelConfig):
+    period = len(cfg.blocks)
+    n_groups = cfg.num_layers // period
+    rem = cfg.num_layers % period
+    return period, n_groups, rem
+
+
+def param_specs(cfg: ModelConfig):
+    E, V = cfg.d_model, cfg.vocab_size
+    specs: dict = {
+        "embed": ParamSpec((V, E), ("vocab", "embed"), init="embed"),
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((E, V), ("embed", "vocab"))
+
+    cross = cfg.cross_attention
+    period, n_groups, rem = _schedule_groups(cfg)
+    group = tuple(layer_specs(cfg, cfg.blocks[i], cross=cross) for i in range(period))
+    specs["layers"] = _stack_specs(group, n_groups) if n_groups else ()
+    specs["rem"] = tuple(layer_specs(cfg, cfg.block_at(n_groups * period + i), cross=cross)
+                         for i in range(rem))
+
+    if any(bd.mixer == "shared_attn" for bd in cfg.blocks):
+        shared_bd = next(bd for bd in cfg.blocks if bd.mixer == "shared_attn")
+        specs["shared"] = {
+            "ln1": _norm_spec(cfg),
+            "attn": B.attn_specs(cfg),
+            "ln2": _norm_spec(cfg),
+            "ffn": B.ffn_specs(cfg, shared_bd.ffn) if shared_bd.ffn != "none" else {},
+        }
+
+    if cfg.num_prefix_tokens or cfg.family in ("vlm", "audio"):
+        specs["frontend"] = ParamSpec((E, E), ("embed", None), scale=1.0)
+
+    if cfg.encoder_layers:
+        enc_block = BlockDef("attn", "gelu")
+        spec_one = {"ln1": _norm_spec(cfg), "mix": B.attn_specs(cfg),
+                    "ln2": _norm_spec(cfg), "ffn": B.ffn_specs(cfg, "gelu")}
+        specs["enc"] = {
+            "layers": _stack_specs((spec_one,), cfg.encoder_layers),
+            "norm": _norm_spec(cfg),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(cfg: ModelConfig, bd: BlockDef, p, shared, x, ctx: B.Ctx):
+    k = bd.mixer
+    if k == "attn":
+        theta = cfg.rope_theta_global or cfg.rope_theta
+        return B.attn_apply(cfg, p["mix"], x, ctx, window=0, rope_theta=theta)
+    if k == "attn_sliding":
+        return B.attn_apply(cfg, p["mix"], x, ctx, window=cfg.sliding_window)
+    if k == "mla":
+        return B.mla_apply(cfg, p["mix"], x, ctx)
+    if k == "mamba2":
+        return M2.mamba2_apply(cfg, p["mix"], x, ctx)
+    if k == "mlstm":
+        return XL.mlstm_apply(cfg, p["mix"], x, ctx)
+    if k == "slstm":
+        return XL.slstm_apply(cfg, p["mix"], x, ctx)
+    if k == "shared_attn":
+        # zamba2-style: shared-weight attention branch fed by hidden + embedding skip
+        xin = x if ctx.emb0 is None else x + ctx.emb0
+        xin = rms_norm(xin, shared["ln1"], eps=cfg.norm_eps)
+        return B.attn_apply(cfg, shared["attn"], xin, ctx)
+    raise ValueError(k)
+
+
+def apply_layer(cfg: ModelConfig, bd: BlockDef, p, shared, x, ctx: B.Ctx):
+    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+    aux0 = len(ctx.aux_losses)
+    shared_mix = bd.mixer == "shared_attn"
+    if shared_mix:
+        y, new_cache = _apply_mixer(cfg, bd, p, shared, x, ctx)
+    else:
+        h = rms_norm(x, p["ln1"], eps=cfg.norm_eps, plus_one=cfg.post_norm)
+        y, new_cache = _apply_mixer(cfg, bd, p, shared, h, ctx)
+    if cfg.post_norm and not shared_mix:
+        y = rms_norm(y, p["ln1p"], eps=cfg.norm_eps, plus_one=True)
+    x = x + y
+
+    if cfg.cross_attention and "xattn" in p:
+        h = rms_norm(x, p["lnx"], eps=cfg.norm_eps)
+        y, xc = B.cross_attn_apply(cfg, p["xattn"], h, ctx)
+        if xc is not None and new_cache is not None:
+            new_cache = {**new_cache, **xc}
+        elif xc is not None:
+            new_cache = xc
+        x = x + y
+
+    if bd.ffn != "none":
+        fp = shared["ffn"] if shared_mix else p["ffn"]
+        fln = shared["ln2"] if shared_mix else p["ln2"]
+        h = rms_norm(x, fln, eps=cfg.norm_eps, plus_one=cfg.post_norm)
+        if bd.ffn == "moe":
+            y = B.moe_apply(cfg, fp, h, ctx)
+        else:
+            y = B.ffn_apply(cfg, fp, h, ctx, bd.ffn)
+        if cfg.post_norm and not shared_mix:
+            y = rms_norm(y, p["ln2p"], eps=cfg.norm_eps, plus_one=True)
+        x = x + y
+
+    aux = sum(ctx.aux_losses[aux0:], jnp.float32(0.0))
+    del ctx.aux_losses[aux0:]
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _mixer_cache(cfg, bd, batch, max_len, dtype, axes: bool, xlen=None):
+    k = bd.mixer
+    if k in ("attn", "attn_sliding", "shared_attn"):
+        c = B.attn_cache_axes() if axes else B.attn_init_cache(cfg, batch, max_len, dtype)
+    elif k == "mla":
+        c = B.mla_cache_axes() if axes else B.mla_init_cache(cfg, batch, max_len, dtype)
+    elif k == "mamba2":
+        c = M2.mamba2_cache_axes() if axes else M2.mamba2_init_cache(cfg, batch, max_len, dtype)
+    elif k == "mlstm":
+        c = XL.mlstm_cache_axes() if axes else XL.mlstm_init_cache(cfg, batch, max_len, dtype)
+    elif k == "slstm":
+        c = XL.slstm_cache_axes() if axes else XL.slstm_init_cache(cfg, batch, max_len, dtype)
+    else:
+        raise ValueError(k)
+    if cfg.cross_attention and k in ("attn",):
+        xl = xlen if xlen is not None else max_len
+        xa = ({"xk": ("batch", "kv_seq", "kv_heads", None),
+               "xv": ("batch", "kv_seq", "kv_heads", None)} if axes else
+              {"xk": jnp.zeros((batch, xl, (cfg.num_kv_heads or cfg.num_heads),
+                                cfg.resolved_head_dim), dtype),
+               "xv": jnp.zeros((batch, xl, (cfg.num_kv_heads or cfg.num_heads),
+                                cfg.resolved_head_dim), dtype)})
+        c = {**c, **xa}
+    return c
+
+
+def _stack_tree(tree, n: int, axes: bool):
+    if axes:
+        return jax.tree.map(lambda a: ("layers",) + a, tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0
+                            and all(isinstance(e, (str, type(None))) for e in x))
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, axes: bool = False, enc_len: int | None = None):
+    """Cache pytree (axes=True returns logical-axes tree instead)."""
+    period, n_groups, rem = _schedule_groups(cfg)
+    mk = lambda bd: _mixer_cache(cfg, bd, batch, max_len, dtype, axes, xlen=enc_len)
+    group = tuple(mk(cfg.blocks[i]) for i in range(period))
+    return {
+        "layers": _stack_tree(group, n_groups, axes) if n_groups else (),
+        "rem": tuple(mk(cfg.block_at(n_groups * period + i)) for i in range(rem)),
+    }
+
+
+def cache_partition_specs(cfg: ModelConfig, lay: MeshLayout, batch: int, max_len: int,
+                          *, enc_len: int | None = None):
+    tree = init_cache(cfg, batch, max_len, axes=True, enc_len=enc_len)
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, max_len,
+                                               enc_len=enc_len))
+    def is_axes(x):
+        return (isinstance(x, tuple) and len(x) > 0
+                and all(isinstance(e, (str, type(None))) for e in x))
+    def is_sds(x):
+        return hasattr(x, "shape") and hasattr(x, "dtype")
+    flat_a, treedef = jax.tree.flatten(tree, is_leaf=is_axes)
+    flat_s = jax.tree.flatten(shapes, is_leaf=is_sds)[0]
+    specs = [lay.spec(*a, dims=tuple(sd.shape)) for a, sd in zip(flat_a, flat_s)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens, lay):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    return constrain(x, lay, "batch", "seq", "embed")
+
+
+def _encode(cfg: ModelConfig, params, frames, ctx: B.Ctx):
+    """Whisper encoder over stubbed frame embeddings."""
+    lay = ctx.lay
+    x = frames @ params.get("frontend", jnp.eye(cfg.d_model, dtype=frames.dtype)) \
+        if "frontend" in params else frames
+    pe = sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = x + pe[None]
+    ep = params["enc"]
+    ectx = B.Ctx(lay=lay, mode="train", positions=ctx.positions, block_q=ctx.block_q,
+                 block_k=ctx.block_k)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], eps=cfg.norm_eps)
+        y, _ = B.attn_apply(cfg, lp["mix"], h, ectx, causal=False, use_rope=False)
+        x = x + y
+        h = rms_norm(x, lp["ln2"], eps=cfg.norm_eps)
+        x = x + B.ffn_apply(cfg, lp["ffn"], h, ectx, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, ep["layers"][0])
+    return rms_norm(x, ep["norm"], eps=cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, lay: MeshLayout | None = None,
+            mode: str = "train", cache=None, cache_len=None, positions=None,
+            prefix_embed=None, enc_frames=None, scan: bool = True,
+            remat: str = "block", block_q: int = 512, block_k: int = 512):
+    """Run the decoder stack.
+
+    Returns dict(hidden, new_cache, aux, prefix_len).
+    """
+    ctx = B.Ctx(lay=lay, mode=mode, cache_len=cache_len,
+                block_q=block_q, block_k=block_k)
+
+    x = _embed_tokens(cfg, params, tokens, lay)
+    prefix_len = 0
+    if prefix_embed is not None:
+        pe = prefix_embed @ params["frontend"]
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        prefix_len = prefix_embed.shape[1]
+    B_, S = x.shape[0], x.shape[1]
+
+    if positions is None:
+        if mode == "decode":
+            positions = (jnp.asarray(cache_len).reshape(-1) - 1)[:, None] * jnp.ones(
+                (B_, 1), jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B_, S))
+    ctx.positions = positions
+
+    if cfg.encoder_layers and enc_frames is not None:
+        ctx.enc_out = _encode(cfg, params, enc_frames, ctx)
+    ctx.emb0 = x if any(bd.mixer == "shared_attn" for bd in cfg.blocks) else None
+
+    shared = params.get("shared")
+    period, n_groups, rem = _schedule_groups(cfg)
+    aux_total = jnp.float32(0.0)
+
+    def apply_one(bd, lp, x, layer_cache):
+        lctx = B.Ctx(lay=lay, mode=mode, positions=ctx.positions, cache=layer_cache,
+                     cache_len=cache_len, emb0=ctx.emb0, enc_out=ctx.enc_out,
+                     block_q=block_q, block_k=block_k)
+        return apply_layer(cfg, bd, lp, shared, x, lctx)
+
+    def apply_group(x, gp, gc):
+        new_caches = []
+        aux = jnp.float32(0.0)
+        for i in range(period):
+            lc = None if gc is None else gc[i]
+            fn = apply_one
+            if remat == "block":
+                fn = jax.checkpoint(apply_one, static_argnums=(0,))
+            x, nc, a = fn(cfg.blocks[i], gp[i], x, lc)
+            new_caches.append(nc)
+            aux = aux + a
+        return x, tuple(new_caches), aux
+
+    new_group_caches = None
+    if n_groups:
+        gparams = params["layers"]
+        gcaches = None if cache is None else cache["layers"]
+        if scan and n_groups > 1:
+            def body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+                x, nc, a = apply_group(x, gp, gc)
+                return (x, aux + a), nc
+            (x, aux_total), new_group_caches = jax.lax.scan(
+                body, (x, aux_total),
+                (gparams, gcaches) if gcaches is not None else (gparams, None))
+        else:
+            ncs = []
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda a: a[g], gparams)
+                gc = None if gcaches is None else jax.tree.map(lambda a: a[g], gcaches)
+                x, nc, a = apply_group(x, gp, gc)
+                aux_total = aux_total + a
+                ncs.append(nc)
+            if ncs and ncs[0] is not None and any(c is not None for c in ncs[0]):
+                new_group_caches = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+
+    new_rem_caches = []
+    for i in range(rem):
+        bd = cfg.block_at(n_groups * period + i)
+        lc = None if cache is None else cache["rem"][i]
+        x, nc, a = apply_one(bd, params["rem"][i], x, lc)
+        aux_total = aux_total + a
+        new_rem_caches.append(nc)
+
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.post_norm)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"layers": new_group_caches if new_group_caches is not None else (),
+                     "rem": tuple(new_rem_caches)}
+    return {"hidden": x, "cache": new_cache, "aux": aux_total, "prefix_len": prefix_len}
+
+
+def logits_from_hidden(cfg: ModelConfig, params, hidden, lay=None):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = hidden @ head.astype(hidden.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, lay, "batch", "seq", "vocab")
+
+
+def chunked_xent(cfg: ModelConfig, params, hidden, labels, *, lay=None,
+                 block: int = 512):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    labels < 0 are ignored. Returns (sum_loss, num_valid).
+    """
+    B_, S, E = hidden.shape
+    blk = min(block, S)
+    while S % blk:
+        blk -= 1
+    nb = S // blk
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+
+    @jax.checkpoint  # logits blocks are one matmul: recompute, never store
+    def block_loss(h, y):
+        lg = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        if cfg.logit_softcap:
+            lg = jnp.tanh(lg / cfg.logit_softcap) * cfg.logit_softcap
+        lg = constrain(lg, lay, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        valid = (y >= 0)
+        loss = jnp.where(valid, lse - gold, 0.0)
+        return loss.sum(), valid.sum()
+
+    def body(carry, xs):
+        h, y = xs                                        # (B,blk,E), (B,blk)
+        ls, nv = block_loss(h, y)
+        s, n = carry
+        return (s + ls, n + nv), None
+
+    hb = hidden.reshape(B_, nb, blk, E).swapaxes(0, 1)
+    yb = labels.reshape(B_, nb, blk).swapaxes(0, 1)
+    (s, n), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hb, yb))
+    return s, n
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, lay=None, scan=True,
+            remat="block", block_q=512, block_k=512):
+    """batch: dict(tokens, labels [, prefix_embed, frames])."""
+    out = forward(cfg, params, batch["tokens"], lay=lay, mode="train",
+                  prefix_embed=batch.get("prefix_embed"),
+                  enc_frames=batch.get("frames"), scan=scan, remat=remat,
+                  block_q=block_q, block_k=block_k)
+    hidden = out["hidden"]
+    labels = batch["labels"]
+    if out["prefix_len"]:
+        pad = jnp.full((labels.shape[0], out["prefix_len"]), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    s, n = chunked_xent(cfg, params, hidden, labels, lay=lay)
+    loss = s / jnp.maximum(n, 1)
+    return loss + out["aux"], {"xent": loss, "aux": out["aux"], "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, *, lay=None, max_len=None,
+            prefix_embed=None, enc_frames=None, scan=True,
+            block_q=512, block_k=512):
+    """Full forward building a KV cache; returns (last_logits, cache)."""
+    Bsz, S = tokens.shape
+    out = forward(cfg, params, tokens, lay=lay, mode="prefill",
+                  prefix_embed=prefix_embed, enc_frames=enc_frames,
+                  cache_len=S, scan=scan, block_q=block_q, block_k=block_k)
+    logits = logits_from_hidden(cfg, params, out["hidden"][:, -1:], lay=lay)
+    return logits, out["cache"]
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, cache_len, *, lay=None,
+                scan=True, enc_frames=None):
+    """One decode step. token: (B,1); cache_len includes the new token."""
+    out = forward(cfg, params, token, lay=lay, mode="decode", cache=cache,
+                  cache_len=cache_len, scan=scan, enc_frames=enc_frames)
+    logits = logits_from_hidden(cfg, params, out["hidden"], lay=lay)
+    return logits, out["cache"]

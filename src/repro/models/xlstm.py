@@ -1,0 +1,309 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (chunked matrix memory) + sLSTM.
+
+TPU adaptation: the mLSTM recurrence is computed in a chunkwise-parallel
+form (GLA-style) — within-chunk Q x Q decay attention on the MXU, a
+`lax.scan` over chunk states for the recurrent part — instead of the
+paper's fused CUDA kernel. All gate accumulations are kept in log space
+with the running stabilizer ``m`` so the chunked form matches the
+sequential recurrence bit-for-bit up to fp error (verified by tests
+against :func:`mlstm_reference`).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamSpec
+from repro.models.layers import constrain, rms_norm
+from repro.models.blocks import Ctx
+
+NEG = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H = cfg.num_heads
+    dk = inner // H
+    return inner, H, dk
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig):
+    s = cfg.ssm
+    E = cfg.d_model
+    inner, H, dk = _dims(cfg)
+    return {
+        "w_up": ParamSpec((E, 2 * inner), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_dim, inner), (None, "ssm_inner"), scale=0.5),
+        "conv_b": ParamSpec((inner,), ("ssm_inner",), init="zeros"),
+        "wq": ParamSpec((H, dk, dk), ("ssm_inner", None, None)),
+        "wk": ParamSpec((H, dk, dk), ("ssm_inner", None, None)),
+        "wv": ParamSpec((H, dk, dk), ("ssm_inner", None, None)),
+        "w_if": ParamSpec((E, 2 * H), ("embed", None), scale=0.5),
+        "b_if": ParamSpec((2 * H,), (None,), init="zeros"),
+        "norm": ParamSpec((inner,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((inner, E), ("ssm_inner", "embed")),
+    }
+
+
+def _conv_silu(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(cfg, p, x, conv_state=None):
+    """conv_state: (B, K-1, inner) trailing inputs for decode; None => zeros."""
+    inner, H, dk = _dims(cfg)
+    B, S, E = x.shape
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    if conv_state is not None:
+        K = p["conv_w"].shape[0]
+        ext = jnp.concatenate([conv_state.astype(xm.dtype), xm], axis=1)
+        out = sum(ext[:, i:i + S, :] * p["conv_w"][i] for i in range(K))
+        xc = jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(xm.dtype)
+        xc = xc.reshape(B, S, H, dk)
+    else:
+        xc = _conv_silu(xm, p["conv_w"], p["conv_b"]).reshape(B, S, H, dk)
+    q = jnp.einsum("bshk,hkl->bshl", xc, p["wq"])
+    k = jnp.einsum("bshk,hkl->bshl", xc, p["wk"]) / math.sqrt(dk)
+    v = jnp.einsum("bshk,hkl->bshl", xm.reshape(B, S, H, dk), p["wv"])
+    g = (x @ p["w_if"] + p["b_if"]).astype(jnp.float32).reshape(B, S, 2, H)
+    logi = g[:, :, 0]                                  # pre-activation input gate
+    logf = jax.nn.log_sigmoid(g[:, :, 1] + 3.0)        # forget gate, bias toward keep
+    return q, k, v, z, logi, logf
+
+
+def _mlstm_out(cfg, p, h, z, B, S):
+    inner, H, dk = _dims(cfg)
+    h = h.reshape(B, S, H, dk)
+    h = rms_norm(h, p["norm"].reshape(H, dk), eps=cfg.norm_eps)
+    h = h.reshape(B, S, inner)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return h @ p["wo"]
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    if ctx.mode == "decode":
+        return _mlstm_decode(cfg, p, x, ctx)
+    lay = ctx.lay
+    s = cfg.ssm
+    inner, H, dk = _dims(cfg)
+    B, S, E = x.shape
+    Q = min(s.chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    q, k, v, z, logi, logf = _mlstm_qkv_gates(cfg, p, x)
+    qf = q.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+    kf = k.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+    vf = v.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+    gi = logi.reshape(B, nc, Q, H)
+    b = jnp.cumsum(logf.reshape(B, nc, Q, H), axis=2)          # within-chunk cum logf
+    btot = b[:, :, -1, :]                                       # (B,nc,H)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # intra log-weights w[i,j] = b_i - b_j + logi_j  (j <= i)
+    wij = b[:, :, :, None, :] - b[:, :, None, :, :] + gi[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    wij = jnp.where(tri[None, None, :, :, None], wij, NEG)
+    m_intra = wij.max(axis=3)                                   # (B,nc,Q,H)
+
+    # state-update log-weights u[j] = btot - b_j + logi_j
+    uj = btot[:, :, None, :] - b + gi                           # (B,nc,Q,H)
+    u_max = uj.max(axis=2)                                      # (B,nc,H)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                         # (B,H,dk,dk),(B,H,dk),(B,H)
+        qc, kc, vc, bc, wc, mic, ujc, umc, btc = inp
+        d_inter = m[:, None, :] + bc                            # (B,Q,H)
+        m_loc = jnp.maximum(mic, d_inter)                       # (B,Q,H)
+        P = jnp.exp(wc - m_loc[:, :, None, :])                  # (B,Q,Q,H)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)
+        num = jnp.einsum("bqkh,bqkh,bkhd->bqhd", scores, P, vc)
+        den_vec = jnp.einsum("bqkh,bkhd->bqhd", P, kc)
+        scale = jnp.exp(d_inter - m_loc)                        # (B,Q,H)
+        num = num + scale[..., None] * jnp.einsum("bqhd,bhde->bqhe", qc, C)
+        den_vec = den_vec + scale[..., None] * n[:, None]
+        den = jnp.abs(jnp.einsum("bqhd,bqhd->bqh", qc, den_vec))
+        den = jnp.maximum(den, jnp.exp(-m_loc))
+        h = num / den[..., None]                                # (B,Q,H,dk)
+
+        m_new = jnp.maximum(m + btc, umc)
+        carry_scale = jnp.exp(m + btc - m_new)
+        w_state = jnp.exp(ujc - m_new[:, None, :])              # (B,Q,H)
+        C_new = C * carry_scale[..., None, None] + jnp.einsum(
+            "bqhd,bqh,bqhe->bhde", kc, w_state, vc)
+        n_new = n * carry_scale[..., None] + jnp.einsum("bqhd,bqh->bhd", kc, w_state)
+        return (C_new, n_new, m_new), h
+
+    init = (jnp.zeros((B, H, dk, dk), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    (Cf, nf, mf), hs = jax.lax.scan(
+        chunk_step, init,
+        (mv(qf), mv(kf), mv(vf), mv(b), mv(wij), mv(m_intra), mv(uj), mv(u_max), mv(btot)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, inner).astype(x.dtype)
+    h = constrain(h, lay, "batch", "seq", "ssm_inner")
+    out = _mlstm_out(cfg, p, h, z, B, S)
+    new_cache = None
+    if ctx.mode == "prefill":
+        K = p["conv_w"].shape[0]
+        xm_tail = (x[:, -(K - 1):] @ p["w_up"])[..., :inner]
+        new_cache = {"C": Cf, "n": nf, "m": mf, "conv": xm_tail}
+    return constrain(out, lay, "batch", "seq", "embed"), new_cache
+
+
+def _mlstm_decode(cfg: ModelConfig, p, x, ctx: Ctx):
+    lay = ctx.lay
+    inner, H, dk = _dims(cfg)
+    B = x.shape[0]
+    cache = ctx.cache
+    q, k, v, z, logi, logf = _mlstm_qkv_gates(cfg, p, x, conv_state=cache["conv"])  # S=1
+    xm_t = (x @ p["w_up"])[..., :inner]                         # (B,1,inner)
+    conv_new = jnp.concatenate([cache["conv"], xm_t.astype(cache["conv"].dtype)],
+                               axis=1)[:, 1:]
+    qf, kf, vf = (a.astype(jnp.float32)[:, 0] for a in (q, k, v))  # (B,H,dk)
+    gi, gf = logi[:, 0], logf[:, 0]                             # (B,H)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(gf + m, gi)
+    fs = jnp.exp(gf + m - m_new)
+    is_ = jnp.exp(gi - m_new)
+    C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = n * fs[..., None] + is_[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, inner).astype(x.dtype)
+    out = _mlstm_out(cfg, p, h, z, B, 1)
+    return (constrain(out, lay, "batch", None, "embed"),
+            {"C": C, "n": n, "m": m_new, "conv": conv_new})
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    inner, H, dk = _dims(cfg)
+    return {"C": jnp.zeros((batch, H, dk, dk), jnp.float32),
+            "n": jnp.zeros((batch, H, dk), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, inner), dtype)}
+
+
+def mlstm_cache_axes():
+    return {"C": ("batch", "ssm_inner", None, None),
+            "n": ("batch", "ssm_inner", None),
+            "m": ("batch", "ssm_inner"),
+            "conv": ("batch", None, "ssm_inner")}
+
+
+def mlstm_reference(cfg: ModelConfig, p, x, ctx: Ctx):
+    """Strict sequential recurrence (oracle)."""
+    inner, H, dk = _dims(cfg)
+    B, S, E = x.shape
+    q, k, v, z, logi, logf = _mlstm_qkv_gates(cfg, p, x)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        C = C * fs[..., None, None] + is_[..., None, None] * jnp.einsum("bhd,bhe->bhde", kt, vt)
+        n = n * fs[..., None] + is_[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    init = (jnp.zeros((B, H, dk, dk), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    mv = lambda a: jnp.moveaxis(a, 1, 0)
+    _, hs = jax.lax.scan(step, init, (mv(qf), mv(kf), mv(vf),
+                                      mv(logi), mv(logf)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, inner).astype(x.dtype)
+    return _mlstm_out(cfg, p, h, z, B, S), None
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, sequential scan (inherently recurrent)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig):
+    E = cfg.d_model
+    H = cfg.num_heads
+    Dh = E // H
+    return {
+        "w": ParamSpec((E, 4 * E), ("embed", "ssm_inner")),
+        "r": ParamSpec((H, Dh, 4 * Dh), (None, None, None), scale=0.5),
+        "b": ParamSpec((4 * E,), ("ssm_inner",), init="zeros"),
+        "norm": ParamSpec((E,), (None,), init="ones"),
+        "wo": ParamSpec((E, E), ("embed", None), scale=1.0),
+    }
+
+
+def _slstm_cell(p, H, Dh, carry, xt_w):
+    """One sLSTM step. carry: (c, n, m, h) each (B,H,Dh); xt_w: (B,4E)."""
+    c, n, m, h = carry
+    B = c.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"])                 # (B,H,4Dh)
+    g = xt_w.reshape(B, H, 4, Dh) + rec.reshape(B, H, 4, Dh)
+    zt = jnp.tanh(g[:, :, 0])
+    it = g[:, :, 1]
+    ft = g[:, :, 2]
+    ot = jax.nn.sigmoid(g[:, :, 3])
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    c_new = fs * c + is_ * zt
+    n_new = fs * n + is_
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(cfg: ModelConfig, p, x, ctx: Ctx):
+    lay = ctx.lay
+    E = cfg.d_model
+    H = cfg.num_heads
+    Dh = E // H
+    B, S, _ = x.shape
+    xw = (x @ p["w"] + p["b"]).astype(jnp.float32)              # (B,S,4E)
+
+    if ctx.mode == "decode":
+        cache = ctx.cache
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, h = _slstm_cell(p, H, Dh, carry, xw[:, 0])
+        h = h.reshape(B, 1, E)
+        new_cache = dict(zip("cnmh", carry))
+    else:
+        init = tuple(jnp.zeros((B, H, Dh), jnp.float32) for _ in range(4))
+        carry, hs = jax.lax.scan(lambda ca, xt: _slstm_cell(p, H, Dh, ca, xt),
+                                 init, jnp.moveaxis(xw, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1).reshape(B, S, E)
+        new_cache = dict(zip("cnmh", carry)) if ctx.mode == "prefill" else None
+
+    h = rms_norm(h.astype(x.dtype), p["norm"], eps=cfg.norm_eps)
+    out = h @ p["wo"]
+    return constrain(out, lay, "batch", "seq", "embed"), new_cache
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    E, H = cfg.d_model, cfg.num_heads
+    Dh = E // H
+    z = lambda: jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def slstm_cache_axes():
+    ax = ("batch", None, None)
+    return {k: ax for k in "cnmh"}

@@ -1,0 +1,39 @@
+"""LARS — layer-wise adaptive rate scaling (You et al. 2017a).
+
+The paper's Table 5 combines SGD + momentum + LARS with post-local SGD;
+LARS only rescales the per-layer step, so it composes with local SGD
+without extra synchronization (footnote 6 in the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_map_pairs
+
+
+def _lars_leaf(p, g, u, skip, *, lr, trust, momentum, wd, nesterov):
+    gf = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    if wd and not skip:
+        gf = gf + wd * pf
+    if not skip:  # norm/bias params use the plain LR
+        wn = jnp.linalg.norm(pf)
+        gn = jnp.linalg.norm(gf)
+        ratio = jnp.where((wn > 0) & (gn > 0), trust * wn / (gn + 1e-9), 1.0)
+        gf = gf * ratio
+    u_new = momentum * u.astype(jnp.float32) + gf
+    step = (momentum * u_new + gf) if nesterov else u_new
+    p_new = pf - lr * step
+    return p_new.astype(p.dtype), u_new.astype(u.dtype)
+
+
+def apply_lars(params, grads, momentum, *, lr, trust: float, momentum_coef: float,
+               weight_decay: float, nesterov: bool, wd_mask=None):
+    if wd_mask is None:
+        wd_mask = jax.tree.map(lambda _: False, params)
+    return tree_map_pairs(
+        lambda p, g, u, s: _lars_leaf(p, g, u, s, lr=lr, trust=trust,
+                                      momentum=momentum_coef, wd=weight_decay,
+                                      nesterov=nesterov),
+        params, grads, momentum, wd_mask)

@@ -1,0 +1,59 @@
+"""SGD with Nesterov momentum + decoupled-by-mask weight decay.
+
+This is the paper's *local* optimizer: one independent instance per
+worker (momentum buffers live inside the per-worker stacked state, so
+"local momentum", App. B.4.1, falls out of the vmap).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+from repro.utils import tree_map_pairs
+
+
+def init_momentum(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def _leaf_update(p, g, u, skip_wd, *, lr, momentum, wd, nesterov):
+    gf = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    if wd and not skip_wd:
+        gf = gf + wd * pf
+    u_new = momentum * u.astype(jnp.float32) + gf
+    step = (momentum * u_new + gf) if nesterov else u_new
+    p_new = pf - lr * step
+    return p_new.astype(p.dtype), u_new.astype(u.dtype)
+
+
+def apply_sgd(params, grads, momentum, *, lr, momentum_coef: float,
+              weight_decay: float, nesterov: bool, wd_mask=None,
+              grad_clip: float = 0.0, use_kernel: bool = False):
+    grads = clip_by_global_norm(grads, grad_clip)
+    if wd_mask is None:
+        wd_mask = jax.tree.map(lambda _: False, params)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        def upd(p, g, u, skip):
+            return kops.fused_sgd(p, g, u, lr=lr, momentum=momentum_coef,
+                                  weight_decay=0.0 if skip else weight_decay,
+                                  nesterov=nesterov)
+    else:
+        def upd(p, g, u, skip):
+            return _leaf_update(p, g, u, skip, lr=lr, momentum=momentum_coef,
+                                wd=weight_decay, nesterov=nesterov)
+    return tree_map_pairs(upd, params, grads, momentum, wd_mask)

@@ -1,0 +1,18 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def tree_map_pairs(fn, tree, *rest):
+    """Map ``fn`` (returning a 2-tuple) over trees; return two trees.
+
+    Unlike tree.map + tuple-indexing, this is safe for pytrees that
+    themselves contain tuples/dicts at internal nodes.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    rest_leaves = [jax.tree.flatten(r)[0] for r in rest]
+    outs = [fn(l, *(rl[i] for rl in rest_leaves)) for i, l in enumerate(leaves)]
+    a = treedef.unflatten([o[0] for o in outs])
+    b = treedef.unflatten([o[1] for o in outs])
+    return a, b

@@ -1,0 +1,25 @@
+import os
+
+# Tests see the single real CPU device (the dry-run subprocesses set their
+# own XLA_FLAGS). Keep any accidental flag from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import gc
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_cache():
+    """Free compiled executables between test modules.
+
+    The full suite compiles many hundreds of XLA:CPU programs in one
+    process; without this the ORC JIT eventually fails to materialize new
+    symbols ("Failed to materialize symbols") late in the run.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,88 @@
+"""chunked_attention vs O(S^2) reference — grid + hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (chunked_attention, decode_attention,
+                                 reference_attention)
+
+
+def rand_qkv(key, B, S, H, KH, D, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), dtype)
+    k = jax.random.normal(kk, (B, S, KH, D), dtype)
+    v = jax.random.normal(kv, (B, S, KH, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("diff", [True, False])
+def test_chunked_matches_reference(causal, window, gqa, diff):
+    if window and not causal:
+        pytest.skip("window only with causal")
+    H, KH = gqa
+    q, k, v = rand_qkv(jax.random.PRNGKey(0), 2, 32, H, KH, 16)
+    got = chunked_attention(q, k, v, causal=causal, window=window,
+                            block_q=8, block_k=8, differentiable=diff)
+    want = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 10.0])
+def test_softcap(softcap):
+    q, k, v = rand_qkv(jax.random.PRNGKey(1), 1, 16, 2, 2, 8)
+    got = chunked_attention(q, k, v, softcap=softcap, block_q=4, block_k=4)
+    want = reference_attention(q, k, v, softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.sampled_from([8, 12, 24, 48]),
+    bq=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    window=st.sampled_from([0, 4, 16]),
+    seed=st.integers(0, 5),
+)
+def test_chunked_property(s, bq, bk, window, seed):
+    """Block sizes never change the result (property)."""
+    q, k, v = rand_qkv(jax.random.PRNGKey(seed), 1, s, 2, 1, 8)
+    got = chunked_attention(q, k, v, causal=True, window=window,
+                            block_q=bq, block_k=bk)
+    want = reference_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_bf16_dtype():
+    q, k, v = rand_qkv(jax.random.PRNGKey(2), 1, 16, 2, 2, 8, jnp.bfloat16)
+    got = chunked_attention(q, k, v, block_q=8, block_k=8)
+    want = reference_attention(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("window", [0, 6])
+def test_decode_attention_matches_full(window):
+    """Decoding the last position == full attention at that position."""
+    B, S, H, KH, D = 2, 17, 4, 2, 8
+    q, k, v = rand_qkv(jax.random.PRNGKey(3), B, S, H, KH, D)
+    full = reference_attention(q, k, v, causal=True, window=window)
+    got = decode_attention(q[:, -1:], k, v, cache_len=jnp.int32(S),
+                           window=window)
+    np.testing.assert_allclose(got[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_padding():
+    B, S, H, D = 1, 16, 2, 8
+    q, k, v = rand_qkv(jax.random.PRNGKey(4), B, S, H, H, D)
+    # pad cache beyond cache_len with garbage
+    k_pad = jnp.concatenate([k, 1e3 * jnp.ones_like(k)], axis=1)
+    v_pad = jnp.concatenate([v, 1e3 * jnp.ones_like(v)], axis=1)
+    a = decode_attention(q[:, -1:], k, v, cache_len=jnp.int32(S))
+    b = decode_attention(q[:, -1:], k_pad, v_pad, cache_len=jnp.int32(S))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,39 @@
+"""Checkpoint round-trips, including full LocalSGDState."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import load_meta, restore, save
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core.local_sgd import make_local_sgd
+
+
+def test_roundtrip_params(tmp_path):
+    tree = {"a": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "b": (jnp.ones(4), jnp.zeros((2, 2), jnp.int32))}
+    path = str(tmp_path / "ckpt")
+    save(path, tree, step=7, extra={"note": "x"})
+    out = restore(path, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(a, b)
+    meta = load_meta(path)
+    assert meta["step"] == 7 and meta["note"] == "x"
+
+
+def test_roundtrip_local_sgd_state(tmp_path):
+    run = RunConfig(model=ModelConfig(name="q", family="dense", citation=""),
+                    shape=InputShape("t", 8, 8, "train"),
+                    local_sgd=LocalSGDConfig(local_steps=2),
+                    optim=OptimConfig(lr_decay_steps=()))
+    def loss(p, b):
+        l = jnp.sum(p["w"] ** 2)
+        return l, {"xent": l}
+    init, local_step, sync = make_local_sgd(run, loss, num_workers=2)
+    state = init(jax.random.PRNGKey(0), {"w": jnp.ones((3, 3))})
+    state, _ = local_step(state, {"x": jnp.zeros((2, 4, 1))})
+    path = str(tmp_path / "state")
+    save(path, state, step=int(state.step))
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    out = restore(path, tmpl)
+    np.testing.assert_allclose(out.params["w"], state.params["w"])
+    assert int(out.step) == 1

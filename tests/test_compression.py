@@ -1,0 +1,129 @@
+"""signSGD / EF-signSGD sync compression (paper Alg. 3/4) invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core.local_sgd import make_local_sgd
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 500), seed=st.integers(0, 50))
+def test_ef_error_feedback_invariant(n, seed):
+    """compressed + new_memory == delta + old_memory exactly (Alg. 4 L15-17)."""
+    rng = np.random.default_rng(seed)
+    delta = {"a": jnp.asarray(rng.normal(size=n), jnp.float32)}
+    mem = {"a": jnp.asarray(rng.normal(size=n) * 0.1, jnp.float32)}
+    out, new_mem = comp.ef_compress(delta, mem)
+    np.testing.assert_allclose(out["a"] + new_mem["a"], delta["a"] + mem["a"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ef_memory_bounded_over_rounds():
+    """EF memory stays bounded (error does not accumulate unboundedly)."""
+    rng = np.random.default_rng(0)
+    mem = {"a": jnp.zeros(256)}
+    norms = []
+    for t in range(50):
+        delta = {"a": jnp.asarray(rng.normal(size=256) * 0.1, jnp.float32)}
+        _, mem = comp.ef_compress(delta, mem)
+        norms.append(float(jnp.linalg.norm(mem["a"])))
+    assert max(norms[25:]) < 10 * np.mean(norms[:5]) + 1.0
+
+
+def test_compressed_bytes_is_32x_smaller():
+    tree = {"w": jnp.zeros((1024, 64)), "b": jnp.zeros((64,))}
+    dense = comp.dense_bytes(tree)
+    small = comp.compressed_bytes(tree)
+    assert dense / small > 30  # 1 bit vs 32 bits (+scale overhead)
+
+
+def _quad_run(compression):
+    return RunConfig(
+        model=ModelConfig(name="q", family="dense", citation=""),
+        shape=InputShape("t", 8, 16, "train"),
+        local_sgd=LocalSGDConfig(local_steps=2, sync_compression=compression,
+                                 local_momentum=0.0, nesterov=False),
+        optim=OptimConfig(base_lr=0.05, base_batch=16, lr_decay_steps=()))
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def _batches(key, n=8):
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        x = jax.random.normal(k, (4, 4, 6))
+        y = x @ (jnp.ones((6, 2)) * 0.3)
+        out.append({"x": x, "y": y})
+    return out
+
+
+def _train(compression, steps=8):
+    run = _quad_run(compression)
+    init, local_step, sync = make_local_sgd(run, _loss, num_workers=4)
+    state = init(jax.random.PRNGKey(0),
+                 {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 2)) * 0.3})
+    for t, b in enumerate(_batches(jax.random.PRNGKey(2), steps)):
+        state, m = local_step(state, b)
+        if (t + 1) % 2 == 0:
+            state = sync(state)
+    final = {k: v for k, v in [("w", state.params["w"][0])]}
+    loss, _ = _loss(final, _batches(jax.random.PRNGKey(3), 1)[0])
+    return float(loss), state
+
+
+def test_sign_and_ef_sign_training_converges():
+    l_none, _ = _train("none")
+    l_sign, st_sign = _train("sign")
+    l_ef, st_ef = _train("ef_sign")
+    # all three make progress on the quadratic; EF at least as good as sign
+    init_loss = float(_loss({"w": jax.random.normal(jax.random.PRNGKey(1), (6, 2)) * 0.3},
+                            _batches(jax.random.PRNGKey(3), 1)[0])[0])
+    assert l_none < init_loss
+    assert l_sign < init_loss
+    assert l_ef < init_loss
+    assert st_ef.ef_memory is not None
+    assert st_sign.ef_memory is None
+    # workers agree after sync
+    np.testing.assert_allclose(st_sign.params["w"][0], st_sign.params["w"][3],
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 5), cols=st.integers(1, 40), seed=st.integers(0, 20))
+def test_pack_unpack_roundtrip(rows, cols, seed):
+    """1-bit wire pack: unpack(pack(x)) == sign(x)*mean|x| (0 -> +1)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, rows, cols)), jnp.float32)
+    for axis in (1, 2):
+        packed, scale = comp.pack_signs(x, axis=axis)
+        assert packed.dtype == jnp.uint8
+        y = comp.unpack_signs(packed, scale, (rows, cols), axis=axis)
+        want = np.sign(np.asarray(x))
+        want[want == 0] = 1.0
+        want = want * np.abs(np.asarray(x)).reshape(3, -1).mean(1)[:, None, None]
+        np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-6)
+
+
+def test_wire_pack_sync_runs_on_cpu():
+    run = _quad_run("sign")
+    run = run.__class__(**{**run.__dict__,
+                           "local_sgd": run.local_sgd.__class__(
+                               **{**run.local_sgd.__dict__, "wire_pack": True})})
+    init, local_step, sync = make_local_sgd(run, _loss, num_workers=4)
+    state = init(jax.random.PRNGKey(0),
+                 {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 2)) * 0.3})
+    for t, b in enumerate(_batches(jax.random.PRNGKey(2), 4)):
+        state, _ = local_step(state, b)
+        if (t + 1) % 2 == 0:
+            state = sync(state)
+    w = state.params["w"]
+    assert np.isfinite(np.asarray(w)).all()
+    np.testing.assert_allclose(w[0], w[3], rtol=1e-6)

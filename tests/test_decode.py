@@ -1,0 +1,87 @@
+"""Serving paths: prefill + decode_step == full forward, per architecture."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import base as mbase
+from repro.models import lm
+
+S = 24
+
+
+def _batch(cfg, rng):
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)), jnp.int32)}
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(rng.normal(size=(2, S, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        b["prefix_embed"] = jnp.asarray(
+            rng.normal(size=(2, cfg.num_prefix_tokens, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    import numpy as onp
+    cfg = configs.get_smoke(arch)
+    params = mbase.materialize(lm.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = onp.random.default_rng(0)
+    b = _batch(cfg, rng)
+    toks = b["tokens"]
+    kw = {k: v for k, v in b.items() if k != "tokens"}
+    fw_kw = {("enc_frames" if k == "frames" else k): v for k, v in kw.items()}
+
+    out = lm.forward(cfg, params, toks, mode="train", block_q=8, block_k=8, **fw_kw)
+    full_logits = lm.logits_from_hidden(cfg, params, out["hidden"][:, -1:])
+
+    pre = S - 1
+    outp = lm.forward(cfg, params, toks[:, :pre], mode="prefill", cache_len=pre,
+                      block_q=8, block_k=8, **fw_kw)
+    # grow attention caches to S positions using the init_cache template
+    plen0 = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    tmpl = lm.init_cache(cfg, 2, S + plen0, dtype=jnp.float32,
+                         enc_len=S if cfg.family == "audio" else None)
+    def pad_to(c, t):
+        pads = [(0, a - b) for b, a in zip(c.shape, t.shape)]
+        return jnp.pad(c.astype(t.dtype), pads)
+    cache = jax.tree.map(pad_to, outp["cache"], tmpl)
+    plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    logits, cache2 = lm.decode_step(cfg, params, toks[:, pre:pre + 1], cache,
+                                    jnp.int32(pre + plen + 1))
+    np.testing.assert_allclose(np.float32(logits), np.float32(full_logits),
+                               rtol=2e-4, atol=2e-4)
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "zamba2-7b", "xlstm-1.3b"])
+def test_multi_token_greedy_decode_consistency(arch):
+    """Greedy continuation decoded stepwise == argmax of teacher-forced logits."""
+    import numpy as onp
+    cfg = configs.get_smoke(arch)
+    params = mbase.materialize(lm.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = onp.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    max_len = 16
+
+    # stepwise decode 4 tokens
+    outp = lm.forward(cfg, params, toks, mode="prefill", cache_len=8,
+                      block_q=8, block_k=8)
+    tmpl = lm.init_cache(cfg, 1, max_len, dtype=jnp.float32)
+    def pad_to(c, t):
+        pads = [(0, a - b) for b, a in zip(c.shape, t.shape)]
+        return jnp.pad(c.astype(t.dtype), pads)
+    cache = jax.tree.map(pad_to, outp["cache"], tmpl)
+    cur = lm.logits_from_hidden(cfg, params, outp["hidden"][:, -1:])
+    seq = [int(cur.argmax(-1)[0, 0])]
+    for i in range(3):
+        tok = jnp.asarray([[seq[-1]]], jnp.int32)
+        lg, cache = lm.decode_step(cfg, params, tok, cache, jnp.int32(8 + i + 1))
+        seq.append(int(lg.argmax(-1)[0, 0]))
+
+    # teacher-forced forward over the same prefix+continuation
+    full = jnp.concatenate([toks, jnp.asarray([seq[:3]], jnp.int32)], axis=1)
+    out = lm.forward(cfg, params, full, mode="train", block_q=8, block_k=8)
+    lg_all = lm.logits_from_hidden(cfg, params, out["hidden"])
+    greedy = [int(lg_all[0, 7 + i].argmax()) for i in range(4)]
+    assert seq == greedy

@@ -1,0 +1,43 @@
+"""Pallas flash-attention kernel vs the O(S^2) oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models.layers import reference_attention
+
+
+def rand(key, B, S, H, KH, D, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    return (jax.random.normal(kq, (B, S, H, D), dtype),
+            jax.random.normal(kk, (B, S, KH, D), dtype),
+            jax.random.normal(kv, (B, S, KH, D), dtype))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S,bq,bk", [(32, 8, 8), (48, 16, 8), (64, 64, 64)])
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2)])
+def test_flash_matches_reference(causal, S, bq, bk, gqa):
+    H, KH = gqa
+    q, k, v = rand(jax.random.PRNGKey(0), 2, S, H, KH, 16)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_sliding_window():
+    q, k, v = rand(jax.random.PRNGKey(1), 1, 64, 2, 2, 16)
+    got = ops.flash_attention(q, k, v, causal=True, window=16,
+                              block_q=16, block_k=16)
+    want = reference_attention(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = rand(jax.random.PRNGKey(2), 1, 32, 2, 2, 32, jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, block_q=8, block_k=8)
+    want = reference_attention(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=0.05, atol=0.05)

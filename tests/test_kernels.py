@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps + hypothesis property tests, per the deliverable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(5,), (128,), (129,), (64, 64), (3, 7, 11), (2048,), (300, 5)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return dict(rtol=1e-5, atol=1e-6) if dt == jnp.float32 else dict(rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("nesterov", [True, False])
+def test_fused_sgd_matches_ref(shape, dtype, nesterov):
+    rng = np.random.default_rng(hash((shape, str(dtype), nesterov)) % 2**31)
+    p = jnp.asarray(rng.normal(size=shape), dtype)
+    g = jnp.asarray(rng.normal(size=shape), dtype)
+    u = jnp.asarray(rng.normal(size=shape), dtype)
+    po, uo = ops.fused_sgd(p, g, u, lr=0.1, momentum=0.9, weight_decay=1e-2,
+                           nesterov=nesterov)
+    pr, ur = ref.fused_sgd_ref(p, g, u, 0.1, momentum=0.9, weight_decay=1e-2,
+                               nesterov=nesterov)
+    np.testing.assert_allclose(np.float32(po), np.float32(pr), **_tol(dtype))
+    np.testing.assert_allclose(np.float32(uo), np.float32(ur), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sign_compress_matches_ref(shape, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    y = ops.sign_compress(x)
+    yr = ref.sign_compress_ref(x)
+    np.testing.assert_allclose(np.float32(y), np.float32(yr), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 4000), lr=st.floats(1e-4, 1.0), seed=st.integers(0, 99))
+def test_fused_sgd_property(n, lr, seed):
+    rng = np.random.default_rng(seed)
+    p, g, u = (jnp.asarray(rng.normal(size=n), jnp.float32) for _ in range(3))
+    po, uo = ops.fused_sgd(p, g, u, lr=lr, momentum=0.9, weight_decay=0.0,
+                           nesterov=False)
+    pr, ur = ref.fused_sgd_ref(p, g, u, lr, momentum=0.9, weight_decay=0.0,
+                               nesterov=False)
+    np.testing.assert_allclose(po, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(uo, ur, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 4000), seed=st.integers(0, 99))
+def test_sign_compress_properties(n, seed):
+    """sign preserved; single magnitude; L1 norm preserved on average."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    y = np.asarray(ops.sign_compress(x))
+    mags = np.unique(np.abs(y[np.abs(y) > 0]))
+    assert mags.size <= 1
+    np.testing.assert_allclose(np.sum(np.abs(y)),
+                               np.count_nonzero(y) * np.mean(np.abs(x)),
+                               rtol=1e-5)
+    nz = np.asarray(x) != 0
+    assert (np.sign(y)[nz] == np.sign(np.asarray(x))[nz]).all()
+
+
+def test_fused_sgd_traced_lr():
+    """lr can be a traced scalar (LR schedule inside jit)."""
+    p = jnp.ones((100,))
+    g = jnp.ones((100,)) * 0.5
+    u = jnp.zeros((100,))
+
+    @jax.jit
+    def step(lr):
+        return ops.fused_sgd(p, g, u, lr=lr, momentum=0.0, weight_decay=0.0,
+                             nesterov=False)[0]
+
+    np.testing.assert_allclose(step(jnp.float32(0.2)), p - 0.1, rtol=1e-6)
+    np.testing.assert_allclose(step(jnp.float32(0.4)), p - 0.2, rtol=1e-6)

@@ -1,0 +1,88 @@
+"""SSM blocks: chunked forms vs sequential oracles; decode-step consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import base as mbase
+from repro.models import mamba2 as M2
+from repro.models import xlstm as XL
+from repro.models.blocks import Ctx
+
+
+def _x(key, B, S, E, scale=0.5):
+    return jax.random.normal(key, (B, S, E)) * scale
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_mamba2_chunked_vs_sequential(chunk):
+    cfg = configs.get_smoke("zamba2-7b")
+    cfg = cfg.replace(ssm=cfg.ssm.__class__(state_dim=16, conv_dim=4,
+                                            expand=2, head_dim=32, chunk=chunk))
+    p = mbase.materialize(M2.mamba2_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(jax.random.PRNGKey(1), 2, 32, cfg.d_model)
+    y_chunk, _ = M2.mamba2_apply(cfg, p, x, Ctx(mode="train"))
+    y_ref, _ = M2.mamba2_reference(cfg, p, x, Ctx(mode="train"))
+    np.testing.assert_allclose(y_chunk, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_prefill_decode_consistency():
+    cfg = configs.get_smoke("zamba2-7b")
+    p = mbase.materialize(M2.mamba2_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(jax.random.PRNGKey(1), 2, 32, cfg.d_model)
+    xt = _x(jax.random.PRNGKey(2), 2, 1, cfg.d_model)
+    _, cache = M2.mamba2_apply(cfg, p, x, Ctx(mode="prefill"))
+    yd, cache2 = M2.mamba2_apply(cfg, p, xt, Ctx(mode="decode", cache=cache))
+    y_all, _ = M2.mamba2_reference(cfg, p, jnp.concatenate([x, xt], 1),
+                                   Ctx(mode="train"))
+    np.testing.assert_allclose(yd[:, 0], y_all[:, -1], rtol=1e-4, atol=1e-4)
+    # state advances
+    assert not np.allclose(cache["ssm"], cache2["ssm"])
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_mlstm_chunked_vs_sequential(chunk):
+    cfg = configs.get_smoke("xlstm-1.3b")
+    cfg = cfg.replace(ssm=cfg.ssm.__class__(state_dim=0, conv_dim=4,
+                                            expand=2, chunk=chunk))
+    p = mbase.materialize(XL.mlstm_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(jax.random.PRNGKey(1), 2, 32, cfg.d_model)
+    y_chunk, _ = XL.mlstm_apply(cfg, p, x, Ctx(mode="train"))
+    y_ref, _ = XL.mlstm_reference(cfg, p, x, Ctx(mode="train"))
+    np.testing.assert_allclose(y_chunk, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_prefill_decode_consistency():
+    cfg = configs.get_smoke("xlstm-1.3b")
+    p = mbase.materialize(XL.mlstm_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(jax.random.PRNGKey(1), 2, 32, cfg.d_model)
+    xt = _x(jax.random.PRNGKey(2), 2, 1, cfg.d_model)
+    _, cache = XL.mlstm_apply(cfg, p, x, Ctx(mode="prefill"))
+    yd, _ = XL.mlstm_apply(cfg, p, xt, Ctx(mode="decode", cache=cache))
+    y_all, _ = XL.mlstm_reference(cfg, p, jnp.concatenate([x, xt], 1),
+                                  Ctx(mode="train"))
+    np.testing.assert_allclose(yd[:, 0], y_all[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_prefill_decode_consistency():
+    cfg = configs.get_smoke("xlstm-1.3b")
+    p = mbase.materialize(XL.slstm_specs(cfg), jax.random.PRNGKey(0))
+    x = _x(jax.random.PRNGKey(1), 2, 16, cfg.d_model)
+    xt = _x(jax.random.PRNGKey(2), 2, 1, cfg.d_model)
+    _, cache = XL.slstm_apply(cfg, p, x, Ctx(mode="prefill"))
+    yd, _ = XL.slstm_apply(cfg, p, xt, Ctx(mode="decode", cache=cache))
+    y_all, _ = XL.slstm_apply(cfg, p, jnp.concatenate([x, xt], 1),
+                              Ctx(mode="train"))
+    np.testing.assert_allclose(yd[:, 0], y_all[:, -1], rtol=1e-5, atol=1e-5)
+
+
+def test_mamba2_state_decays():
+    """With no input, the SSM state decays toward zero (A < 0)."""
+    cfg = configs.get_smoke("zamba2-7b")
+    p = mbase.materialize(M2.mamba2_specs(cfg), jax.random.PRNGKey(0))
+    cache = M2.mamba2_init_cache(cfg, 1, 8, jnp.float32)
+    cache = {**cache, "ssm": jnp.ones_like(cache["ssm"])}
+    x = jnp.zeros((1, 1, cfg.d_model))
+    _, c2 = M2.mamba2_apply(cfg, p, x, Ctx(mode="decode", cache=cache))
+    assert float(jnp.abs(c2["ssm"]).sum()) <= float(jnp.abs(cache["ssm"]).sum())
