@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core import flatbuf
 from repro.kernels import ops, ref
 
 
@@ -40,3 +41,109 @@ def kernels_bench():
     s_pal = jax.jit(lambda x: ops.sign_compress(x))
     us = time_fn(s_pal, p, iters=3, warmup=1)
     emit("kernels/sign_compress_pallas_interpret", us, "interpret=True (CPU)")
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter bus: ~100-leaf end-to-end dispatch-count microbench
+# ---------------------------------------------------------------------------
+
+def _paper_lm_like_tree(layers=12, key=0):
+    """~100-leaf tree shaped like an unrolled paper_lm layer stack:
+    per-layer qkv/o/mlp matrices + two norm vectors + odd-sized extras,
+    in two dtypes. Sizes are scaled down so CPU interpret mode stays
+    tractable while the LEAF STRUCTURE matches the real config."""
+    rng = np.random.default_rng(key)
+    tree = {"embed": jnp.asarray(rng.normal(size=(512, 96)), jnp.float32)}
+    wd_mask = {"embed": False}
+    for i in range(layers):
+        lyr = {
+            "wq": jnp.asarray(rng.normal(size=(96, 96)), jnp.float32),
+            "wkv": jnp.asarray(rng.normal(size=(96, 48)), jnp.float32),
+            "wo": jnp.asarray(rng.normal(size=(96, 96)), jnp.float32),
+            "w_in": jnp.asarray(rng.normal(size=(96, 130)), jnp.bfloat16),
+            "w_out": jnp.asarray(rng.normal(size=(130, 96)), jnp.bfloat16),
+            "ln1": jnp.ones((96,), jnp.float32),
+            "ln2": jnp.ones((96,), jnp.float32),
+            "bias": jnp.zeros((130,), jnp.float32),
+        }
+        tree[f"layer{i}"] = lyr
+        wd_mask[f"layer{i}"] = {k: k.startswith(("ln", "bias")) for k in lyr}
+    return tree, wd_mask
+
+
+def bucket_bench():
+    """Per-leaf vs bucketized dispatch for the three hot paths.
+
+    Reports dispatch counts (the flat-overhead term Golmant et al. show
+    erodes local SGD's advantage), wall time (CPU interpret — validates
+    plumbing, not TPU speed), bytes touched for the TPU HBM-bound
+    projection, and bytes-on-wire for the packed sync payload.
+    """
+    from repro.core.local_sgd import bucket_packed_mean
+    from repro.optim.sgd import apply_sgd, init_momentum
+
+    params, wd_mask = _paper_lm_like_tree()
+    leaves = jax.tree.leaves(params)
+    n_leaves = len(leaves)
+    layout = flatbuf.build_layout(params, wd_mask=wd_mask)
+    grads = jax.tree.map(lambda x: jnp.ones_like(x) * 0.01, params)
+    mom = init_momentum(params)
+
+    # --- optimizer: one fused launch per leaf vs per dtype bucket
+    def per_leaf(p, g, u):
+        flat_p, td = jax.tree.flatten(p)
+        outs = [ops.fused_sgd(pl_, gl, ul, lr=0.1, momentum=0.9,
+                              weight_decay=1e-4, nesterov=True)
+                for pl_, gl, ul in zip(flat_p, jax.tree.leaves(g),
+                                       jax.tree.leaves(u))]
+        return (td.unflatten([o[0] for o in outs]),
+                td.unflatten([o[1] for o in outs]))
+
+    bucketed = jax.jit(lambda p, g, u: apply_sgd(
+        p, g, u, lr=0.1, momentum_coef=0.9, weight_decay=1e-4, nesterov=True,
+        wd_mask=wd_mask, use_kernel=True))
+    per_leaf_j = jax.jit(per_leaf)
+
+    state_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    kernel_passes = state_bytes * 5            # r p,g,u; w p,u
+    # the bucketized path also pays the repack: flatten p,g,u (3 reads +
+    # 3 bucket writes) and unflatten p',u' (2+2) around the opaque
+    # pallas_call — 15 passes total vs 5 for an aligned per-leaf call.
+    # Folding them once into resident bucket state is a ROADMAP item.
+    bucket_passes = state_bytes * 15
+    us_b = time_fn(bucketed, params, grads, mom, iters=2, warmup=1)
+    emit("bucket/sgd_bucketized", us_b,
+         f"dispatches={layout.num_buckets};leaves={n_leaves};"
+         f"bytes={bucket_passes};tpu_hbm_bound_us={bucket_passes/819e9*1e6:.2f}"
+         f";kernel_bytes={kernel_passes}")
+    us_l = time_fn(per_leaf_j, params, grads, mom, iters=2, warmup=1)
+    emit("bucket/sgd_per_leaf", us_l,
+         f"dispatches={n_leaves};leaves={n_leaves};bytes={kernel_passes};"
+         f"tpu_hbm_bound_us={kernel_passes/819e9*1e6:.2f}")
+
+    # --- compressor: 2 launches per leaf vs 2 per bucket
+    from repro.core import compression as comp
+    comp_b = jax.jit(lambda t: comp.sign_compress(t, use_kernel=True))
+    us = time_fn(comp_b, grads, iters=2, warmup=1)
+    emit("bucket/sign_compress_bucketized", us,
+         f"dispatches={2 * layout.num_buckets};leaves={n_leaves}")
+
+    # --- sync payload: bytes-on-wire per sync, per-leaf vs bucketized
+    W = 4
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (W,) + x.shape), grads)
+    slay = flatbuf.build_layout(stacked, leading=1)
+    dense = sum(l.size * l.dtype.itemsize for l in leaves) * W
+    # per-leaf packed: each leaf pads its pack axis to 8 + one f32 scale
+    leaf_wire = sum((-(-l.size // 8)) + 4 for l in leaves) * W
+    # bucketized: contiguous payload (incl. sublane padding) + scale vector
+    bucket_wire = sum(r * flatbuf.LANE // 8 for r in slay.bucket_rows) * W \
+        + n_leaves * 4 * W
+    sync_b = jax.jit(lambda d: bucket_packed_mean(d))
+    us = time_fn(sync_b, stacked, iters=2, warmup=1)
+    emit("bucket/packed_mean_bucketized", us,
+         f"collectives={2 * slay.num_buckets};leaves={n_leaves};"
+         f"wire_bytes={bucket_wire};dense_bytes={dense}")
+    emit("bucket/packed_mean_per_leaf", 0.0,
+         f"collectives={2 * n_leaves};leaves={n_leaves};"
+         f"wire_bytes={leaf_wire};dense_bytes={dense} (count model)")

@@ -6,12 +6,29 @@ Public API tour:
     from repro import configs
     from repro.configs.base import RunConfig, LocalSGDConfig, OptimConfig
     from repro.core.local_sgd import make_local_sgd           # Alg. 1/2/5
+    from repro.core import flatbuf                            # flat parameter bus
     from repro.launch.steps import build_train, build_serve   # mesh-aware
     from repro.launch.train import fit                        # schedule driver
     from repro.launch.mesh import make_production_mesh        # 16x16 / 2x16x16
     from repro.models import lm                               # 6-family model zoo
     from repro.sharding.layout import (train_layout,
                                        fsdp_within_worker_layout)
+
+flatbuf — the flat parameter bus. Packs the parameter pytree into
+dtype-homogeneous contiguous (rows, 128) lane-layout buckets with static
+per-leaf metadata (offset, rows, true size, wd-mask bit, pack axis).
+Invariants: leaves in ``jax.tree.flatten`` order; one bucket per dtype
+in first-appearance order; each leaf zero-padded to a LANE multiple and
+its rows rounded to a SUBLANE (8) multiple so every leaf starts on a
+(8, 128) tile boundary; reductions divide by TRUE element counts, so
+padding never biases a scale or a norm. The three hot paths ride it:
+``optim/sgd.apply_sgd(use_kernel=True)`` — one fused Pallas launch per
+bucket (kernels/fused_bucket) with a per-row weight-decay mask;
+``core/compression.sign_compress(use_kernel=True)`` — per-leaf L1
+scales from one segmented reduction per bucket; and the sync paths
+``bucket_group_mean`` / ``make_packed_mean_flat`` — ONE collective per
+bucket instead of one per leaf. Within-worker-sharded leaves are marked
+non-bucketable (``flatbuf.bucketable_tree``) and stay per-leaf.
 
 See README.md / DESIGN.md / EXPERIMENTS.md.
 """

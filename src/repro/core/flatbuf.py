@@ -1,0 +1,229 @@
+"""Flat parameter bus: dtype-bucketed (rows, 128) views of a pytree.
+
+Motivation (see ISSUE 1 / Golmant et al. 2018): the per-leaf kernel +
+collective dispatch tax grows with the number of parameter tensors, not
+with bytes, eroding exactly the fixed-overhead advantage local SGD is
+supposed to buy.  This module packs a parameter pytree into a small
+number of dtype-homogeneous, contiguous lane-layout buckets so the three
+hot paths (optimizer update, sign compressor, sync collective) each run
+O(#dtypes) dispatches instead of O(#leaves).
+
+Layout invariants
+-----------------
+* Leaves are visited in ``jax.tree.flatten`` order; a bucket is created
+  per distinct dtype in order of first appearance.
+* Each leaf is flattened, zero-padded to a multiple of ``LANE`` (128)
+  and its row count rounded up to a multiple of ``SUBLANE`` (8), so
+  every leaf starts on a (8, 128) f32 tile boundary and the bucket shape
+  is always a whole number of TPU tiles.  The padding is paid ONCE per
+  flatten, not per kernel call as the old ``ops._to_2d`` path did.
+* Static per-leaf metadata (:class:`LeafSlot`) records bucket id, row
+  offset/extent, true element count, original shape, the weight-decay
+  mask bit and the sharding-derived wire-pack axis, so masks and
+  segmented reductions are precomputed numpy constants.
+* ``flatten``/``unflatten`` support a ``leading`` dim count for stacked
+  (W, ...) worker trees: the leading dims ride along untouched and the
+  layout is keyed on the per-worker shape.
+
+Padding elements are zero on flatten and dropped on unflatten; every
+reduction in this module divides by the TRUE element count, so padded
+zeros never bias a scale or a norm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128
+SUBLANE = 8        # f32 sublane; (SUBLANE, LANE) is one TPU tile
+
+
+@dataclass(frozen=True)
+class LeafSlot:
+    """Static metadata for one pytree leaf inside its bucket."""
+    index: int                 # position in tree-flatten order
+    bucket: int                # dtype bucket id
+    seg: int                   # segment id within the bucket (leaf order)
+    row_offset: int            # first row of this leaf in the bucket
+    rows: int                  # rows occupied (multiple of SUBLANE)
+    size: int                  # true (unpadded) element count
+    shape: tuple[int, ...]     # original per-worker shape
+    dtype: str                 # numpy dtype name
+    skip_wd: bool = False      # True => weight decay is masked off
+    pack_axis: int = -1        # sharding-derived wire-pack axis (per-leaf path)
+
+
+@dataclass(frozen=True)
+class FlatLayout:
+    """Static description of the bucketization of one pytree."""
+    treedef: Any
+    slots: tuple[LeafSlot, ...]
+    bucket_dtypes: tuple[str, ...]
+    bucket_rows: tuple[int, ...]
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_dtypes)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.slots)
+
+    def bucket_slots(self, b: int) -> list[LeafSlot]:
+        return [s for s in self.slots if s.bucket == b]
+
+    def bucket_bytes(self, b: int) -> int:
+        return self.bucket_rows[b] * LANE * np.dtype(self.bucket_dtypes[b]).itemsize
+
+    def total_bytes(self) -> int:
+        return sum(self.bucket_bytes(b) for b in range(self.num_buckets))
+
+
+def _leaf_rows(size: int) -> int:
+    rows = -(-max(size, 1) // LANE)
+    return -(-rows // SUBLANE) * SUBLANE
+
+
+def build_layout(tree, *, wd_mask=None, pack_axes=None, leading: int = 0) -> FlatLayout:
+    """Build the static bucket layout for ``tree``.
+
+    ``tree`` leaves may be arrays, tracers or ShapeDtypeStructs (anything
+    with ``.shape``/``.dtype``).  ``leading`` strips that many leading
+    dims (e.g. 1 for stacked (W, ...) worker trees) before recording the
+    per-worker shape.  ``wd_mask``/``pack_axes`` are optional pytrees
+    congruent with ``tree`` carrying the skip-weight-decay bit and the
+    sharding-derived wire-pack axis per leaf.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    wd = jax.tree.leaves(wd_mask) if wd_mask is not None else [False] * len(leaves)
+    pk = jax.tree.leaves(pack_axes) if pack_axes is not None else [-1] * len(leaves)
+    assert len(wd) == len(leaves) and len(pk) == len(leaves), \
+        (len(leaves), len(wd), len(pk))
+    dtypes: list[str] = []
+    rows_used: list[int] = []
+    segs: list[int] = []
+    slots: list[LeafSlot] = []
+    for i, leaf in enumerate(leaves):
+        shape = tuple(int(d) for d in leaf.shape[leading:])
+        dt = np.dtype(leaf.dtype).name
+        if dt not in dtypes:
+            dtypes.append(dt)
+            rows_used.append(0)
+            segs.append(0)
+        b = dtypes.index(dt)
+        size = int(np.prod(shape)) if shape else 1
+        rows = _leaf_rows(size)
+        slots.append(LeafSlot(index=i, bucket=b, seg=segs[b],
+                              row_offset=rows_used[b], rows=rows, size=size,
+                              shape=shape, dtype=dt, skip_wd=bool(wd[i]),
+                              pack_axis=int(pk[i])))
+        rows_used[b] += rows
+        segs[b] += 1
+    return FlatLayout(treedef=treedef, slots=tuple(slots),
+                      bucket_dtypes=tuple(dtypes), bucket_rows=tuple(rows_used))
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten
+# ---------------------------------------------------------------------------
+
+def flatten(layout: FlatLayout, tree, *, leading: int = 0) -> list:
+    """Pack ``tree`` into one (``*lead``, rows, 128) buffer per bucket.
+
+    Leaves are cast to their bucket dtype (a no-op when the tree matches
+    the layout's dtypes, e.g. params/grads/momentum share one layout).
+    """
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == layout.num_leaves, (len(leaves), layout.num_leaves)
+    buckets = []
+    for b in range(layout.num_buckets):
+        dt = layout.bucket_dtypes[b]
+        parts = []
+        for s in layout.bucket_slots(b):
+            x = leaves[s.index].astype(dt)
+            lead = x.shape[:leading]
+            flat = x.reshape(lead + (-1,))
+            pad = s.rows * LANE - s.size
+            if pad:
+                flat = jnp.pad(flat, [(0, 0)] * leading + [(0, pad)])
+            parts.append(flat)
+        buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+        lead = buf.shape[:leading]
+        buckets.append(buf.reshape(lead + (layout.bucket_rows[b], LANE)))
+    return buckets
+
+
+def unflatten(layout: FlatLayout, buckets: Sequence, *, leading: int = 0):
+    """Inverse of :func:`flatten`; drops per-leaf padding.
+
+    Leaves keep the dtype of the bucket they come out of, so a bucket
+    computed in f32 (e.g. a compressed payload) yields f32 leaves.
+    """
+    assert len(buckets) == layout.num_buckets
+    vals: list = [None] * layout.num_leaves
+    for b, buf in enumerate(buckets):
+        lead = buf.shape[:leading]
+        flat = buf.reshape(lead + (-1,))
+        for s in layout.bucket_slots(b):
+            off = s.row_offset * LANE
+            seg = flat[..., off:off + s.size]
+            vals[s.index] = seg.reshape(lead + s.shape)
+    return jax.tree.unflatten(layout.treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# Precomputed per-bucket constants (numpy; static under jit)
+# ---------------------------------------------------------------------------
+
+def wd_rows(layout: FlatLayout, b: int) -> np.ndarray:
+    """(rows, 1) f32 mask: 1.0 on rows whose leaf takes weight decay."""
+    m = np.zeros((layout.bucket_rows[b], 1), np.float32)
+    for s in layout.bucket_slots(b):
+        if not s.skip_wd:
+            m[s.row_offset:s.row_offset + s.rows] = 1.0
+    return m
+
+
+def row_segments(layout: FlatLayout, b: int) -> np.ndarray:
+    """(rows,) int32: bucket-local leaf segment id per row."""
+    seg = np.zeros((layout.bucket_rows[b],), np.int32)
+    for s in layout.bucket_slots(b):
+        seg[s.row_offset:s.row_offset + s.rows] = s.seg
+    return seg
+
+
+def segment_sizes(layout: FlatLayout, b: int) -> np.ndarray:
+    """(num_segments,) f32: TRUE element count per leaf (excludes padding)."""
+    slots = layout.bucket_slots(b)
+    out = np.zeros((len(slots),), np.float32)
+    for s in slots:
+        out[s.seg] = float(s.size)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding-derived metadata
+# ---------------------------------------------------------------------------
+
+def bucketable_tree(specs, layout):
+    """True where a leaf has NO within-worker-sharded dim.
+
+    Flattening a sharded leaf into a replicated bucket would force GSPMD
+    to gather the full tensor first (same failure mode pack_axes_tree
+    guards against), so such leaves stay on the per-leaf path.
+    """
+    from repro.models import base as mbase
+
+    def ok(ps: "mbase.ParamSpec") -> bool:
+        for a, n in zip(ps.axes, ps.shape):
+            r = None if a is None else layout.rule(a)
+            if r is not None and layout.axis_size(r) > 1 and \
+                    n % layout.axis_size(r) == 0:
+                return False
+        return True
+
+    return jax.tree.map(ok, specs, is_leaf=mbase.is_spec)

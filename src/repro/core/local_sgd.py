@@ -66,6 +66,58 @@ def group_mean(x, group: int):
     return jnp.broadcast_to(m, xg.shape).reshape(x.shape)
 
 
+def _bucketed_map(tree, bucketable, bucket_fn, leaf_fn, leaf_args=None):
+    """Shared scaffold of the bucketized sync paths.
+
+    Stacked (W, ...) leaves marked bucketable ride the flat bus:
+    ``bucket_fn(buf, layout, j)`` is applied to each (W, rows, 128)
+    dtype bucket (whether the result keeps the worker dim is inferred
+    from its rank). The rest take ``leaf_fn(leaf, arg)`` per leaf.
+    ``bucketable`` is an optional bool pytree; leaves marked False
+    (within-worker sharded — flattening them would force a gather) stay
+    on the per-leaf path.
+    """
+    from repro.core import flatbuf
+
+    leaves, treedef = jax.tree.flatten(tree)
+    flags = (jax.tree.leaves(bucketable) if bucketable is not None
+             else [True] * len(leaves))
+    args = (jax.tree.leaves(leaf_args) if leaf_args is not None
+            else [None] * len(leaves))
+    assert len(flags) == len(leaves) and len(args) == len(leaves)
+    out: list = [None] * len(leaves)
+    on = [i for i, m in enumerate(flags) if m]
+    for i, m in enumerate(flags):
+        if not m:
+            out[i] = leaf_fn(leaves[i], args[i])
+    if on:
+        sub = [leaves[i] for i in on]
+        layout = flatbuf.build_layout(sub, leading=1)
+        bufs = flatbuf.flatten(layout, sub, leading=1)
+        res = [bucket_fn(b, layout, j) for j, b in enumerate(bufs)]
+        vals = flatbuf.unflatten(layout, res,
+                                 leading=res[0].ndim - bufs[0].ndim + 1)
+        for i, v in zip(on, vals):
+            out[i] = v
+    return jax.tree.unflatten(treedef, out)
+
+
+def bucket_group_mean(params, group: int, bucketable=None):
+    """group_mean over dtype buckets: one mean per bucket, O(#dtypes)
+    collectives under GSPMD instead of one per leaf."""
+    return _bucketed_map(params, bucketable,
+                         lambda b, lay, j: group_mean(b, group),
+                         lambda x, _: group_mean(x, group))
+
+
+def bucket_worker_mean(delta, bucketable=None):
+    """mean over the worker dim per dtype bucket (dense sync payload):
+    one collective per bucket under GSPMD instead of one per leaf."""
+    return _bucketed_map(delta, bucketable,
+                         lambda b, lay, j: b.mean(axis=0),
+                         lambda x, _: x.mean(axis=0))
+
+
 def make_packed_mean(mesh, worker_axes: tuple[str, ...]):
     """1-bit wire mean over workers via an explicit shard_map boundary.
 
@@ -92,12 +144,89 @@ def make_packed_mean(mesh, worker_axes: tuple[str, ...]):
             return comp.unpack_signs(allp, alls, local.shape[1:],
                                      axis=pack_axis).mean(axis=0)
 
-        spec = P(axis)
-        g = jax.shard_map(f, mesh=mesh, in_specs=spec, out_specs=P(),
-                          check_vma=False, axis_names=set(worker_axes))
+        from repro.utils import shard_map_compat
+        g = shard_map_compat(f, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                             manual_axes=worker_axes)
         return g(d)
 
     return packed_mean
+
+
+def make_packed_mean_flat(mesh, worker_axes: tuple[str, ...]):
+    """Bucket-level 1-bit wire mean: ONE uint8 all_gather (+ one tiny
+    f32 scale gather) per dtype bucket instead of one pair per leaf.
+
+    The bucket is a contiguous (W, rows, 128) buffer (core/flatbuf);
+    signs pack 8-per-uint8 along the 128-lane dim (always unsharded —
+    the worker dim is the only sharded dim of a bucket), per-leaf L1
+    scales come from one segmented reduction over row |x| sums, and
+    unpack + averaging stay shard-local after the gather.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axis = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def packed_mean_flat(bucket, seg_ids, seg_sizes):
+        W = bucket.shape[0]
+        seg_ids_j = jnp.asarray(seg_ids)
+        sizes_j = jnp.asarray(seg_sizes)
+
+        def f(local):                     # (1, rows, 128)
+            x = local.astype(jnp.float32)[0]
+            packed, scales = comp.pack_bucket_signs(x, seg_ids_j, sizes_j)
+            allp = jax.lax.all_gather(packed, axis)             # uint8 on wire
+            alls = jax.lax.all_gather(scales, axis)
+            allp = allp.reshape((W,) + packed.shape)
+            alls = alls.reshape(W, -1)
+            return comp.unpack_bucket_signs(allp, alls, seg_ids_j).mean(axis=0)
+
+        from repro.utils import shard_map_compat
+        # fully manual: bucketable leaves are replicated within a worker
+        # by construction, so no within-worker dim needs GSPMD (and jax
+        # 0.4.x partial-auto aborts in the XLA partitioner)
+        g = shard_map_compat(f, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                             manual_axes=None)
+        return g(bucket)
+
+    return packed_mean_flat
+
+
+def _packed_mean_flat_local(bucket, seg_ids, seg_sizes):
+    """Meshless equivalent of make_packed_mean_flat (CPU tests): the
+    same pack/unpack helpers, vmapped over workers instead of gathered."""
+    seg_ids_j = jnp.asarray(seg_ids)
+    sizes_j = jnp.asarray(seg_sizes)
+    x = bucket.astype(jnp.float32)                              # (W, rows, 128)
+    packed, scales = jax.vmap(
+        lambda xw: comp.pack_bucket_signs(xw, seg_ids_j, sizes_j))(x)
+    return comp.unpack_bucket_signs(packed, scales, seg_ids_j).mean(axis=0)
+
+
+def bucket_packed_mean(delta, bucketable=None, *, flat_fn=None,
+                       leaf_fn=None, axes_tree=None):
+    """Wire-pack the stacked delta through the flat bus.
+
+    Bucketable leaves ride one packed gather per dtype bucket via
+    ``flat_fn`` (``make_packed_mean_flat``; meshless fallback when
+    None); the rest use the per-leaf ``leaf_fn`` with its sharding-
+    derived pack axis. Returns the single-copy averaged tree.
+    """
+    from repro.core import flatbuf
+
+    flat_fn = flat_fn or _packed_mean_flat_local
+    if leaf_fn is None:
+        def leaf_fn(d, axis=-1):
+            packed, scale = comp.pack_signs(d, axis=axis)
+            return comp.unpack_signs(packed, scale, d.shape[1:],
+                                     axis=axis).mean(axis=0)
+    if axes_tree is None:
+        axes_tree = jax.tree.map(lambda _: -1, delta)
+    return _bucketed_map(
+        delta, bucketable,
+        lambda b, lay, j: flat_fn(b, flatbuf.row_segments(lay, j),
+                                  flatbuf.segment_sizes(lay, j)),
+        lambda d, axis: leaf_fn(d, -1 if axis is None else axis),
+        leaf_args=axes_tree)
 
 
 def pack_axes_tree(specs, layout):
@@ -120,11 +249,20 @@ def pack_axes_tree(specs, layout):
 
 def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                    wd_mask=None, use_kernel: bool = False,
-                   packed_mean_fn: Callable | None = None):
+                   packed_mean_fn: Callable | None = None,
+                   packed_mean_flat_fn: Callable | None = None,
+                   bucket_sync: bool = True, bucketable=None):
     """Build (init, local_step, sync) for a single-worker ``loss_fn``.
 
     loss_fn(params, batch) -> (loss, metrics dict). The returned
     ``local_step`` takes per-worker-stacked params/batch.
+
+    ``bucket_sync`` routes the sync averages through the flat parameter
+    bus (one collective per dtype bucket; core/flatbuf) —
+    ``bucket_sync=False`` keeps the per-leaf path (used by the
+    equivalence tests). ``bucketable`` marks within-worker-sharded
+    leaves that must stay per-leaf; ``packed_mean_flat_fn`` is the
+    mesh-pinned bucket wire-pack from :func:`make_packed_mean_flat`.
     """
     ls = run.local_sgd
     opt = run.optim
@@ -180,7 +318,10 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         """Average within worker groups; group=None => all W workers."""
         g = group or W
         if not needs_anchor(ls):
-            p = jax.tree.map(lambda x: group_mean(x, g), state.params)
+            if bucket_sync:
+                p = bucket_group_mean(state.params, g, bucketable)
+            else:
+                p = jax.tree.map(lambda x: group_mean(x, g), state.params)
             return LocalSGDState(params=p, momentum=state.momentum,
                                  anchor=None, global_u=None,
                                  ef_memory=None, step=state.step, rng=state.rng)
@@ -189,22 +330,32 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         delta = jax.tree.map(lambda a, p: a[None] - p, state.anchor, state.params)
         ef = state.ef_memory
         if ls.sync_compression == "sign":
-            delta = comp.sign_compress(delta, use_kernel=use_kernel)
+            delta = comp.sign_compress(delta, use_kernel=use_kernel,
+                                       bucketable=bucketable)
         elif ls.sync_compression == "ef_sign":
-            delta, ef = comp.ef_compress(delta, ef)
+            delta, ef = comp.ef_compress(delta, ef, use_kernel=use_kernel,
+                                         bucketable=bucketable)
         if ls.sync_compression != "none" and ls.wire_pack:
-            # 1-bit wire format (see make_packed_mean). Falls back to the
-            # local (meshless) equivalent in CPU tests.
+            # 1-bit wire format. Bucketized: one packed gather per dtype
+            # bucket (make_packed_mean_flat; meshless fallback in CPU
+            # tests). Per-leaf path kept for sharded leaves / equivalence.
             pm, axes_tree = packed_mean_fn or (None, None)
-            if pm is None:
-                def pm(d, axis=-1):
-                    packed, scale = comp.pack_signs(d, axis=axis)
-                    return comp.unpack_signs(packed, scale, d.shape[1:],
-                                             axis=axis).mean(axis=0)
-            if axes_tree is None:
-                dbar = jax.tree.map(lambda d: pm(d, -1), delta)
+            if bucket_sync:
+                dbar = bucket_packed_mean(delta, bucketable,
+                                          flat_fn=packed_mean_flat_fn,
+                                          leaf_fn=pm, axes_tree=axes_tree)
             else:
-                dbar = jax.tree.map(pm, delta, axes_tree)
+                if pm is None:
+                    def pm(d, axis=-1):
+                        packed, scale = comp.pack_signs(d, axis=axis)
+                        return comp.unpack_signs(packed, scale, d.shape[1:],
+                                                 axis=axis).mean(axis=0)
+                if axes_tree is None:
+                    dbar = jax.tree.map(lambda d: pm(d, -1), delta)
+                else:
+                    dbar = jax.tree.map(pm, delta, axes_tree)
+        elif bucket_sync:
+            dbar = bucket_worker_mean(delta, bucketable)
         else:
             dbar = jax.tree.map(lambda d: d.mean(axis=0), delta)
 

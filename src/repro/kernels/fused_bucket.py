@@ -1,0 +1,147 @@
+"""Pallas TPU kernels over flat parameter-bus buckets (see core/flatbuf).
+
+One bucket is a contiguous (rows, 128) dtype-homogeneous buffer holding
+many parameter leaves back to back, each starting on an (8, 128) tile
+boundary.  These kernels replace the per-leaf launches of fused_sgd.py /
+sign_compress.py with ONE launch per bucket:
+
+  * ``fused_sgd_bucket_2d`` — the fused Nesterov-SGD update with a
+    per-ROW weight-decay mask operand, so leaves with masked-off decay
+    (norms/biases) share the launch with decayed matrices.
+  * ``sq_sum_2d``           — masked sum of squares (global-norm clip).
+  * ``row_abs_sum_2d``      — per-row |x| sums; the per-leaf L1 scales
+    of the sign compressor finish as one tiny segmented reduction.
+  * ``scale_sign_rows_2d``  — y = sign(x) * scale[row], the segment-
+    aware second pass of the compressor.
+
+Reduction kernels mask the final partial grid block explicitly: the
+grid over ``cdiv(rows, BLOCK_ROWS)`` reads out-of-bounds rows in its
+last block and those values are undefined (NaN in interpret mode) — an
+unmasked reduction silently folds them in once rows > BLOCK_ROWS.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256          # (256, 128) f32 tile = 128 KiB per operand
+
+
+def _row_mask(shape, block_idx: int, br: int, rows: int):
+    """Boolean (br, ...) mask: True on rows that exist in the buffer."""
+    rid = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + block_idx * br
+    return rid < rows
+
+
+def _sgd_kernel(lr_ref, wd_ref, p_ref, g_ref, u_ref, po_ref, uo_ref, *,
+                momentum: float, weight_decay: float, nesterov: bool):
+    lr = lr_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    if weight_decay:
+        # wd_ref is the (br, 1) per-row mask: 1.0 on decayed leaves' rows
+        g = g + (weight_decay * wd_ref[...]) * p
+    u_new = momentum * u + g
+    step = momentum * u_new + g if nesterov else u_new
+    po_ref[...] = (p - lr * step).astype(po_ref.dtype)
+    uo_ref[...] = u_new.astype(uo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
+                                             "nesterov", "interpret"))
+def fused_sgd_bucket_2d(p, g, u, lr, wd_row, *, momentum: float,
+                        weight_decay: float, nesterov: bool,
+                        interpret: bool = True):
+    """One fused SGD launch over a whole bucket.
+
+    p, g, u: (rows, 128) same dtype; lr: (1, 1) f32 (SMEM, may be
+    traced); wd_row: (rows, 1) f32 weight-decay row mask.
+    Returns (p', u').
+    """
+    rows = p.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sgd_kernel, momentum=momentum,
+                          weight_decay=weight_decay, nesterov=nesterov),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), mspec,
+                  spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(u.shape, u.dtype)],
+        interpret=interpret,
+    )(lr, wd_row, p, g, u)
+
+
+def _sq_sum_kernel(x_ref, o_ref, *, rows, br):
+    x = x_ref[...].astype(jnp.float32)
+    x = jnp.where(_row_mask(x.shape, pl.program_id(0), br, rows), x, 0.0)
+    o_ref[0, 0] = jnp.sum(x * x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sq_sum_2d(x, *, interpret: bool = True):
+    """sum(x^2) over a bucket (f32 accumulate) — one HBM read."""
+    rows = x.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    n = pl.cdiv(rows, br)
+    out = pl.pallas_call(
+        functools.partial(_sq_sum_kernel, rows=rows, br=br),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((br, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out.sum()
+
+
+def _row_abs_sum_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    # per-row (lane-only) reduction: out-of-bounds rows in the final
+    # partial block land on discarded output rows, so no masking needed
+    o_ref[...] = jnp.sum(jnp.abs(x), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def row_abs_sum_2d(x, *, interpret: bool = True):
+    """(rows, 1) f32 per-row |x| sums — one HBM read of the bucket."""
+    rows = x.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    return pl.pallas_call(
+        _row_abs_sum_kernel,
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((br, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _scale_sign_rows_kernel(x_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (jnp.sign(x) * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scale_sign_rows_2d(x, scale_row, *, interpret: bool = True):
+    """y = sign(x) * scale_row (per-row scales; second compressor pass)."""
+    rows = x.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        _scale_sign_rows_kernel,
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[spec, mspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x, scale_row)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_bucket as _fb
 from repro.kernels import fused_sgd as _fs
 from repro.kernels import sign_compress as _sc
 
@@ -51,7 +52,12 @@ def fused_sgd(p, g, u, *, lr, momentum: float, weight_decay: float = 0.0,
 
 
 def sign_compress(x, *, interpret: bool | None = None):
-    """sign(x) * mean|x| (the Alg. 3/4 compressor)."""
+    """sign(x) * mean|x| (the Alg. 3/4 compressor).
+
+    The scale divides by the TRUE element count (``x.size``), not the
+    lane-padded buffer size, so tensors whose size is not a multiple of
+    128 get an unbiased L1 scale (regression-tested at size 130).
+    """
     if interpret is None:
         interpret = not _on_tpu()
     x2, pad = _to_2d(x)
@@ -59,6 +65,56 @@ def sign_compress(x, *, interpret: bool | None = None):
     scale = (total / x.size).reshape(1, 1)
     y = _sc.scale_sign_2d(x2, scale, interpret=interpret)
     return _from_2d(y, pad, x.shape).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bucket-level entry points (flat parameter bus; see core/flatbuf.py)
+# ---------------------------------------------------------------------------
+
+def bucket_fused_sgd(p2, g2, u2, wd_row, *, lr, momentum: float,
+                     weight_decay: float, nesterov: bool = True,
+                     interpret: bool | None = None):
+    """One fused SGD launch over a whole (rows, 128) bucket.
+
+    ``wd_row`` is the (rows, 1) f32 per-row weight-decay mask from
+    ``flatbuf.wd_rows``. Returns (p2', u2')."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return _fb.fused_sgd_bucket_2d(p2, g2, u2, lr2, jnp.asarray(wd_row),
+                                   momentum=momentum,
+                                   weight_decay=weight_decay,
+                                   nesterov=nesterov, interpret=interpret)
+
+
+def bucket_sq_sum(x2, *, interpret: bool | None = None):
+    """sum(x^2) over a bucket (f32) — one fused HBM pass."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _fb.sq_sum_2d(x2, interpret=interpret)
+
+
+def bucket_sign_compress(x2, seg_ids, seg_sizes, *, interpret: bool | None = None):
+    """Segment-aware sign compressor over a bucket.
+
+    ``seg_ids`` (rows,) int32 maps each row to its leaf segment and
+    ``seg_sizes`` (num_segments,) f32 holds TRUE element counts (both
+    static numpy constants from flatbuf) — per-leaf L1 scales come from
+    ONE segmented reduction over per-row |x| sums, and padding (which
+    contributes 0 to the sums) never biases a scale.
+
+    Returns (y2 f32, scales (num_segments,) f32).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    seg_ids = jnp.asarray(seg_ids)
+    row_sums = _fb.row_abs_sum_2d(x2, interpret=interpret)
+    totals = jax.ops.segment_sum(row_sums[:, 0], seg_ids,
+                                 num_segments=int(seg_sizes.shape[0]))
+    scales = totals / jnp.asarray(seg_sizes)
+    y = _fb.scale_sign_rows_2d(x2, scales[seg_ids][:, None],
+                               interpret=interpret)
+    return y, scales
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -20,8 +20,14 @@ LANE = 128
 BLOCK_ROWS = 256
 
 
-def _abs_sum_kernel(x_ref, o_ref):
-    o_ref[0, 0] = jnp.sum(jnp.abs(x_ref[...].astype(jnp.float32)))
+def _abs_sum_kernel(x_ref, o_ref, *, rows, br):
+    from repro.kernels.fused_bucket import _row_mask
+    x = x_ref[...].astype(jnp.float32)
+    # mask the final partial grid block: its out-of-bounds rows are
+    # undefined (NaN in interpret mode) and an unmasked reduction folds
+    # them in whenever rows is not a multiple of BLOCK_ROWS
+    mask = _row_mask(x.shape, pl.program_id(0), br, rows)
+    o_ref[0, 0] = jnp.sum(jnp.where(mask, jnp.abs(x), 0.0))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -30,7 +36,7 @@ def abs_sum_2d(x, *, interpret: bool = True):
     br = min(BLOCK_ROWS, rows)
     n = pl.cdiv(rows, br)
     out = pl.pallas_call(
-        _abs_sum_kernel,
+        functools.partial(_abs_sum_kernel, rows=rows, br=br),
         grid=(n,),
         in_specs=[pl.BlockSpec((br, LANE), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),

@@ -82,8 +82,31 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         return lm.loss_fn(cfg, params, batch, lay=lay_for_model, scan=True,
                           remat=run.remat)
 
+    # Flat-bus sync wiring: within-worker-sharded leaves stay per-leaf
+    # (bucketable=False); the rest ride one collective per dtype bucket.
+    from repro.core import flatbuf
+    from repro.core.local_sgd import (make_packed_mean, make_packed_mean_flat,
+                                      pack_axes_tree)
+    bucketable = None
+    pm = None
+    pm_flat = None
+    if mesh is not None and layout is not None:
+        lay_m = layout
+        bucketable = flatbuf.bucketable_tree(specs, lay_m)
+        if run.local_sgd.wire_pack and run.local_sgd.sync_compression != "none":
+            from repro.utils import partial_auto_shard_map_supported
+            if partial_auto_shard_map_supported():
+                # per-leaf path for within-worker-sharded leaves; on jax
+                # 0.4.x it stays None -> plain GSPMD-hint pack/unpack
+                pm = (make_packed_mean(mesh, layout.worker_axes),
+                      pack_axes_tree(specs, lay_m))
+            pm_flat = make_packed_mean_flat(mesh, layout.worker_axes)
+
     init, local_step, sync = make_local_sgd(run, loss, num_workers=num_workers,
-                                            wd_mask=wd_mask, use_kernel=use_kernel)
+                                            wd_mask=wd_mask, use_kernel=use_kernel,
+                                            packed_mean_fn=pm,
+                                            packed_mean_flat_fn=pm_flat,
+                                            bucketable=bucketable)
 
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
                          specs=specs, init=init, local_step=local_step, sync=sync)

@@ -3,6 +3,15 @@
 This is the paper's *local* optimizer: one independent instance per
 worker (momentum buffers live inside the per-worker stacked state, so
 "local momentum", App. B.4.1, falls out of the vmap).
+
+Two dispatch strategies:
+
+* ``use_kernel=False`` — pure-jnp per-leaf reference update.
+* ``use_kernel=True``  — the flat parameter bus: params/grads/momentum
+  are packed into dtype buckets (core/flatbuf) and updated with ONE
+  fused Pallas launch per bucket, with the weight-decay mask carried as
+  a per-row operand.  The grad-clip global norm is likewise one fused
+  sum-of-squares reduction per bucket instead of one per leaf.
 """
 from __future__ import annotations
 
@@ -40,20 +49,45 @@ def _leaf_update(p, g, u, skip_wd, *, lr, momentum, wd, nesterov):
     return p_new.astype(p.dtype), u_new.astype(u.dtype)
 
 
+def _apply_sgd_bucketed(params, grads, momentum, wd_mask, *, lr,
+                        momentum_coef, weight_decay, nesterov, grad_clip):
+    """Flat-bus path: O(#dtype buckets) kernel launches, not O(#leaves)."""
+    from repro.core import flatbuf
+    from repro.kernels import ops as kops
+
+    layout = flatbuf.build_layout(params, wd_mask=wd_mask)
+    gb = flatbuf.flatten(layout, grads)
+    if grad_clip:
+        gn = jnp.sqrt(sum(kops.bucket_sq_sum(g) for g in gb))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
+        gb = [(g * scale).astype(g.dtype) for g in gb]
+    pb = flatbuf.flatten(layout, params)
+    ub = flatbuf.flatten(layout, momentum)
+    po, uo = [], []
+    for b in range(layout.num_buckets):
+        p2, u2 = kops.bucket_fused_sgd(pb[b], gb[b], ub[b],
+                                       flatbuf.wd_rows(layout, b), lr=lr,
+                                       momentum=momentum_coef,
+                                       weight_decay=weight_decay,
+                                       nesterov=nesterov)
+        po.append(p2)
+        uo.append(u2)
+    return flatbuf.unflatten(layout, po), flatbuf.unflatten(layout, uo)
+
+
 def apply_sgd(params, grads, momentum, *, lr, momentum_coef: float,
               weight_decay: float, nesterov: bool, wd_mask=None,
               grad_clip: float = 0.0, use_kernel: bool = False):
-    grads = clip_by_global_norm(grads, grad_clip)
     if wd_mask is None:
         wd_mask = jax.tree.map(lambda _: False, params)
     if use_kernel:
-        from repro.kernels import ops as kops
-        def upd(p, g, u, skip):
-            return kops.fused_sgd(p, g, u, lr=lr, momentum=momentum_coef,
-                                  weight_decay=0.0 if skip else weight_decay,
-                                  nesterov=nesterov)
-    else:
-        def upd(p, g, u, skip):
-            return _leaf_update(p, g, u, skip, lr=lr, momentum=momentum_coef,
-                                wd=weight_decay, nesterov=nesterov)
+        return _apply_sgd_bucketed(params, grads, momentum, wd_mask, lr=lr,
+                                   momentum_coef=momentum_coef,
+                                   weight_decay=weight_decay,
+                                   nesterov=nesterov, grad_clip=grad_clip)
+    grads = clip_by_global_norm(grads, grad_clip)
+
+    def upd(p, g, u, skip):
+        return _leaf_update(p, g, u, skip, lr=lr, momentum=momentum_coef,
+                            wd=weight_decay, nesterov=nesterov)
     return tree_map_pairs(upd, params, grads, momentum, wd_mask)

@@ -27,7 +27,7 @@ from repro.roofline.hlo import parse_collectives
 
 
 def measure_sync(arch: str, *, compression: str, wire_pack: bool,
-                 shape_name: str = "train_4k"):
+                 bucket_sync: bool = True, shape_name: str = "train_4k"):
     mesh = make_production_mesh()
     cfg = configs.get(arch)
     shape = INPUT_SHAPES[shape_name]
@@ -42,11 +42,19 @@ def measure_sync(arch: str, *, compression: str, wire_pack: bool,
     def loss(p, b):  # sync never traces the loss
         raise NotImplementedError
 
-    from repro.core.local_sgd import make_packed_mean, pack_axes_tree
+    from repro.core import flatbuf
+    from repro.core.local_sgd import (make_packed_mean, make_packed_mean_flat,
+                                      pack_axes_tree)
+    from repro.utils import partial_auto_shard_map_supported
     pm = ((make_packed_mean(mesh, lay.worker_axes),
-           pack_axes_tree(specs, lay_m)) if wire_pack else None)
-    init, local_step, sync = make_local_sgd(run, loss, num_workers=W,
-                                            packed_mean_fn=pm)
+           pack_axes_tree(specs, lay_m))
+          if wire_pack and partial_auto_shard_map_supported() else None)
+    pm_flat = (make_packed_mean_flat(mesh, lay.worker_axes)
+               if wire_pack and bucket_sync else None)
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, packed_mean_fn=pm,
+        packed_mean_flat_fn=pm_flat, bucket_sync=bucket_sync,
+        bucketable=flatbuf.bucketable_tree(specs, lay_m))
     ssh = _named(mesh, state_partition_specs(specs, lay_m, run))
     jsync = jax.jit(sync, static_argnames=("group",),
                     in_shardings=(ssh,), out_shardings=ssh)
@@ -65,7 +73,8 @@ def measure_sync(arch: str, *, compression: str, wire_pack: bool,
         compiled = jsync.lower(state).compile()
     s = parse_collectives(compiled.as_text())
     return {"arch": arch, "compression": compression, "wire_pack": wire_pack,
-            "workers": W, "coll_bytes": s.total_bytes(), "by_op": s.by_op(),
+            "bucket_sync": bucket_sync, "workers": W,
+            "coll_bytes": s.total_bytes(), "by_op": s.by_op(),
             "count": s.count()}
 
 
@@ -74,8 +83,15 @@ def main():
     ap.add_argument("--arch", default="deepseek-v2-lite-16b")
     args = ap.parse_args()
     results = []
-    for compression, pack in [("none", False), ("sign", False), ("sign", True)]:
-        r = measure_sync(args.arch, compression=compression, wire_pack=pack)
+    # bucket_sync=False rows expose the per-leaf dispatch tax the flat
+    # parameter bus removes (one collective per dtype bucket)
+    for compression, pack, bucket in [("none", False, False),
+                                      ("none", False, True),
+                                      ("sign", False, True),
+                                      ("sign", True, False),
+                                      ("sign", True, True)]:
+        r = measure_sync(args.arch, compression=compression, wire_pack=pack,
+                         bucket_sync=bucket)
         results.append(r)
         print(json.dumps(r))
     path = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -4,6 +4,53 @@ from __future__ import annotations
 import jax
 
 
+def partial_auto_shard_map_supported() -> bool:
+    """True when shard_map can leave some mesh axes GSPMD-managed.
+
+    jax 0.4.x lowers partial-auto shard_map into an XLA
+    ``IsManualSubgroup`` check failure (hard abort), so callers that
+    would pin a collective over only the worker axes of a leaf that is
+    ALSO sharded within the worker must fall back to plain GSPMD
+    sharding hints there (correct, but the gather may move
+    uncompressed bytes; roofline/sync_probe quantifies the cost)."""
+    return hasattr(jax, "shard_map")
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs,
+                     manual_axes: tuple[str, ...] | None = None):
+    """shard_map across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=, axis_names=)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., check_rep=,
+    auto=)`` where ``auto`` is the complement of the manual axes.
+
+    ``manual_axes``: mesh axes the collective is pinned over; the rest
+    stay GSPMD-managed (partial-auto). ``None`` => fully manual over
+    ALL mesh axes — required when the operands are replicated within a
+    worker anyway (flat-bus buckets), and the only mode that lowers on
+    jax 0.4.x, whose partial-auto partitioning hits an XLA
+    ``IsManualSubgroup`` check failure.
+    """
+    manual = tuple(mesh.axis_names) if manual_axes is None else manual_axes
+    if partial_auto_shard_map_supported():
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names=set(manual))
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(a for a in mesh.axis_names if a not in manual)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: 0.4.x returns a
+    per-device LIST of dicts, newer versions a single dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def tree_map_pairs(fn, tree, *rest):
     """Map ``fn`` (returning a 2-tuple) over trees; return two trees.
 

@@ -1,0 +1,79 @@
+"""Subprocess helper for test_bucket_sync: lower `sync` on a forced
+8-device host platform and report the collective mix as JSON.
+
+Usage: python _bucket_sync_probe.py {bucket|leaf}
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core.local_sgd import (LocalSGDState, make_local_sgd,
+                                  make_packed_mean, make_packed_mean_flat)
+from repro.roofline.hlo import parse_collectives
+
+SHAPES = {"w1": (64, 33), "w2": (33,), "w3": (16, 7), "w4": (130,),
+          "w5": (8, 8)}
+W = 8
+
+
+def main():
+    bucket = sys.argv[1] == "bucket"
+    mesh = Mesh(np.array(jax.devices()[:W]), ("data",))
+    run = RunConfig(
+        model=ModelConfig(name="probe", family="dense", citation=""),
+        shape=InputShape("t", 8, W, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, sync_compression="sign",
+                                 wire_pack=True),
+        optim=OptimConfig(lr_decay_steps=()))
+
+    def loss(p, b):   # sync never traces the loss
+        raise NotImplementedError
+
+    pm = (make_packed_mean(mesh, ("data",)), None)
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, packed_mean_fn=pm,
+        packed_mean_flat_fn=make_packed_mean_flat(mesh, ("data",)) if bucket
+        else None,
+        bucket_sync=bucket)
+
+    stacked = {k: jax.ShapeDtypeStruct((W,) + s, jnp.float32)
+               for k, s in SHAPES.items()}
+    single = {k: jax.ShapeDtypeStruct(s, jnp.float32)
+              for k, s in SHAPES.items()}
+    state = LocalSGDState(params=stacked, momentum=stacked, anchor=single,
+                          global_u=None, ef_memory=None,
+                          step=jax.ShapeDtypeStruct((), jnp.int32),
+                          rng=jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+    ssh = LocalSGDState(
+        params={k: NamedSharding(mesh, P("data")) for k in SHAPES},
+        momentum={k: NamedSharding(mesh, P("data")) for k in SHAPES},
+        anchor={k: NamedSharding(mesh, P()) for k in SHAPES},
+        global_u=None, ef_memory=None,
+        step=NamedSharding(mesh, P()), rng=NamedSharding(mesh, P()))
+    jsync = jax.jit(sync, static_argnames=("group",),
+                    in_shardings=(ssh,), out_shardings=ssh)
+    with mesh:
+        compiled = jsync.lower(state).compile()
+    s = parse_collectives(compiled.as_text())
+    gathers = [o for o in s.ops if o.op == "all-gather"]
+    print(json.dumps({
+        "mode": "bucket" if bucket else "leaf",
+        "num_leaves": len(SHAPES),
+        "all_gather_count": len(gathers),
+        "all_gather_bytes": sum(o.result_bytes for o in gathers),
+        "by_op": s.by_op(),
+        "count": s.count(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

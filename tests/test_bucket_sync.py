@@ -1,0 +1,42 @@
+"""Collective-count acceptance test for the flat parameter bus.
+
+Lowers `sync` (sign compression + 1-bit wire pack) on a forced 8-device
+host platform in a subprocess (the suite itself must keep its single
+real CPU device; see conftest) and parses the HLO, as
+roofline/sync_probe.py does: the bucketized path must issue ONE uint8
+payload all_gather + ONE scale all_gather per dtype bucket — O(#dtypes)
+— while the per-leaf path issues a pair per leaf.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(_HERE, "..", "src")
+
+
+def _probe(mode: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(_SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(_HERE, "_bucket_sync_probe.py"), mode],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_packed_mean_one_gather_per_bucket():
+    bucket = _probe("bucket")
+    leaf = _probe("leaf")
+    # 5 f32 leaves -> one bucket -> exactly one payload + one scale gather
+    assert bucket["num_leaves"] == 5
+    assert bucket["all_gather_count"] == 2
+    # per-leaf path pays the O(#leaves) dispatch tax: a pair per leaf
+    assert leaf["all_gather_count"] == 2 * leaf["num_leaves"]
+    # and the bucket payload still moves uint8, not f32: well under the
+    # dense f32 wire size (5 padded leaves * 1024 elts * 4 B * 8 workers)
+    assert bucket["all_gather_bytes"] < 5 * 1024 * 4 * 8 / 4

@@ -1,6 +1,11 @@
 """Data pipeline: disjoint partition + global reshuffle (paper App. A.4.1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: skip only the property tests
+    from _hypothesis_stub import given, settings, st
 
 from repro.data.partition import ShardedBatches, epoch_partition
 from repro.data.synthetic import cluster_classification, lm_examples, markov_lm

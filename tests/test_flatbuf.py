@@ -1,0 +1,360 @@
+"""Flat parameter bus (core/flatbuf + kernels/fused_bucket).
+
+Covers the ISSUE-1 acceptance criteria: layout/round-trip invariants,
+bucketized apply_sgd and sign/EF-sign sync trajectories identical to the
+per-leaf path (including wd-mask and grad-clip cases), and flat
+checkpoint round-trips through unflatten.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import load_meta, restore_flat, save_flat
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core import compression as comp
+from repro.core import flatbuf
+from repro.core.local_sgd import make_local_sgd
+from repro.kernels import ops, ref
+from repro.optim.sgd import apply_sgd, init_momentum
+
+
+def _tree(key=0):
+    """Multi-dtype tree with odd sizes, a scalar and a size-130 leaf."""
+    rng = np.random.default_rng(key)
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    return {
+        "emb": r(33, 7),
+        "w130": r(130),           # not a multiple of 128 (padding-bias case)
+        "norm": r(5),
+        "bias": jnp.zeros((3,)),
+        "h16": jnp.asarray(rng.normal(size=(16, 9)), jnp.bfloat16),
+        "scalar": r(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layout / round-trip invariants
+# ---------------------------------------------------------------------------
+
+def test_layout_invariants():
+    tree = _tree()
+    lay = flatbuf.build_layout(tree)
+    # one bucket per dtype, in first-appearance flatten order
+    assert lay.bucket_dtypes == ("float32", "bfloat16")
+    for b in range(lay.num_buckets):
+        slots = lay.bucket_slots(b)
+        # leaves laid back-to-back, each starting on a sublane boundary
+        off = 0
+        for s in slots:
+            assert s.row_offset == off
+            assert s.rows % flatbuf.SUBLANE == 0
+            assert s.rows * flatbuf.LANE >= s.size
+            off += s.rows
+        assert off == lay.bucket_rows[b]
+        # segment ids cover rows; sizes are TRUE element counts
+        seg = flatbuf.row_segments(lay, b)
+        sizes = flatbuf.segment_sizes(lay, b)
+        assert seg.shape == (lay.bucket_rows[b],)
+        for s in slots:
+            assert (seg[s.row_offset:s.row_offset + s.rows] == s.seg).all()
+            assert sizes[s.seg] == s.size
+
+
+def test_flatten_roundtrip():
+    tree = _tree()
+    lay = flatbuf.build_layout(tree)
+    bufs = flatbuf.flatten(lay, tree)
+    assert len(bufs) == lay.num_buckets
+    for b, buf in enumerate(bufs):
+        assert buf.shape == (lay.bucket_rows[b], flatbuf.LANE)
+        assert buf.dtype == jnp.dtype(lay.bucket_dtypes[b])
+    out = flatbuf.unflatten(lay, bufs)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k], np.float32),
+                                      np.asarray(out[k], np.float32))
+        assert out[k].shape == tree[k].shape and out[k].dtype == tree[k].dtype
+
+
+def test_flatten_roundtrip_stacked():
+    W = 4
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (W,) + x.shape) +
+        jnp.arange(W, dtype=x.dtype).reshape((W,) + (1,) * x.ndim), _tree())
+    lay = flatbuf.build_layout(tree, leading=1)
+    bufs = flatbuf.flatten(lay, tree, leading=1)
+    for b, buf in enumerate(bufs):
+        assert buf.shape == (W, lay.bucket_rows[b], flatbuf.LANE)
+    out = flatbuf.unflatten(lay, bufs, leading=1)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k], np.float32),
+                                      np.asarray(out[k], np.float32))
+
+
+def test_wd_rows_mask():
+    tree = _tree()
+    wd = {"emb": False, "w130": False, "norm": True, "bias": True,
+          "h16": False, "scalar": True}
+    lay = flatbuf.build_layout(tree, wd_mask=wd)
+    m = flatbuf.wd_rows(lay, 0)
+    for s in lay.bucket_slots(0):
+        want = 0.0 if s.skip_wd else 1.0
+        assert (m[s.row_offset:s.row_offset + s.rows] == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Bucketized optimizer == per-leaf reference (wd-mask + grad-clip)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grad_clip", [0.0, 0.5])
+@pytest.mark.parametrize("nesterov", [True, False])
+def test_apply_sgd_bucketed_matches_per_leaf(grad_clip, nesterov):
+    params = _tree()
+    wd_mask = {"emb": False, "w130": False, "norm": True, "bias": True,
+               "h16": False, "scalar": True}
+    rng = np.random.default_rng(1)
+    mk_g = lambda t: jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), t)
+    p_ref, p_buck = params, params
+    u_ref, u_buck = init_momentum(params), init_momentum(params)
+    for step in range(4):
+        g = mk_g(params)
+        kw = dict(lr=0.1, momentum_coef=0.9, weight_decay=1e-2,
+                  nesterov=nesterov, wd_mask=wd_mask, grad_clip=grad_clip)
+        p_ref, u_ref = apply_sgd(p_ref, g, u_ref, use_kernel=False, **kw)
+        p_buck, u_buck = apply_sgd(p_buck, g, u_buck, use_kernel=True, **kw)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p_buck[k], np.float32),
+                                   np.asarray(p_ref[k], np.float32),
+                                   rtol=2e-5, atol=1e-6, err_msg=k)
+        np.testing.assert_allclose(np.asarray(u_buck[k], np.float32),
+                                   np.asarray(u_ref[k], np.float32),
+                                   rtol=2e-5, atol=1e-6, err_msg=k)
+
+
+def test_apply_sgd_bucket_dispatch_count(monkeypatch):
+    """Bucketed dispatch is O(#dtype buckets), not O(#leaves)."""
+    from repro.kernels import fused_bucket
+    calls = {"n": 0}
+    orig = fused_bucket.fused_sgd_bucket_2d
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(fused_bucket, "fused_sgd_bucket_2d", counting)
+    params = _tree()   # 6 leaves, 2 dtypes
+    g = jax.tree.map(jnp.ones_like, params)
+    apply_sgd(params, g, init_momentum(params), lr=0.1, momentum_coef=0.9,
+              weight_decay=1e-4, nesterov=True, use_kernel=True)
+    assert calls["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Bucketized compressor == per-leaf compressor
+# ---------------------------------------------------------------------------
+
+def test_sign_compress_bucketed_matches_per_leaf():
+    tree = _tree()
+    got = comp.sign_compress(tree, use_kernel=True)
+    want = comp.sign_compress(tree, use_kernel=False)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+        assert got[k].dtype == jnp.float32
+
+
+def test_sign_compress_respects_bucketable():
+    """Sharded (non-bucketable) leaves take the per-leaf compressor but
+    produce the same values."""
+    tree = _tree()
+    mask = {k: (k != "emb") for k in tree}
+    got = comp.sign_compress(tree, use_kernel=True, bucketable=mask)
+    want = comp.sign_compress(tree, use_kernel=False)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_ef_compress_bucketed_matches_per_leaf():
+    rng = np.random.default_rng(3)
+    delta = {"a": jnp.asarray(rng.normal(size=130), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(7, 9)), jnp.float32)}
+    mem = jax.tree.map(lambda x: 0.1 * x, delta)
+    out_b, mem_b = comp.ef_compress(delta, mem, use_kernel=True)
+    out_r, mem_r = comp.ef_compress(delta, mem, use_kernel=False)
+    for k in delta:
+        np.testing.assert_allclose(np.asarray(out_b[k]), np.asarray(out_r[k]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mem_b[k]), np.asarray(mem_r[k]),
+                                   rtol=1e-5, atol=1e-6)
+        # EF invariant holds on the bucket path
+        np.testing.assert_allclose(np.asarray(out_b[k] + mem_b[k]),
+                                   np.asarray(delta[k] + mem[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Bucketized sync trajectories == per-leaf trajectories (acceptance)
+# ---------------------------------------------------------------------------
+
+def _loss(params, batch):
+    pred = jnp.tanh(batch["x"] @ params["w1"] + params["b1"]) @ params["w2"]
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def _init_params(key):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return {"w1": jax.random.normal(k1, (6, 5)) * 0.4,
+            "b1": jnp.zeros((5,)),
+            "w2": jax.random.normal(k2, (5, 2)) * 0.4}
+
+
+def _run(compression, *, bucket_sync, wire_pack=False, use_kernel=False,
+         wd=1e-3, clip=0.5, steps=8, W=4):
+    run = RunConfig(
+        model=ModelConfig(name="q", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=2, sync_compression=compression,
+                                 wire_pack=wire_pack, local_momentum=0.9,
+                                 nesterov=True),
+        optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=wd,
+                          grad_clip=clip, lr_decay_steps=()))
+    wd_mask = {"w1": False, "b1": True, "w2": False}
+    init, local_step, sync = make_local_sgd(
+        run, _loss, num_workers=W, wd_mask=wd_mask, use_kernel=use_kernel,
+        bucket_sync=bucket_sync)
+    state = init(jax.random.PRNGKey(0), _init_params(1))
+    for t in range(steps):
+        k = jax.random.fold_in(jax.random.PRNGKey(2), t)
+        x = jax.random.normal(k, (W, 4, 6))
+        y = jnp.tanh(x @ (jnp.ones((6, 5)) * 0.3)) @ (jnp.ones((5, 2)) * 0.3)
+        state, _ = local_step(state, {"x": x, "y": y})
+        if (t + 1) % 2 == 0:
+            state = sync(state)
+    return state
+
+
+@pytest.mark.parametrize("compression,wire_pack", [
+    ("none", False), ("sign", False), ("sign", True),
+    ("ef_sign", False), ("ef_sign", True)])
+def test_bucket_sync_trajectory_matches_per_leaf(compression, wire_pack):
+    """Bucketed sync == per-leaf sync over a full multi-sync trajectory
+    (wd-mask + grad-clip active the whole time)."""
+    s_buck = _run(compression, bucket_sync=True, wire_pack=wire_pack)
+    s_leaf = _run(compression, bucket_sync=False, wire_pack=wire_pack)
+    for k in ("w1", "b1", "w2"):
+        np.testing.assert_allclose(np.asarray(s_buck.params[k]),
+                                   np.asarray(s_leaf.params[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+    # workers agree after sync on the bucket path
+    np.testing.assert_allclose(np.asarray(s_buck.params["w1"][0]),
+                               np.asarray(s_buck.params["w1"][-1]), rtol=1e-6)
+
+
+def test_bucket_kernel_trajectory_matches_reference():
+    """Bucketed Pallas optimizer + bucketed sign sync vs the pure-jnp
+    per-leaf reference: same trajectory within kernel tolerance."""
+    s_k = _run("sign", bucket_sync=True, use_kernel=True)
+    s_r = _run("sign", bucket_sync=False, use_kernel=False)
+    for k in ("w1", "b1", "w2"):
+        np.testing.assert_allclose(np.asarray(s_k.params[k]),
+                                   np.asarray(s_r.params[k]),
+                                   rtol=1e-4, atol=1e-6, err_msg=k)
+
+
+def test_hierarchical_group_sync_bucketized():
+    """group_mean over buckets == per-leaf group_mean (Alg. 5 blocks)."""
+    from repro.core.local_sgd import bucket_group_mean, group_mean
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (8,) + x.shape) +
+        jnp.arange(8, dtype=x.dtype).reshape((8,) + (1,) * x.ndim), _tree())
+    got = bucket_group_mean(tree, 4)
+    want = jax.tree.map(lambda x: group_mean(x, 4), tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=1e-6, err_msg=k)
+
+
+def test_bucketable_partition_respected():
+    """Leaves marked non-bucketable take the per-leaf path but produce
+    the same averaged values."""
+    from repro.core.local_sgd import bucket_worker_mean
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (4,) + x.shape) +
+        jnp.arange(4, dtype=x.dtype).reshape((4,) + (1,) * x.ndim), _tree())
+    mask = {k: (k != "emb") for k in tree}
+    got = bucket_worker_mean(tree, mask)
+    want = jax.tree.map(lambda x: x.mean(axis=0), tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k], np.float32),
+                                   np.asarray(want[k], np.float32),
+                                   rtol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Flat checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_flat_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "flat")
+    save_flat(path, tree, step=3, extra={"note": "bus"})
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = restore_flat(path, tmpl)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k], np.float32),
+                                      np.asarray(out[k], np.float32))
+        assert out[k].dtype == tree[k].dtype
+    meta = load_meta(path)
+    assert meta["step"] == 3 and meta["format"] == "flatbuf"
+    assert meta["note"] == "bus"
+
+
+def test_flat_checkpoint_roundtrip_state(tmp_path):
+    run = RunConfig(model=ModelConfig(name="q", family="dense", citation=""),
+                    shape=InputShape("t", 8, 8, "train"),
+                    local_sgd=LocalSGDConfig(local_steps=2),
+                    optim=OptimConfig(lr_decay_steps=()))
+
+    def loss(p, b):
+        l = jnp.sum(p["w"] ** 2)
+        return l, {"xent": l}
+
+    init, local_step, sync = make_local_sgd(run, loss, num_workers=2)
+    state = init(jax.random.PRNGKey(0), {"w": jnp.ones((3, 3))})
+    state, _ = local_step(state, {"x": jnp.zeros((2, 4, 1))})
+    path = str(tmp_path / "state")
+    save_flat(path, state, step=int(state.step))
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    out = restore_flat(path, tmpl)
+    np.testing.assert_allclose(np.asarray(out.params["w"]),
+                               np.asarray(state.params["w"]))
+    assert int(out.step) == 1
+
+
+def test_flat_checkpoint_layout_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((4, 4))}
+    path = str(tmp_path / "m")
+    save_flat(path, tree)
+    bad = {"a": jax.ShapeDtypeStruct((5, 5), jnp.float32)}
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_flat(path, bad)
+
+
+def test_flat_checkpoint_dtype_permutation_raises(tmp_path):
+    """A template that permutes per-leaf dtypes keeps the same bucket
+    dtypes/rows and leaf shapes but must NOT silently cross-wire leaves
+    across buckets."""
+    tree = {"a": jnp.ones(8, jnp.float32), "b": jnp.ones(8, jnp.bfloat16),
+            "c": jnp.full(8, 2.0, jnp.bfloat16), "d": jnp.full(8, 3.0, jnp.float32)}
+    path = str(tmp_path / "p")
+    save_flat(path, tree)
+    swapped = {"a": jax.ShapeDtypeStruct((8,), jnp.float32),
+               "b": jax.ShapeDtypeStruct((8,), jnp.bfloat16),
+               "c": jax.ShapeDtypeStruct((8,), jnp.float32),
+               "d": jax.ShapeDtypeStruct((8,), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_flat(path, swapped)
