@@ -106,10 +106,11 @@ def bucket_bench():
 
     state_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
     kernel_passes = state_bytes * 5            # r p,g,u; w p,u
-    # the bucketized path also pays the repack: flatten p,g,u (3 reads +
-    # 3 bucket writes) and unflatten p',u' (2+2) around the opaque
-    # pallas_call — 15 passes total vs 5 for an aligned per-leaf call.
-    # Folding them once into resident bucket state is a ROADMAP item.
+    # the tree-in/tree-out path also pays the repack: flatten p,g,u (3
+    # reads + 3 bucket writes) and unflatten p',u' (2+2) around the
+    # opaque pallas_call — 15 passes total vs 5 for an aligned per-leaf
+    # call.  resident_bench measures the resident-state path that folds
+    # the pack to once per sync round (ISSUE 2).
     bucket_passes = state_bytes * 15
     us_b = time_fn(bucketed, params, grads, mom, iters=2, warmup=1)
     emit("bucket/sgd_bucketized", us_b,
@@ -147,3 +148,60 @@ def bucket_bench():
     emit("bucket/packed_mean_per_leaf", 0.0,
          f"collectives={2 * n_leaves};leaves={n_leaves};"
          f"wire_bytes={leaf_wire};dense_bytes={dense} (count model)")
+
+
+# ---------------------------------------------------------------------------
+# Resident bucket state: pack/unpack traffic per local step (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+def resident_bench():
+    """Resident vs tree-in/tree-out kernel dispatch on the ~100-leaf tree.
+
+    The tree path re-packs p/g/u and unpacks p'/u' around the fused
+    kernel EVERY local step (10 extra full-state HBM passes on top of
+    the kernel's 5); the resident path holds state in bucket form so
+    those passes drop to zero between syncs (pack paid once per round,
+    O(1/H)).  Reports measured jaxpr pack-op counts (concatenate/pad)
+    and the per-step pack/unpack byte model for the TPU projection.
+    """
+    from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+    from repro.core.local_sgd import make_local_sgd
+    from repro.roofline.hlo import jaxpr_op_counts
+
+    W = 2
+    params, wd_mask = _paper_lm_like_tree()
+    leaves = jax.tree.leaves(params)
+    state_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    kernel_passes = state_bytes * 5             # r p,g,u; w p,u
+
+    def loss(p, b):
+        l = sum(jnp.mean(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(p))
+        return l, {"xent": l}
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, local_momentum=0.9),
+        optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=1e-4,
+                          grad_clip=0.5, lr_decay_steps=()))
+    batch = {"x": jnp.zeros((W, 1), jnp.float32)}
+
+    for resident in (True, False):
+        init, local_step, _ = make_local_sgd(
+            run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
+            resident=resident)
+        state = init(jax.random.PRNGKey(0), params)
+        counts = jaxpr_op_counts(jax.make_jaxpr(local_step)(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         state), batch))
+        step = jax.jit(local_step)
+        us = time_fn(step, state, batch, iters=2, warmup=1)
+        pack_bytes = 0 if resident else state_bytes * 10
+        name = "resident" if resident else "tree"
+        emit(f"bucket/local_step_{name}", us,
+             f"pack_unpack_bytes_per_step={pack_bytes};"
+             f"kernel_bytes={kernel_passes};"
+             f"concatenate={counts.get('concatenate', 0)};"
+             f"pad={counts.get('pad', 0)};"
+             f"tpu_hbm_bound_us={(kernel_passes + pack_bytes)/819e9*1e6:.2f}")

@@ -30,7 +30,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower training benches")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke subset: kernel + bucket microbenches only")
+                    help="CI smoke subset: kernel + bucket + resident-state "
+                         "microbenches only")
     args = ap.parse_args()
 
     from benchmarks import bench_convex, bench_kernels, bench_roofline, paper_tables
@@ -38,6 +39,7 @@ def main() -> None:
     benches = {
         "kernels": bench_kernels.kernels_bench,
         "bucket": bench_kernels.bucket_bench,
+        "resident": bench_kernels.resident_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -56,7 +58,7 @@ def main() -> None:
     }
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
-    smoke = ("kernels", "bucket")
+    smoke = ("kernels", "bucket", "resident")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

@@ -30,6 +30,16 @@ scales from one segmented reduction per bucket; and the sync paths
 bucket instead of one per leaf. Within-worker-sharded leaves are marked
 non-bucketable (``flatbuf.bucketable_tree``) and stay per-leaf.
 
+Resident bucket state — with ``use_kernel=True`` (all leaves
+bucketable) the optimizer state LIVES in bucket form across local steps
+(``flatbuf.BucketState``): local steps differentiate the loss through
+the bucket view so grads arrive already bucketed, ``apply_sgd`` /
+``apply_lars`` update buckets in place-shape, and sync (mean / sign /
+EF-sign / 1-bit wire pack) runs straight on buckets — zero pack/unpack
+between sync boundaries (the pack cost amortizes to O(1/H)).  The
+pytree view exists only at explicit boundaries:
+``core.local_sgd.unpack_state`` / ``pack_state`` / ``mean_params``.
+
 See README.md / DESIGN.md / EXPERIMENTS.md.
 """
 

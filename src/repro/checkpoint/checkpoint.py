@@ -61,17 +61,27 @@ def save_flat(path: str, tree, *, step: int | None = None,
     layout is derived from the template at restore time, so the restore
     template must have the same leaf shapes/dtypes in the same order
     (validated against the recorded metadata).
+
+    Resident states (core/local_sgd with ``use_kernel``) snapshot
+    straight from their buckets: ``flatbuf.BucketState`` is a pytree
+    whose leaves ARE the (already contiguous, already padded) bucket
+    buffers, so no pytree view is materialized on the way out and the
+    round-trip through a resident template is bit-exact.  Cross-format
+    restores (per-leaf checkpoint -> resident state and back) go through
+    ``local_sgd.pack_state`` / ``unpack_state`` at the template side.
     """
     from repro.core import flatbuf
 
     layout = flatbuf.build_layout(tree)
     bufs = flatbuf.flatten(layout, tree)
+    resident = any(flatbuf.is_bucket_state(n) for n in
+                   jax.tree.flatten(tree, is_leaf=flatbuf.is_bucket_state)[0])
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     # bfloat16 etc. round-trip npz as raw bytes (npz stores them as void)
     arrs = {f"bucket{i}": np.asarray(b).view(np.uint8)
             for i, b in enumerate(bufs)}
     np.savez(path if path.endswith(".npz") else path + ".npz", **arrs)
-    meta = {"step": step, "format": "flatbuf",
+    meta = {"step": step, "format": "flatbuf", "resident": resident,
             "bucket_dtypes": list(layout.bucket_dtypes),
             "bucket_rows": list(layout.bucket_rows),
             "leaf_shapes": [list(s.shape) for s in layout.slots],

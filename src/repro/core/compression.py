@@ -21,17 +21,98 @@ def sign_compress_leaf(x):
     return jnp.sign(xf) * scale
 
 
+def sign_compress_buckets(layout, bufs, *, leading: int = 0,
+                          kernel: bool = True):
+    """Bucket-in/bucket-out compressor: sign(x) * mean|x| per layer
+    segment, computed straight on (``*lead``, rows, 128) bucket buffers.
+
+    ``leading=1`` handles worker-stacked (W, rows, 128) buffers: the
+    worker dim is folded into the segment totals so the per-layer scale
+    averages |x| over ALL workers — exactly what the per-leaf compressor
+    computes on a stacked (W, ...) leaf.
+
+    ``kernel=True`` dispatches ONE Pallas launch pair per bucket (the
+    meshless / replicated case).  ``kernel=False`` is the
+    GSPMD-friendly form for WORKER-SHARDED buckets: per-row |x| sums
+    feed a per-worker ``segment_sum`` (a scatter-add GSPMD batches over
+    the sharded worker dim), so under a mesh the lowering is a
+    shard-local reduce + a tiny (num_segments,) all-reduce instead of a
+    dense all-gather of the payload (which a pallas_call on a sharded
+    operand would force).
+
+    This is the resident-state sync path (core/local_sgd): the buffers
+    never leave bucket form, removing the unflatten/re-flatten pair the
+    tree-in/tree-out wrapper pays around every call (two redundant
+    full-payload HBM passes per sync).  Returns f32 buffers of the input
+    shapes.  Padding slots compress to sign(0)*scale = 0, preserving the
+    padding-is-zero invariant.
+    """
+    from repro.core import flatbuf
+    from repro.kernels import ops as kops
+
+    out = []
+    for b, x in enumerate(bufs):
+        seg = flatbuf.row_segments(layout, b)
+        sizes = flatbuf.segment_sizes(layout, b)
+        if not kernel:
+            n_seg = int(sizes.shape[0])
+            seg_j = jnp.asarray(seg)
+            xf = x.astype(jnp.float32)
+            row_abs = jnp.sum(jnp.abs(xf), axis=-1)         # (*lead, rows)
+            if leading:
+                # per-shard segment totals, then a tiny (n_seg,) cross-
+                # worker reduction — O(rows) scatter-add, no dense
+                # (rows, n_seg) one-hot constant
+                totals = jax.vmap(lambda r: jax.ops.segment_sum(
+                    r, seg_j, num_segments=n_seg))(
+                        row_abs.reshape((-1, row_abs.shape[-1])))
+                totals = totals.sum(axis=0)
+                denom = sizes * float(np.prod(x.shape[:leading]))
+            else:
+                totals = jax.ops.segment_sum(row_abs, seg_j,
+                                             num_segments=n_seg)
+                denom = sizes
+            scales = totals / jnp.asarray(denom)
+            out.append(jnp.sign(xf) * scales[seg_j][:, None])
+        elif leading:
+            lead = x.shape[:leading]
+            W = int(np.prod(lead))
+            y, _ = kops.bucket_sign_compress(
+                x.reshape((W * x.shape[-2], x.shape[-1])),
+                np.tile(seg, W), sizes * W)
+            out.append(y.reshape(lead + x.shape[leading:]))
+        else:
+            y, _ = kops.bucket_sign_compress(x, seg, sizes)
+            out.append(y)
+    return out
+
+
+def ef_compress_buckets(layout, dbufs, ebufs, *, leading: int = 0,
+                        kernel: bool = True):
+    """Error-feedback compression on raw buckets: compress(delta + e);
+    e' = input - output.  Returns (compressed, new_memory) bucket lists
+    (both f32), preserving the EF invariant compressed + e' == delta + e
+    exactly in fp32 (padding stays 0 through both)."""
+    inp = [d.astype(jnp.float32) + e.astype(jnp.float32)
+           for d, e in zip(dbufs, ebufs, strict=True)]
+    out = sign_compress_buckets(layout, inp, leading=leading, kernel=kernel)
+    return out, [i - o for i, o in zip(inp, out)]
+
+
 def _sign_compress_bucketed(tree, bucketable=None):
     """Flat-bus compressor: per-leaf L1 scales from ONE segmented
     reduction per dtype bucket, sign applied in one launch per bucket
     (vs. two Pallas calls per leaf on the per-leaf path).
+
+    Tree-in/tree-out wrapper around :func:`sign_compress_buckets` — it
+    packs/unpacks around the call; the resident sync path feeds buckets
+    directly and skips both passes.
 
     Leaves marked False in ``bucketable`` (within-worker sharded —
     flattening them into a replicated bucket would force GSPMD to
     gather the dense delta) take the per-leaf compressor instead.
     """
     from repro.core import flatbuf
-    from repro.kernels import ops as kops
 
     leaves, treedef = jax.tree.flatten(tree)
     flags = (jax.tree.leaves(bucketable) if bucketable is not None
@@ -44,10 +125,7 @@ def _sign_compress_bucketed(tree, bucketable=None):
     if on:
         sub = [leaves[i] for i in on]
         layout = flatbuf.build_layout(sub)
-        bufs = flatbuf.flatten(layout, sub)
-        ys = [kops.bucket_sign_compress(b, flatbuf.row_segments(layout, i),
-                                        flatbuf.segment_sizes(layout, i))[0]
-              for i, b in enumerate(bufs)]
+        ys = sign_compress_buckets(layout, flatbuf.flatten(layout, sub))
         for i, v in zip(on, flatbuf.unflatten(layout, ys)):
             out[i] = v
     return jax.tree.unflatten(treedef, out)

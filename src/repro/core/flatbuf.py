@@ -28,9 +28,29 @@ Layout invariants
 Padding elements are zero on flatten and dropped on unflatten; every
 reduction in this module divides by the TRUE element count, so padded
 zeros never bias a scale or a norm.
+
+Resident bucket state
+---------------------
+:class:`BucketState` wraps the bucket buffers with their (static) layout
+as a registered pytree, so optimizer state can live IN bucket form
+across local steps (ISSUE 2): ``apply_sgd``/``apply_lars`` kernels and
+the sync collectives consume and produce buckets directly, and the
+pack cost is paid once per sync round instead of once per step.
+
+Lifecycle contract: while a ``BucketState`` is live, the bucket buffers
+are the single source of truth — the pytree view does NOT exist and is
+materialized only at explicit boundaries (sync already operates on
+buckets; eval/checkpoint/logging call :meth:`BucketState.unpack`).
+``BucketState.pack`` re-enters resident form, e.g. after a host-side
+``unpack -> mutate -> pack`` round-trip.  All in-bucket arithmetic must
+preserve the padding-is-zero invariant (see :func:`valid_mask`): padded
+elements start as exact zeros and every resident code path either keeps
+them zero (linear updates with zero grads/momentum padding) or re-masks
+after an operation that could pollute them (the 1-bit wire unpack).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Sequence
 
@@ -131,17 +151,22 @@ def build_layout(tree, *, wd_mask=None, pack_axes=None, leading: int = 0) -> Fla
 # Flatten / unflatten
 # ---------------------------------------------------------------------------
 
-def flatten(layout: FlatLayout, tree, *, leading: int = 0) -> list:
+def flatten(layout: FlatLayout, tree, *, leading: int = 0,
+            bucket_dtypes: Sequence[str] | None = None) -> list:
     """Pack ``tree`` into one (``*lead``, rows, 128) buffer per bucket.
 
     Leaves are cast to their bucket dtype (a no-op when the tree matches
     the layout's dtypes, e.g. params/grads/momentum share one layout).
+    ``bucket_dtypes`` overrides the target dtype per bucket while
+    keeping the layout's GEOMETRY — used to re-pack dtype-promoted state
+    (e.g. an EF memory that became f32 after the first sync) into the
+    params bucket structure without demoting it.
     """
     leaves = jax.tree.leaves(tree)
     assert len(leaves) == layout.num_leaves, (len(leaves), layout.num_leaves)
     buckets = []
     for b in range(layout.num_buckets):
-        dt = layout.bucket_dtypes[b]
+        dt = (bucket_dtypes or layout.bucket_dtypes)[b]
         parts = []
         for s in layout.bucket_slots(b):
             x = leaves[s.index].astype(dt)
@@ -176,6 +201,69 @@ def unflatten(layout: FlatLayout, buckets: Sequence, *, leading: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Resident bucket state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BucketState:
+    """Bucket buffers + their static layout, as a pytree.
+
+    The buffers are the pytree children (so jit/vmap/sharding see plain
+    arrays); ``layout`` and ``leading`` ride as static aux data.  The
+    pytree view is materialized ONLY via :meth:`unpack` — between packs
+    the buckets are authoritative (see module docstring for the
+    lifecycle contract).
+
+    ``leading=1`` marks worker-stacked (W, rows, 128) buffers; the SAME
+    layout describes both the stacked and the single-copy form, since
+    :func:`build_layout` keys on per-worker shapes.
+
+    Note on dtypes: ``layout.bucket_dtypes`` records the dtype the state
+    was PACKED with; resident arithmetic may promote a buffer (e.g. a
+    global-momentum bucket becomes f32 after the first sync, exactly as
+    the per-leaf reference promotes its leaves) and :meth:`unpack`
+    yields leaves in the buffer's actual dtype, mirroring the reference.
+    """
+    layout: FlatLayout
+    buckets: tuple
+    leading: int = 0
+
+    def tree_flatten(self):
+        return tuple(self.buckets), (self.layout, self.leading)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(layout=aux[0], buckets=tuple(children), leading=aux[1])
+
+    @classmethod
+    def pack(cls, tree, *, layout: FlatLayout | None = None, wd_mask=None,
+             leading: int = 0) -> "BucketState":
+        """Enter resident form: flatten ``tree`` into bucket buffers."""
+        if layout is None:
+            layout = build_layout(tree, wd_mask=wd_mask, leading=leading)
+        return cls(layout=layout,
+                   buckets=tuple(flatten(layout, tree, leading=leading)),
+                   leading=leading)
+
+    def unpack(self):
+        """Materialize the pytree view (the ONLY exit from bucket form)."""
+        return unflatten(self.layout, list(self.buckets), leading=self.leading)
+
+    def with_buckets(self, buckets, *, leading: int | None = None) -> "BucketState":
+        return BucketState(layout=self.layout, buckets=tuple(buckets),
+                           leading=self.leading if leading is None else leading)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.layout.num_buckets
+
+
+def is_bucket_state(x) -> bool:
+    return isinstance(x, BucketState)
+
+
+# ---------------------------------------------------------------------------
 # Precomputed per-bucket constants (numpy; static under jit)
 # ---------------------------------------------------------------------------
 
@@ -203,6 +291,60 @@ def segment_sizes(layout: FlatLayout, b: int) -> np.ndarray:
     for s in slots:
         out[s.seg] = float(s.size)
     return out
+
+
+def segment_skip_wd(layout: FlatLayout, b: int) -> np.ndarray:
+    """(num_segments,) bool: True where the leaf opts out of weight decay
+    (norm/bias params — these also take the plain LR under LARS)."""
+    slots = layout.bucket_slots(b)
+    out = np.zeros((len(slots),), bool)
+    for s in slots:
+        out[s.seg] = s.skip_wd
+    return out
+
+
+def valid_mask(layout: FlatLayout, b: int) -> np.ndarray:
+    """(rows, 128) f32 mask: 1.0 on TRUE elements, 0.0 on padding.
+
+    The dense form, for tests and host-side checks; runtime code uses
+    :func:`mask_padding`, which fuses the same mask from the tiny
+    per-row valid-lane count instead of baking a bucket-sized constant
+    into the executable.
+    """
+    m = np.zeros((layout.bucket_rows[b], LANE), np.float32)
+    flat = m.reshape(-1)
+    for s in layout.bucket_slots(b):
+        off = s.row_offset * LANE
+        flat[off:off + s.size] = 1.0
+    return m
+
+
+@functools.lru_cache(maxsize=None)
+def lane_counts(layout: FlatLayout, b: int) -> np.ndarray:
+    """(rows, 1) int32: number of VALID lanes per row (0 on fully-padded
+    rows, 128 mid-leaf, the remainder on a leaf's boundary row).
+    Cached per (layout, bucket) — FlatLayout is static and hashable."""
+    c = np.zeros((layout.bucket_rows[b], 1), np.int32)
+    for s in layout.bucket_slots(b):
+        c[s.row_offset:s.row_offset + s.rows, 0] = np.clip(
+            s.size - np.arange(s.rows) * LANE, 0, LANE)
+    return c
+
+
+def mask_padding(layout: FlatLayout, b: int, x):
+    """Zero the padding slots of a (``*lead``, rows, 128) buffer.
+
+    Resident bucket code applies this after any operation that could
+    write nonzero values into padding (e.g. the 1-bit wire unpack emits
+    sign(+1)*scale everywhere), restoring the padding-is-zero invariant
+    that keeps segment norms and L1 scales unbiased.  The mask is a
+    lane-iota compare against the (rows, 1) valid-lane count — a
+    constant 128x smaller than the bucket that fuses into the consumer
+    instead of costing a full extra HBM operand.
+    """
+    cnt = jnp.asarray(lane_counts(layout, b))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+    return x * (lane < cnt).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,18 @@ Variants carried in state:
 * global momentum — applied to the averaged model difference at sync
 * sign / EF-sign  — compress per-worker model differences before the
   average (Alg. 3 / Alg. 4)
+
+Resident bucket state (ISSUE 2): with ``use_kernel=True`` (and every
+leaf bucketable) the state fields hold ``flatbuf.BucketState`` buffers
+instead of pytrees.  Local steps differentiate the loss THROUGH the
+bucket view — ``unflatten`` is part of the forward graph, so autodiff
+transposes it into grad buckets for free — and the fused optimizer
+consumes/produces buckets directly: zero explicit flatten/unflatten
+between sync boundaries, vs 10 full-state pack/unpack HBM passes per
+step on the tree-in/tree-out kernel path.  Sync (mean / sign / EF-sign
+/ wire-pack) also runs straight on buckets.  The pytree view exists
+only at explicit boundaries: ``unpack_state`` (eval/checkpoint/logging)
+and ``pack_state`` (re-entry after host-side surgery).
 """
 from __future__ import annotations
 
@@ -26,13 +38,15 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LocalSGDConfig, OptimConfig, RunConfig
 from repro.core import compression as comp
+from repro.core import flatbuf
 from repro.core import noise as noise_mod
 from repro.core.schedule import lr_at
-from repro.optim.lars import apply_lars
-from repro.optim.sgd import apply_sgd, init_momentum
+from repro.optim.lars import apply_lars, apply_lars_buckets
+from repro.optim.sgd import apply_sgd, apply_sgd_buckets, init_momentum
 
 
 @jax.tree_util.register_dataclass
@@ -53,6 +67,95 @@ def needs_anchor(cfg: LocalSGDConfig) -> bool:
 
 def stack_tree(tree, W: int):
     return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (W,) + p.shape), tree)
+
+
+# ---------------------------------------------------------------------------
+# Resident <-> pytree state conversion (the ONLY boundaries at which the
+# pytree view of a resident state exists; see flatbuf.BucketState)
+# ---------------------------------------------------------------------------
+
+def is_resident(state: "LocalSGDState") -> bool:
+    return flatbuf.is_bucket_state(state.params)
+
+
+def unpack_state(state: "LocalSGDState") -> "LocalSGDState":
+    """Materialize the pytree view of a resident state (no-op otherwise).
+
+    The boundary for eval/checkpoint/logging and the reference oracle in
+    the trajectory-equivalence tests.
+    """
+    up = lambda x: x.unpack() if flatbuf.is_bucket_state(x) else x
+    return LocalSGDState(params=up(state.params), momentum=up(state.momentum),
+                         anchor=up(state.anchor), global_u=up(state.global_u),
+                         ef_memory=up(state.ef_memory), step=state.step,
+                         rng=state.rng)
+
+
+def pack_state(state: "LocalSGDState", *, wd_mask=None) -> "LocalSGDState":
+    """Re-enter resident bucket form from a pytree state.
+
+    ``wd_mask`` is recorded in the params layout (the fused optimizer
+    reads the per-row decay mask from it).  EVERY field is packed with
+    the params layout's bucket GEOMETRY — the resident sync zips
+    anchor/global_u/ef buckets against params buckets one-to-one — with
+    the actual per-bucket dtype preserved: ef_memory/global_u leaves
+    promote to f32 after the first sync (exactly as the per-leaf
+    reference promotes), and re-packing must neither demote them nor
+    collapse them into a different bucket structure.
+    """
+    if is_resident(state):
+        return state
+    layout = flatbuf.build_layout(state.params, wd_mask=wd_mask, leading=1)
+
+    def pack(tree, leading):
+        if tree is None:
+            return None
+        dts = [np.dtype(l.dtype).name for l in jax.tree.leaves(tree)]
+        if dts == [s.dtype for s in layout.slots]:
+            return flatbuf.BucketState.pack(tree, layout=layout,
+                                            leading=leading)
+        # dtype-promoted field: keep params bucket geometry, carry the
+        # promoted dtype per bucket (must be uniform within a bucket)
+        per_bucket = []
+        for b in range(layout.num_buckets):
+            bd = {dts[s.index] for s in layout.bucket_slots(b)}
+            if len(bd) != 1:
+                raise ValueError(
+                    f"cannot pack mixed dtypes {sorted(bd)} into params "
+                    f"bucket {b} ({layout.bucket_dtypes[b]})")
+            per_bucket.append(bd.pop())
+        bufs = flatbuf.flatten(layout, tree, leading=leading,
+                               bucket_dtypes=tuple(per_bucket))
+        return flatbuf.BucketState(layout, tuple(bufs), leading=leading)
+
+    return LocalSGDState(params=flatbuf.BucketState.pack(state.params,
+                                                         layout=layout,
+                                                         leading=1),
+                         momentum=pack(state.momentum, 1),
+                         anchor=pack(state.anchor, 0),
+                         global_u=pack(state.global_u, 0),
+                         ef_memory=pack(state.ef_memory, 1),
+                         step=state.step, rng=state.rng)
+
+
+def mean_params(state: "LocalSGDState"):
+    """Single-copy pytree view of the worker-averaged model — works on
+    both resident and pytree states (eval boundary)."""
+    if is_resident(state):
+        return flatbuf.unflatten(state.params.layout,
+                                 [b.mean(axis=0) for b in state.params.buckets])
+    return jax.tree.map(lambda p: p.mean(axis=0), state.params)
+
+
+def resident_eligible(use_kernel: bool, bucket_sync: bool, bucketable) -> bool:
+    """Single source of truth for the resident-mode default: the kernel
+    flat bus must be on, sync bucketized (an explicit bucket_sync=False
+    keeps the per-leaf oracle per-leaf all the way), and every leaf
+    bucketable (within-worker-sharded leaves would need a per-leaf side
+    channel).  build_train uses the same predicate so its sharding specs
+    always agree with the state structure make_local_sgd returns."""
+    return bool(use_kernel and bucket_sync and
+                (bucketable is None or all(jax.tree.leaves(bucketable))))
 
 
 def group_mean(x, group: int):
@@ -251,7 +354,9 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                    wd_mask=None, use_kernel: bool = False,
                    packed_mean_fn: Callable | None = None,
                    packed_mean_flat_fn: Callable | None = None,
-                   bucket_sync: bool = True, bucketable=None):
+                   bucket_sync: bool = True, bucketable=None,
+                   resident: bool | None = None,
+                   sharded: bool | None = None):
     """Build (init, local_step, sync) for a single-worker ``loss_fn``.
 
     loss_fn(params, batch) -> (loss, metrics dict). The returned
@@ -263,11 +368,37 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
     equivalence tests). ``bucketable`` marks within-worker-sharded
     leaves that must stay per-leaf; ``packed_mean_flat_fn`` is the
     mesh-pinned bucket wire-pack from :func:`make_packed_mean_flat`.
+
+    ``resident`` holds the optimizer state IN bucket form across local
+    steps (flatbuf.BucketState; see module docstring).  Default: on
+    whenever ``use_kernel`` and ``bucket_sync`` are set (an explicit
+    ``bucket_sync=False`` keeps the per-leaf oracle per-leaf all the
+    way) and every leaf is bucketable —
+    within-worker-sharded leaves would need a per-leaf side channel, so
+    such layouts fall back to the tree-in/tree-out kernel path.  The
+    resident ``init`` returns a state whose params/momentum (and
+    anchor/global_u/ef_memory when present) are BucketStates; use
+    ``unpack_state`` at eval/checkpoint/logging boundaries.
+
+    ``sharded`` marks the state as worker-sharded under a mesh (set by
+    build_train); the resident sync then uses the GSPMD-friendly jnp
+    compressor form instead of Pallas launches, whose opaque calls on
+    sharded operands would force a dense gather of the payload.
+    Default: inferred from whether a mesh-pinned wire pack is wired in.
     """
     ls = run.local_sgd
     opt = run.optim
     W = num_workers
     global_batch = run.shape.global_batch
+
+    if resident is None:
+        resident = resident_eligible(use_kernel, bucket_sync, bucketable)
+    if resident:
+        return _make_resident_local_sgd(
+            run, loss_fn, num_workers=W, wd_mask=wd_mask,
+            packed_mean_flat_fn=packed_mean_flat_fn,
+            sharded=(packed_mean_flat_fn is not None if sharded is None
+                     else sharded))
 
     def init(rng, params_single) -> LocalSGDState:
         params = stack_tree(params_single, W)
@@ -292,7 +423,8 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
             p, u = apply_lars(p, g, u, lr=lr, trust=opt.lars_trust,
                               momentum_coef=ls.local_momentum,
                               weight_decay=opt.weight_decay,
-                              nesterov=ls.nesterov, wd_mask=wd_mask)
+                              nesterov=ls.nesterov, wd_mask=wd_mask,
+                              use_kernel=use_kernel)
         else:
             p, u = apply_sgd(p, g, u, lr=lr, momentum_coef=ls.local_momentum,
                              weight_decay=opt.weight_decay, nesterov=ls.nesterov,
@@ -370,6 +502,179 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                               state.anchor, step_tree)
         p = stack_tree(anchor, W)
         return LocalSGDState(params=p, momentum=state.momentum, anchor=anchor,
+                             global_u=gu, ef_memory=ef, step=state.step,
+                             rng=state.rng)
+
+    return init, local_step, sync
+
+
+# ---------------------------------------------------------------------------
+# Resident bucket state: params/momentum/anchor live as flatbuf buckets
+# across local steps; the pytree view exists only at unpack_state /
+# pack_state boundaries.
+# ---------------------------------------------------------------------------
+
+def _bucket_noise(layout, gbs, rng, *, step, eta: float, gamma: float):
+    """Isotropic gradient noise straight on grad buckets.
+
+    Same sigma_t = sqrt(eta/(1+t)^gamma) schedule as
+    ``noise.isotropic_noise`` but keyed per bucket instead of per leaf
+    (a different random stream, same distribution), and masked so
+    padding slots stay exactly zero (valid_mask invariant).
+    """
+    if eta <= 0:
+        return gbs
+    sigma = jnp.sqrt(eta / (1.0 + step) ** gamma)
+    keys = jax.random.split(rng, len(gbs))
+    out = []
+    for b, (g, k) in enumerate(zip(gbs, keys)):
+        n = flatbuf.mask_padding(layout, b,
+                                 jax.random.normal(k, g.shape, jnp.float32))
+        out.append(g + (sigma * n).astype(g.dtype))
+    return out
+
+
+def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
+                             num_workers: int, wd_mask=None,
+                             packed_mean_flat_fn: Callable | None = None,
+                             sharded: bool = False):
+    """(init, local_step, sync) with state held resident in bucket form.
+
+    Local steps differentiate the loss THROUGH the bucket view:
+    ``unflatten`` is part of the forward graph and autodiff transposes
+    it into grad buckets, so the fused optimizer update
+    (``apply_sgd_buckets`` / ``apply_lars_buckets``) performs zero
+    explicit flatten/unflatten — the pack cost of the flat bus is paid
+    once per sync round (O(1/H)) instead of once per step.  Sync
+    consumes and produces buckets directly as well (one collective /
+    compressor launch per dtype bucket, no unflatten/re-flatten pair
+    between the compressor and the wire pack).
+    """
+    ls = run.local_sgd
+    opt = run.optim
+    W = num_workers
+    global_batch = run.shape.global_batch
+    # compressor dispatch at sync: Pallas launches when the state is
+    # replicated (meshless CPU/single-host), the GSPMD-friendly jnp form
+    # when the buckets are worker-sharded under a mesh — a pallas_call
+    # on a sharded operand would force a dense gather of the payload
+    comp_kernel = not sharded
+
+    def init(rng, params_single) -> LocalSGDState:
+        layout = flatbuf.build_layout(params_single, wd_mask=wd_mask)
+        pb = flatbuf.flatten(layout, params_single)
+        stacked = lambda bufs: tuple(
+            jnp.broadcast_to(b[None], (W,) + b.shape) for b in bufs)
+        zeros_st = lambda: tuple(jnp.zeros((W,) + b.shape, b.dtype) for b in pb)
+        return LocalSGDState(
+            params=flatbuf.BucketState(layout, stacked(pb), leading=1),
+            momentum=flatbuf.BucketState(layout, zeros_st(), leading=1),
+            anchor=(flatbuf.BucketState(layout, tuple(jnp.copy(b) for b in pb))
+                    if needs_anchor(ls) else None),
+            global_u=(flatbuf.BucketState(layout,
+                                          tuple(jnp.zeros_like(b) for b in pb))
+                      if ls.global_momentum > 0 else None),
+            ef_memory=(flatbuf.BucketState(layout, zeros_st(), leading=1)
+                       if ls.sync_compression == "ef_sign" else None),
+            step=jnp.int32(0),
+            rng=rng,
+        )
+
+    def local_step(state: LocalSGDState, batch):
+        """batch: pytree with leading (W, B_loc, ...) dims."""
+        lr = lr_at(opt, state.step, global_batch=global_batch)
+        rngs = jax.random.split(jax.random.fold_in(state.rng, state.step), W)
+        layout = state.params.layout
+        step_no = state.step
+
+        def step_w(pbs, ubs, bw, rw):
+            def loss_b(bufs):
+                # the pytree view materialized here is the model's
+                # activation input; its AD transpose builds grad buckets
+                return loss_fn(flatbuf.unflatten(layout, list(bufs)), bw)
+
+            (loss, metrics), gbs = jax.value_and_grad(
+                loss_b, has_aux=True)(tuple(pbs))
+            gbs = list(gbs)
+            if opt.noise_eta > 0:
+                gbs = _bucket_noise(layout, gbs, rw, step=step_no,
+                                    eta=opt.noise_eta, gamma=opt.noise_gamma)
+            if opt.optimizer == "lars":
+                p2, u2 = apply_lars_buckets(
+                    layout, list(pbs), gbs, list(ubs), lr=lr,
+                    trust=opt.lars_trust, momentum_coef=ls.local_momentum,
+                    weight_decay=opt.weight_decay, nesterov=ls.nesterov)
+            else:
+                p2, u2 = apply_sgd_buckets(
+                    layout, list(pbs), gbs, list(ubs), lr=lr,
+                    momentum_coef=ls.local_momentum,
+                    weight_decay=opt.weight_decay, nesterov=ls.nesterov,
+                    grad_clip=opt.grad_clip)
+            return tuple(p2), tuple(u2), loss, metrics
+
+        p, u, loss, metrics = jax.vmap(step_w)(
+            state.params.buckets, state.momentum.buckets, batch, rngs)
+        metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        metrics = {**metrics, "loss": loss.mean(), "lr": lr}
+        new = LocalSGDState(params=state.params.with_buckets(p),
+                            momentum=state.momentum.with_buckets(u),
+                            anchor=state.anchor, global_u=state.global_u,
+                            ef_memory=state.ef_memory, step=state.step + 1,
+                            rng=state.rng)
+        return new, metrics
+
+    def sync(state: LocalSGDState, *, group: int | None = None) -> LocalSGDState:
+        """Average within worker groups, entirely in bucket form."""
+        g = group or W
+        layout = state.params.layout
+        pb = list(state.params.buckets)
+        if not needs_anchor(ls):
+            p = [group_mean(b, g) for b in pb]
+            return LocalSGDState(params=state.params.with_buckets(p),
+                                 momentum=state.momentum, anchor=None,
+                                 global_u=None, ef_memory=None,
+                                 step=state.step, rng=state.rng)
+
+        assert g == W, "compression / global momentum require flat local SGD"
+        ab = list(state.anchor.buckets)
+        # strict: every field must share the params bucket structure
+        # (pack_state preserves it even for dtype-promoted ef/global_u)
+        delta = [a[None] - p for a, p in zip(ab, pb, strict=True)]
+        ef = state.ef_memory
+        if ls.sync_compression == "sign":
+            delta = comp.sign_compress_buckets(layout, delta, leading=1,
+                                               kernel=comp_kernel)
+        elif ls.sync_compression == "ef_sign":
+            delta, efb = comp.ef_compress_buckets(layout, delta,
+                                                  list(ef.buckets), leading=1,
+                                                  kernel=comp_kernel)
+            ef = ef.with_buckets(efb)
+        if ls.sync_compression != "none" and ls.wire_pack:
+            flat_fn = packed_mean_flat_fn or _packed_mean_flat_local
+            dbar = [flat_fn(d, flatbuf.row_segments(layout, b),
+                            flatbuf.segment_sizes(layout, b))
+                    for b, d in enumerate(delta)]
+            # the 1-bit unpack emits sign(+1)*scale in padding slots;
+            # re-mask so the padding-is-zero invariant survives the round
+            dbar = [flatbuf.mask_padding(layout, b, d)
+                    for b, d in enumerate(dbar)]
+        else:
+            dbar = [d.mean(axis=0) for d in delta]
+
+        gu = state.global_u
+        if ls.global_momentum > 0:
+            gub = [ls.global_momentum * ug + d
+                   for ug, d in zip(gu.buckets, dbar, strict=True)]
+            gu = gu.with_buckets(gub)
+            step_b = gub
+        else:
+            step_b = dbar
+        anchor_b = [(a.astype(jnp.float32) - s.astype(jnp.float32)).astype(a.dtype)
+                    for a, s in zip(ab, step_b, strict=True)]
+        p = [jnp.broadcast_to(a[None], (W,) + a.shape) for a in anchor_b]
+        return LocalSGDState(params=state.params.with_buckets(p),
+                             momentum=state.momentum,
+                             anchor=state.anchor.with_buckets(anchor_b),
                              global_u=gu, ef_memory=ef, step=state.step,
                              rng=state.rng)
 

@@ -13,6 +13,12 @@ sign_compress.py with ONE launch per bucket:
     of the sign compressor finish as one tiny segmented reduction.
   * ``scale_sign_rows_2d``  — y = sign(x) * scale[row], the segment-
     aware second pass of the compressor.
+  * ``lars_row_norms_2d``   — per-row sum-of-squares of p and of the
+    decayed gradient g + wd*mask*p in ONE fused HBM pass; the per-layer
+    LARS trust ratios finish as one tiny segmented reduction.
+  * ``fused_lars_bucket_2d``— the LARS update with per-row trust-ratio
+    and weight-decay-mask operands, so every layer of a bucket shares
+    one launch (apply_lars used to dispatch per leaf).
 
 Reduction kernels mask the final partial grid block explicitly: the
 grid over ``cdiv(rows, BLOCK_ROWS)`` reads out-of-bounds rows in its
@@ -123,6 +129,88 @@ def row_abs_sum_2d(x, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
         interpret=interpret,
     )(x)
+
+
+def _lars_row_norms_kernel(wd_ref, p_ref, g_ref, pn_ref, gn_ref, *,
+                           weight_decay: float):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    if weight_decay:
+        g = g + (weight_decay * wd_ref[...]) * p
+    # per-row (lane-only) reductions: out-of-bounds rows of the final
+    # partial grid block land on discarded output rows (cf. row_abs_sum)
+    pn_ref[...] = jnp.sum(p * p, axis=1, keepdims=True)
+    gn_ref[...] = jnp.sum(g * g, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("weight_decay", "interpret"))
+def lars_row_norms_2d(p, g, wd_row, *, weight_decay: float,
+                      interpret: bool = True):
+    """Per-row sum-of-squares of p and of g + wd*mask*p, one HBM pass.
+
+    Returns (p_sq, g_sq), each (rows, 1) f32. The per-layer LARS norms
+    ||p||, ||g + wd*p|| finish as a segmented reduction over these rows
+    (padding contributes exactly 0 while the padding-is-zero invariant
+    holds; see flatbuf.valid_mask).
+    """
+    rows = p.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_lars_row_norms_kernel, weight_decay=weight_decay),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[mspec, spec, spec],
+        out_specs=[mspec, mspec],
+        out_shape=[jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(wd_row, p, g)
+
+
+def _lars_kernel(lr_ref, wd_ref, r_ref, p_ref, g_ref, u_ref, po_ref, uo_ref, *,
+                 momentum: float, weight_decay: float, nesterov: bool):
+    lr = lr_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    if weight_decay:
+        g = g + (weight_decay * wd_ref[...]) * p
+    # r_ref is the (br, 1) per-row trust ratio (1.0 on norm/bias rows)
+    g = g * r_ref[...]
+    u_new = momentum * u + g
+    step = momentum * u_new + g if nesterov else u_new
+    po_ref[...] = (p - lr * step).astype(po_ref.dtype)
+    uo_ref[...] = u_new.astype(uo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
+                                             "nesterov", "interpret"))
+def fused_lars_bucket_2d(p, g, u, lr, wd_row, ratio_row, *, momentum: float,
+                         weight_decay: float, nesterov: bool,
+                         interpret: bool = True):
+    """One fused LARS launch over a whole bucket.
+
+    p, g, u: (rows, 128) same dtype; lr: (1, 1) f32; wd_row: (rows, 1)
+    f32 decay mask; ratio_row: (rows, 1) f32 per-row trust ratio
+    (trust * ||p|| / (||g + wd*p|| + eps) per layer, 1.0 on skip rows).
+    Returns (p', u').
+    """
+    rows = p.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_lars_kernel, momentum=momentum,
+                          weight_decay=weight_decay, nesterov=nesterov),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), mspec, mspec,
+                  spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
+                   jax.ShapeDtypeStruct(u.shape, u.dtype)],
+        interpret=interpret,
+    )(lr, wd_row, ratio_row, p, g, u)
 
 
 def _scale_sign_rows_kernel(x_ref, s_ref, o_ref):

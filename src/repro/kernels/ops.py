@@ -94,6 +94,36 @@ def bucket_sq_sum(x2, *, interpret: bool | None = None):
     return _fb.sq_sum_2d(x2, interpret=interpret)
 
 
+def bucket_lars_norms(p2, g2, wd_row, *, weight_decay: float,
+                      interpret: bool | None = None):
+    """Per-row sum-of-squares of p and of g + wd*mask*p — one HBM pass.
+
+    Returns ((rows, 1) f32, (rows, 1) f32); the per-layer LARS norms
+    finish as one segmented reduction (see ``flatbuf.row_segments``).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _fb.lars_row_norms_2d(p2, g2, jnp.asarray(wd_row),
+                                 weight_decay=weight_decay,
+                                 interpret=interpret)
+
+
+def bucket_fused_lars(p2, g2, u2, wd_row, ratio_row, *, lr, momentum: float,
+                      weight_decay: float, nesterov: bool = True,
+                      interpret: bool | None = None):
+    """One fused LARS launch over a whole (rows, 128) bucket.
+
+    ``ratio_row`` is the (rows, 1) f32 per-row trust ratio (1.0 on
+    norm/bias rows, which take the plain LR). Returns (p2', u2')."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return _fb.fused_lars_bucket_2d(p2, g2, u2, lr2, jnp.asarray(wd_row),
+                                    ratio_row, momentum=momentum,
+                                    weight_decay=weight_decay,
+                                    nesterov=nesterov, interpret=interpret)
+
+
 def bucket_sign_compress(x2, seg_ids, seg_sizes, *, interpret: bool | None = None):
     """Segment-aware sign compressor over a bucket.
 

@@ -45,12 +45,37 @@ class TrainBundle:
     batch_shardings: Any = None
 
 
-def state_partition_specs(specs, layout: MeshLayout, run: RunConfig):
-    """PartitionSpecs for a LocalSGDState built from param specs."""
+def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
+                          resident: bool = False):
+    """PartitionSpecs for a LocalSGDState built from param specs.
+
+    ``resident=True`` mirrors the resident bucket form (see
+    core/local_sgd): every bucket is replicated within a worker by
+    construction (resident mode requires all leaves bucketable), so the
+    stacked buffers shard only their leading worker dim over the worker
+    axes and single-copy buffers (anchor/global_u) are fully replicated.
+    """
     from repro.core.local_sgd import needs_anchor
+    ls = run.local_sgd
+    if resident:
+        from repro.core import flatbuf
+        blay = flatbuf.build_layout(
+            mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
+            wd_mask=mbase.norm_param_mask(specs))
+        wa = layout.worker_axes
+        w = wa if len(wa) != 1 else wa[0]
+        nb = blay.num_buckets
+        st = lambda: flatbuf.BucketState(blay, tuple(P(w) for _ in range(nb)),
+                                         leading=1)
+        sg = lambda: flatbuf.BucketState(blay, tuple(P() for _ in range(nb)))
+        return LocalSGDState(
+            params=st(), momentum=st(),
+            anchor=sg() if needs_anchor(ls) else None,
+            global_u=sg() if ls.global_momentum > 0 else None,
+            ef_memory=st() if ls.sync_compression == "ef_sign" else None,
+            step=P(), rng=P())
     stacked = mbase.partition_specs(specs, layout, stacked=True)
     single = mbase.partition_specs(specs, layout, stacked=False)
-    ls = run.local_sgd
     return LocalSGDState(
         params=stacked,
         momentum=stacked,
@@ -102,17 +127,24 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                       pack_axes_tree(specs, lay_m))
             pm_flat = make_packed_mean_flat(mesh, layout.worker_axes)
 
+    # Resident bucket state rides the kernel flag; within-worker-sharded
+    # leaves would need a per-leaf side channel, so those layouts fall
+    # back to the tree-in/tree-out kernel path (still one launch/bucket).
+    from repro.core.local_sgd import resident_eligible
+    resident = resident_eligible(use_kernel, True, bucketable)
     init, local_step, sync = make_local_sgd(run, loss, num_workers=num_workers,
                                             wd_mask=wd_mask, use_kernel=use_kernel,
                                             packed_mean_fn=pm,
                                             packed_mean_flat_fn=pm_flat,
-                                            bucketable=bucketable)
+                                            bucketable=bucketable,
+                                            resident=resident,
+                                            sharded=mesh is not None)
 
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
                          specs=specs, init=init, local_step=local_step, sync=sync)
 
     if mesh is not None and jit:
-        sspec = state_partition_specs(specs, layout, run)
+        sspec = state_partition_specs(specs, layout, run, resident=resident)
         bspec = inp.train_batch_pspecs(cfg, run.shape, layout)
         ssh = _named(mesh, sspec)
         bsh = _named(mesh, bspec)

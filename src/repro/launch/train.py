@@ -91,7 +91,9 @@ def eval_lm(bundle, data: dict, batch: int = 8):
         return m["xent"]
 
     def fn(state):
-        params = jax.tree.map(lambda p: p.mean(axis=0), state.params)
+        # eval boundary: materializes the pytree view of a resident state
+        from repro.core.local_sgd import mean_params
+        params = mean_params(state)
         losses = []
         n = len(next(iter(data.values())))
         for i in range(0, min(n, 4 * batch), batch):

@@ -3,6 +3,15 @@
 The paper's Table 5 combines SGD + momentum + LARS with post-local SGD;
 LARS only rescales the per-layer step, so it composes with local SGD
 without extra synchronization (footnote 6 in the paper).
+
+Two dispatch strategies, mirroring optim/sgd.py:
+
+* ``use_kernel=False`` — pure-jnp per-leaf reference update.
+* ``use_kernel=True``  — the flat parameter bus: the per-layer trust
+  ratios are exactly the flatbuf segmented reduction (segment norms of
+  p and of g + wd*p from ONE fused row-norms pass), and the update is
+  ONE fused Pallas launch per dtype bucket with the trust ratio carried
+  as a per-row operand — O(#dtypes) dispatches instead of O(#leaves).
 """
 from __future__ import annotations
 
@@ -28,10 +37,68 @@ def _lars_leaf(p, g, u, skip, *, lr, trust, momentum, wd, nesterov):
     return p_new.astype(p.dtype), u_new.astype(u.dtype)
 
 
+def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
+                       momentum_coef: float, weight_decay: float,
+                       nesterov: bool):
+    """Bucket-in/bucket-out fused LARS: the resident-state hot path.
+
+    Per bucket: one fused row-norms pass yields per-row sums of p^2 and
+    (g + wd*mask*p)^2; a tiny segmented reduction over the static
+    row->layer map turns them into per-layer trust ratios; one fused
+    update launch applies them via a per-row ratio operand.  Zero
+    pack/unpack — relies on the padding-is-zero invariant
+    (flatbuf.valid_mask) so padded slots contribute 0 to both norms.
+
+    Returns (pb', ub') as lists of buckets.
+    """
+    from repro.core import flatbuf
+    from repro.kernels import ops as kops
+
+    po, uo = [], []
+    for b in range(layout.num_buckets):
+        wd_row = flatbuf.wd_rows(layout, b)
+        seg = jnp.asarray(flatbuf.row_segments(layout, b))
+        skip = jnp.asarray(flatbuf.segment_skip_wd(layout, b))
+        p_sq, g_sq = kops.bucket_lars_norms(pb[b], gb[b], wd_row,
+                                            weight_decay=weight_decay)
+        n_seg = int(skip.shape[0])
+        wn = jnp.sqrt(jax.ops.segment_sum(p_sq[:, 0], seg, num_segments=n_seg))
+        gn = jnp.sqrt(jax.ops.segment_sum(g_sq[:, 0], seg, num_segments=n_seg))
+        ratio = jnp.where((wn > 0) & (gn > 0), trust * wn / (gn + 1e-9), 1.0)
+        ratio = jnp.where(skip, 1.0, ratio)     # norm/bias: plain LR
+        p2, u2 = kops.bucket_fused_lars(pb[b], gb[b], ub[b], wd_row,
+                                        ratio[seg][:, None], lr=lr,
+                                        momentum=momentum_coef,
+                                        weight_decay=weight_decay,
+                                        nesterov=nesterov)
+        po.append(p2)
+        uo.append(u2)
+    return po, uo
+
+
+def _apply_lars_bucketed(params, grads, momentum, wd_mask, *, lr, trust,
+                         momentum_coef, weight_decay, nesterov):
+    from repro.core import flatbuf
+
+    layout = flatbuf.build_layout(params, wd_mask=wd_mask)
+    po, uo = apply_lars_buckets(
+        layout, flatbuf.flatten(layout, params), flatbuf.flatten(layout, grads),
+        flatbuf.flatten(layout, momentum), lr=lr, trust=trust,
+        momentum_coef=momentum_coef, weight_decay=weight_decay,
+        nesterov=nesterov)
+    return flatbuf.unflatten(layout, po), flatbuf.unflatten(layout, uo)
+
+
 def apply_lars(params, grads, momentum, *, lr, trust: float, momentum_coef: float,
-               weight_decay: float, nesterov: bool, wd_mask=None):
+               weight_decay: float, nesterov: bool, wd_mask=None,
+               use_kernel: bool = False):
     if wd_mask is None:
         wd_mask = jax.tree.map(lambda _: False, params)
+    if use_kernel:
+        return _apply_lars_bucketed(params, grads, momentum, wd_mask, lr=lr,
+                                    trust=trust, momentum_coef=momentum_coef,
+                                    weight_decay=weight_decay,
+                                    nesterov=nesterov)
     return tree_map_pairs(
         lambda p, g, u, s: _lars_leaf(p, g, u, s, lr=lr, trust=trust,
                                       momentum=momentum_coef, wd=weight_decay,

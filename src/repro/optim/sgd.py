@@ -49,20 +49,29 @@ def _leaf_update(p, g, u, skip_wd, *, lr, momentum, wd, nesterov):
     return p_new.astype(p.dtype), u_new.astype(u.dtype)
 
 
-def _apply_sgd_bucketed(params, grads, momentum, wd_mask, *, lr,
-                        momentum_coef, weight_decay, nesterov, grad_clip):
-    """Flat-bus path: O(#dtype buckets) kernel launches, not O(#leaves)."""
+def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
+                      weight_decay: float, nesterov: bool,
+                      grad_clip: float = 0.0):
+    """Bucket-in/bucket-out fused SGD: the resident-state hot path.
+
+    ``pb``/``gb``/``ub`` are per-bucket (rows, 128) buffers laid out by
+    ``layout`` (one launch per bucket; the grad-clip global norm is one
+    fused sum-of-squares per bucket).  Performs ZERO pack/unpack — with
+    state held resident across local steps (core/local_sgd) the flatten
+    cost is paid once per sync round instead of once per step.
+
+    Returns (pb', ub') as lists of buckets.
+    """
     from repro.core import flatbuf
     from repro.kernels import ops as kops
 
-    layout = flatbuf.build_layout(params, wd_mask=wd_mask)
-    gb = flatbuf.flatten(layout, grads)
     if grad_clip:
+        # grad buckets have exact-zero padding (AD through the bucket
+        # view transposes slices into zero-pads), so the bucket norm
+        # equals the per-leaf global norm
         gn = jnp.sqrt(sum(kops.bucket_sq_sum(g) for g in gb))
         scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
         gb = [(g * scale).astype(g.dtype) for g in gb]
-    pb = flatbuf.flatten(layout, params)
-    ub = flatbuf.flatten(layout, momentum)
     po, uo = [], []
     for b in range(layout.num_buckets):
         p2, u2 = kops.bucket_fused_sgd(pb[b], gb[b], ub[b],
@@ -72,6 +81,24 @@ def _apply_sgd_bucketed(params, grads, momentum, wd_mask, *, lr,
                                        nesterov=nesterov)
         po.append(p2)
         uo.append(u2)
+    return po, uo
+
+
+def _apply_sgd_bucketed(params, grads, momentum, wd_mask, *, lr,
+                        momentum_coef, weight_decay, nesterov, grad_clip):
+    """Flat-bus path: O(#dtype buckets) kernel launches, not O(#leaves).
+
+    Tree-in/tree-out wrapper around :func:`apply_sgd_buckets` — it packs
+    and unpacks around every call, which the resident-state path in
+    core/local_sgd avoids entirely.
+    """
+    from repro.core import flatbuf
+
+    layout = flatbuf.build_layout(params, wd_mask=wd_mask)
+    po, uo = apply_sgd_buckets(
+        layout, flatbuf.flatten(layout, params), flatbuf.flatten(layout, grads),
+        flatbuf.flatten(layout, momentum), lr=lr, momentum_coef=momentum_coef,
+        weight_decay=weight_decay, nesterov=nesterov, grad_clip=grad_clip)
     return flatbuf.unflatten(layout, po), flatbuf.unflatten(layout, uo)
 
 

@@ -109,6 +109,52 @@ def _ring_bytes(op: str, result_bytes: int, n: int) -> float:
     return float(result_bytes)  # collective-permute
 
 
+# ---------------------------------------------------------------------------
+# Jaxpr op census (pre-XLA, so nothing is fused away or re-materialized)
+# ---------------------------------------------------------------------------
+
+def _subjaxprs(v):
+    """Yield any (Closed)Jaxpr objects hiding in an eqn param value."""
+    if isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+    elif hasattr(v, "eqns"):              # raw Jaxpr
+        yield v
+    elif hasattr(v, "jaxpr"):             # ClosedJaxpr
+        yield v.jaxpr
+
+
+def jaxpr_op_counts(jaxpr, *, opaque=("pallas_call",)) -> dict:
+    """Count primitive occurrences in a (closed) jaxpr, recursively.
+
+    Descends into call/control-flow sub-jaxprs (pjit, scan, cond,
+    custom_*), but treats the primitives in ``opaque`` — kernels — as
+    leaves, so e.g. the interpret-mode lowering of a ``pallas_call``
+    never pollutes the count.  Used by the resident-state regression
+    tests: `flatbuf.flatten` (pack) shows up as ``concatenate`` +
+    ``pad`` eqns and `unflatten` as ``slice``/``gather`` (the vmapped
+    form), so "zero pack/unpack between syncs" is checkable as
+    ``counts.get('concatenate', 0) == 0`` while
+    ``counts['pallas_call']`` gives optimizer kernel launches per step.
+    """
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    counts: dict[str, int] = {}
+
+    def visit(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            counts[name] = counts.get(name, 0) + 1
+            if name in opaque:
+                continue
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    visit(sub)
+
+    visit(jaxpr)
+    return counts
+
+
 def parse_collectives(hlo_text: str, *, pod_size: int = 0) -> CollectiveSummary:
     summary = CollectiveSummary()
     pat = re.compile(

@@ -1,7 +1,15 @@
 """Subprocess helper for test_bucket_sync: lower `sync` on a forced
-8-device host platform and report the collective mix as JSON.
+8-device host platform and report the collective mix as JSON —
+plus jaxpr op-census modes for the resident-state regression (count
+optimizer kernel launches and pack/unpack ops per local step / sync).
 
-Usage: python _bucket_sync_probe.py {bucket|leaf}
+Usage: python _bucket_sync_probe.py
+           {bucket|leaf|resident|ops_resident|ops_kernel}
+
+``resident`` lowers the RESIDENT-state sync (state held as
+flatbuf.BucketState buffers, sharded P(worker) on the leading dim): the
+collective mix must be identical to the non-resident bucket path — one
+uint8 payload gather + one scale gather per dtype bucket.
 """
 import os
 
@@ -25,8 +33,58 @@ SHAPES = {"w1": (64, 33), "w2": (33,), "w3": (16, 7), "w4": (130,),
 W = 8
 
 
+def ops_census(resident: bool):
+    """Jaxpr op counts of one local step and one sync, resident vs the
+    tree-in/tree-out kernel path (`flatten` = concatenate+pad eqns,
+    `unflatten` = slice/gather eqns, optimizer launches = pallas_call).
+    """
+    from repro.core.local_sgd import make_local_sgd
+    from repro.roofline.hlo import jaxpr_op_counts
+
+    W = 4
+
+    def loss(p, b):
+        pred = jnp.tanh(b["x"] @ p["w1"] + p["b1"]) @ p["w2"]
+        l = jnp.mean((pred - b["y"]) ** 2)
+        return l, {"xent": l}
+
+    run = RunConfig(
+        model=ModelConfig(name="probe", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=2, sync_compression="sign",
+                                 wire_pack=True, local_momentum=0.9,
+                                 nesterov=True),
+        optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=1e-3,
+                          grad_clip=0.5, lr_decay_steps=()))
+    wd_mask = {"w1": False, "b1": True, "w2": False}
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
+        resident=resident)
+    params = {"w1": jax.ShapeDtypeStruct((6, 5), jnp.float32),
+              "b1": jax.ShapeDtypeStruct((5,), jnp.float32),
+              "w2": jax.ShapeDtypeStruct((5, 2), jnp.float32)}
+    batch = {"x": jax.ShapeDtypeStruct((W, 4, 6), jnp.float32),
+             "y": jax.ShapeDtypeStruct((W, 4, 2), jnp.float32)}
+    state = jax.eval_shape(init, jax.random.PRNGKey(0), params)
+    step_counts = jaxpr_op_counts(jax.make_jaxpr(local_step)(state, batch))
+    sync_counts = jaxpr_op_counts(jax.make_jaxpr(lambda s: sync(s))(state))
+    from repro.core import flatbuf
+    nb = flatbuf.build_layout(params).num_buckets
+    print(json.dumps({
+        "mode": "ops_resident" if resident else "ops_kernel",
+        "num_buckets": nb,
+        "step": step_counts,
+        "sync": sync_counts,
+    }))
+
+
 def main():
-    bucket = sys.argv[1] == "bucket"
+    if sys.argv[1].startswith("ops_"):
+        ops_census(sys.argv[1] == "ops_resident")
+        return
+    mode = sys.argv[1]
+    bucket = mode == "bucket"
+    resident = mode == "resident"
     mesh = Mesh(np.array(jax.devices()[:W]), ("data",))
     run = RunConfig(
         model=ModelConfig(name="probe", family="dense", citation=""),
@@ -41,24 +99,35 @@ def main():
     pm = (make_packed_mean(mesh, ("data",)), None)
     init, local_step, sync = make_local_sgd(
         run, loss, num_workers=W, packed_mean_fn=pm,
-        packed_mean_flat_fn=make_packed_mean_flat(mesh, ("data",)) if bucket
-        else None,
-        bucket_sync=bucket)
+        packed_mean_flat_fn=(make_packed_mean_flat(mesh, ("data",))
+                             if bucket or resident else None),
+        bucket_sync=bucket, use_kernel=resident, resident=resident)
 
-    stacked = {k: jax.ShapeDtypeStruct((W,) + s, jnp.float32)
-               for k, s in SHAPES.items()}
     single = {k: jax.ShapeDtypeStruct(s, jnp.float32)
               for k, s in SHAPES.items()}
-    state = LocalSGDState(params=stacked, momentum=stacked, anchor=single,
-                          global_u=None, ef_memory=None,
-                          step=jax.ShapeDtypeStruct((), jnp.int32),
-                          rng=jax.eval_shape(lambda: jax.random.PRNGKey(0)))
-    ssh = LocalSGDState(
-        params={k: NamedSharding(mesh, P("data")) for k in SHAPES},
-        momentum={k: NamedSharding(mesh, P("data")) for k in SHAPES},
-        anchor={k: NamedSharding(mesh, P()) for k in SHAPES},
-        global_u=None, ef_memory=None,
-        step=NamedSharding(mesh, P()), rng=NamedSharding(mesh, P()))
+    if resident:
+        state = jax.eval_shape(init, jax.random.PRNGKey(0), single)
+        sh = lambda spec: lambda tree: jax.tree.map(
+            lambda _: NamedSharding(mesh, spec), tree)
+        ssh = LocalSGDState(params=sh(P("data"))(state.params),
+                            momentum=sh(P("data"))(state.momentum),
+                            anchor=sh(P())(state.anchor),
+                            global_u=None, ef_memory=None,
+                            step=NamedSharding(mesh, P()),
+                            rng=NamedSharding(mesh, P()))
+    else:
+        stacked = {k: jax.ShapeDtypeStruct((W,) + s, jnp.float32)
+                   for k, s in SHAPES.items()}
+        state = LocalSGDState(params=stacked, momentum=stacked, anchor=single,
+                              global_u=None, ef_memory=None,
+                              step=jax.ShapeDtypeStruct((), jnp.int32),
+                              rng=jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+        ssh = LocalSGDState(
+            params={k: NamedSharding(mesh, P("data")) for k in SHAPES},
+            momentum={k: NamedSharding(mesh, P("data")) for k in SHAPES},
+            anchor={k: NamedSharding(mesh, P()) for k in SHAPES},
+            global_u=None, ef_memory=None,
+            step=NamedSharding(mesh, P()), rng=NamedSharding(mesh, P()))
     jsync = jax.jit(sync, static_argnames=("group",),
                     in_shardings=(ssh,), out_shardings=ssh)
     with mesh:
@@ -66,7 +135,7 @@ def main():
     s = parse_collectives(compiled.as_text())
     gathers = [o for o in s.ops if o.op == "all-gather"]
     print(json.dumps({
-        "mode": "bucket" if bucket else "leaf",
+        "mode": mode,
         "num_leaves": len(SHAPES),
         "all_gather_count": len(gathers),
         "all_gather_bytes": sum(o.result_bytes for o in gathers),

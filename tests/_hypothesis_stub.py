@@ -16,10 +16,15 @@ import pytest
 
 
 class _AnyStrategy:
-    """Accepts any strategy-construction call; never actually drawn from."""
+    """Accepts any strategy-construction call — including chained
+    combinators like ``st.lists(...).map(tuple)`` — and is never
+    actually drawn from."""
 
     def __getattr__(self, name):
-        return lambda *a, **k: None
+        return lambda *a, **k: _AnyStrategy()
+
+    def __call__(self, *a, **k):
+        return _AnyStrategy()
 
 
 st = _AnyStrategy()

@@ -29,6 +29,45 @@ def _probe(mode: str) -> dict:
 
 
 @pytest.mark.slow
+def test_resident_state_zero_pack_unpack_between_syncs():
+    """ISSUE-2 acceptance: the resident path performs ZERO pack ops
+    (concatenate/pad from flatbuf.flatten) per local step AND per sync,
+    while the tree-in/tree-out kernel path pays them every call — this
+    guards the 15->5 full-state HBM-pass win.  Optimizer dispatch stays
+    O(#dtype buckets): with grad-clip on, exactly 2 launches per bucket
+    (one fused sq-sum + one fused SGD update) per local step."""
+    res = _probe("ops_resident")
+    leg = _probe("ops_kernel")
+    for seg in ("step", "sync"):
+        assert res[seg].get("concatenate", 0) == 0, res[seg]
+        assert res[seg].get("pad", 0) == 0, res[seg]
+    # legacy packs p/g/u every step (one concatenate per flatten) and
+    # packs the delta twice per sync (compressor + wire pack)
+    assert leg["step"].get("concatenate", 0) >= 3
+    assert leg["sync"].get("concatenate", 0) >= 2
+    assert res["step"]["pallas_call"] == 2 * res["num_buckets"]
+    # the only state unpacks left in the resident step are the forward's
+    # bucket->pytree view (one per leaf); legacy pays two full unpacks
+    # (p' and u') on top of zero view cost
+    gathers = lambda d: d.get("gather", 0) + d.get("slice", 0)
+    assert gathers(res["step"]) <= gathers(leg["step"])
+
+
+@pytest.mark.slow
+def test_resident_sync_collectives_match_bucket_path():
+    """The RESIDENT sync (state as worker-sharded flatbuf buckets) must
+    keep the flat-bus collective contract: ONE uint8 payload gather +
+    ONE scale gather per dtype bucket, same wire bytes as the
+    non-resident bucket path (the GSPMD-friendly compressor form must
+    not fall back to a dense f32 gather)."""
+    res = _probe("resident")
+    bucket = _probe("bucket")
+    assert res["all_gather_count"] == bucket["all_gather_count"] == 2
+    assert res["all_gather_bytes"] == bucket["all_gather_bytes"]
+    assert res["count"] <= bucket["count"]
+
+
+@pytest.mark.slow
 def test_packed_mean_one_gather_per_bucket():
     bucket = _probe("bucket")
     leaf = _probe("leaf")

@@ -255,8 +255,16 @@ def test_bucket_sync_trajectory_matches_per_leaf(compression, wire_pack):
 
 def test_bucket_kernel_trajectory_matches_reference():
     """Bucketed Pallas optimizer + bucketed sign sync vs the pure-jnp
-    per-leaf reference: same trajectory within kernel tolerance."""
+    per-leaf reference: same trajectory within kernel tolerance.
+
+    With use_kernel=True the state is RESIDENT (ISSUE 2): params live as
+    flatbuf buckets across steps, so the comparison goes through the
+    unpack_state boundary (tests/test_resident_state.py covers the full
+    lifecycle)."""
+    from repro.core.local_sgd import is_resident, unpack_state
     s_k = _run("sign", bucket_sync=True, use_kernel=True)
+    assert is_resident(s_k)
+    s_k = unpack_state(s_k)
     s_r = _run("sign", bucket_sync=False, use_kernel=False)
     for k in ("w1", "b1", "w2"):
         np.testing.assert_allclose(np.asarray(s_k.params[k]),

@@ -1,0 +1,142 @@
+"""Property tests for the flat-bus invariants the resident state relies on.
+
+Hypothesis-driven sweeps over random ragged pytrees of mixed dtypes:
+flatten/unflatten identity, segment-id/size consistency, and padding
+never leaking into segmented reductions.  When hypothesis is absent
+(optional extra), only the ``@given`` sweeps are skipped via
+``_hypothesis_stub``; the deterministic cases below still run in tier-1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import flatbuf
+from repro.kernels import ops as kops
+
+DTYPES = [np.float32, "bfloat16"]
+
+
+def _tree_from_spec(spec, seed=0):
+    """spec: list of (shape tuple, dtype index) -> dict pytree."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, (shape, di) in enumerate(spec):
+        dt = jnp.dtype(DTYPES[di])
+        tree[f"leaf{i}"] = jnp.asarray(rng.normal(size=shape), dt)
+    return tree
+
+
+_shapes = st.lists(
+    st.tuples(
+        st.lists(st.integers(min_value=1, max_value=40), min_size=0, max_size=3)
+          .map(tuple),
+        st.integers(min_value=0, max_value=len(DTYPES) - 1)),
+    min_size=1, max_size=8)
+
+
+def _check_roundtrip(tree):
+    lay = flatbuf.build_layout(tree)
+    bufs = flatbuf.flatten(lay, tree)
+    out = flatbuf.unflatten(lay, bufs)
+    for k in tree:
+        assert out[k].shape == tree[k].shape and out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(tree[k], np.float32),
+                                      np.asarray(out[k], np.float32))
+
+
+def _check_layout_invariants(tree):
+    lay = flatbuf.build_layout(tree)
+    assert len(set(lay.bucket_dtypes)) == lay.num_buckets   # one bucket/dtype
+    for b in range(lay.num_buckets):
+        slots = lay.bucket_slots(b)
+        seg = flatbuf.row_segments(lay, b)
+        sizes = flatbuf.segment_sizes(lay, b)
+        mask = flatbuf.valid_mask(lay, b)
+        skip = flatbuf.segment_skip_wd(lay, b)
+        assert seg.shape == (lay.bucket_rows[b],)
+        assert sizes.shape == (len(slots),) == skip.shape
+        off = 0
+        for s in slots:
+            assert s.row_offset == off and s.rows % flatbuf.SUBLANE == 0
+            assert s.rows * flatbuf.LANE >= s.size > 0 or s.size == 0 or \
+                s.shape == ()
+            assert (seg[s.row_offset:s.row_offset + s.rows] == s.seg).all()
+            assert sizes[s.seg] == s.size
+            # the valid mask covers exactly the TRUE elements per segment
+            m = mask[s.row_offset:s.row_offset + s.rows]
+            assert m.sum() == s.size
+            off += s.rows
+        assert off == lay.bucket_rows[b]
+
+
+def _check_padding_never_leaks(tree, seed=0):
+    """Segmented reductions (compressor L1 scales, sq-sum) are invariant
+    to GARBAGE in padding slots once re-masked, and flatten itself
+    zero-fills padding — so per-leaf stats computed on buckets equal the
+    leaf-path stats exactly."""
+    rng = np.random.default_rng(seed + 99)
+    lay = flatbuf.build_layout(tree)
+    bufs = flatbuf.flatten(lay, tree)
+    leaves = list(tree.values())
+    for b, buf in enumerate(bufs):
+        mask = flatbuf.valid_mask(lay, b)
+        # flatten zero-fills padding
+        np.testing.assert_array_equal(
+            np.asarray(buf, np.float32) * (1.0 - mask), 0.0)
+        garbage = jnp.asarray(rng.normal(size=buf.shape) * 1e6, jnp.float32)
+        dirty = (buf.astype(jnp.float32) + garbage * (1.0 - mask)) * mask
+        _, scales = kops.bucket_sign_compress(
+            dirty, flatbuf.row_segments(lay, b), flatbuf.segment_sizes(lay, b))
+        for s in lay.bucket_slots(b):
+            want = np.mean(np.abs(np.asarray(leaves[s.index], np.float32)))
+            np.testing.assert_allclose(float(scales[s.seg]), want,
+                                       rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(
+            float(kops.bucket_sq_sum(dirty)),
+            sum(float(np.sum(np.square(np.asarray(l, np.float32))))
+                for l in leaves if np.dtype(l.dtype).name == lay.bucket_dtypes[b]),
+            rtol=1e-5)
+
+
+# --- deterministic cases (always run, hypothesis or not) -------------------
+
+_DET_SPEC = [((3, 130), 0), ((7,), 1), ((1,), 0), ((), 0), ((16, 9), 1),
+             ((128,), 0), ((2, 3, 5), 0)]
+
+
+def test_roundtrip_identity_deterministic():
+    _check_roundtrip(_tree_from_spec(_DET_SPEC))
+
+
+def test_layout_invariants_deterministic():
+    _check_layout_invariants(_tree_from_spec(_DET_SPEC))
+
+
+def test_padding_never_leaks_deterministic():
+    _check_padding_never_leaks(_tree_from_spec(_DET_SPEC))
+
+
+# --- hypothesis sweeps -----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(spec=_shapes, seed=st.integers(min_value=0, max_value=2**16))
+def test_roundtrip_identity_prop(spec, seed):
+    _check_roundtrip(_tree_from_spec(spec, seed))
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=_shapes)
+def test_layout_invariants_prop(spec):
+    _check_layout_invariants(_tree_from_spec(spec))
+
+
+@settings(max_examples=10, deadline=None)
+@given(spec=_shapes, seed=st.integers(min_value=0, max_value=2**16))
+def test_padding_never_leaks_prop(spec, seed):
+    _check_padding_never_leaks(_tree_from_spec(spec, seed), seed)

@@ -1,0 +1,431 @@
+"""Resident bucket state (ISSUE 2): trajectory-equivalence harness.
+
+Runs resident-bucket local SGD (state held as flatbuf.BucketState across
+local steps, ``use_kernel=True``) against the per-leaf pure-jnp reference
+oracle over N sync rounds x H local steps, for SGD (momentum / nesterov /
+wd-mask / grad-clip on and off) and LARS, asserting dtype preservation
+and fp32-tolerance trajectory match.  Also covers the BucketState
+lifecycle boundaries: unpack -> mutate -> pack mid-training,
+bucket-in/bucket-out compressors on raw buckets (with a jaxpr census
+showing the redundant unflatten/re-flatten pair is gone), and
+checkpoint round-trips from live resident states (plus cross-format:
+a per-leaf checkpoint restoring into resident form).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core import compression as comp
+from repro.core import flatbuf
+from repro.core.local_sgd import (is_resident, make_local_sgd, mean_params,
+                                  pack_state, unpack_state)
+from repro.roofline.hlo import jaxpr_op_counts
+
+W = 4
+H = 2        # local steps per sync round
+ROUNDS = 3
+
+WD_MASK = {"w1": False, "b1": True, "w2": False}
+
+
+def _loss(params, batch):
+    w1 = params["w1"].astype(jnp.float32)
+    w2 = params["w2"].astype(jnp.float32)
+    pred = jnp.tanh(batch["x"] @ w1 + params["b1"]) @ w2
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def _init_params(key=1, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return {"w1": (jax.random.normal(k1, (6, 5)) * 0.4).astype(dtype),
+            "b1": jnp.zeros((5,)),
+            "w2": (jax.random.normal(k2, (5, 2)) * 0.4).astype(dtype)}
+
+
+def _cfg(*, compression="none", wire_pack=False, optimizer="sgd",
+         momentum=0.9, nesterov=True, wd=1e-3, clip=0.0, global_momentum=0.0,
+         noise_eta=0.0):
+    return RunConfig(
+        model=ModelConfig(name="q", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, sync_compression=compression,
+                                 wire_pack=wire_pack, local_momentum=momentum,
+                                 nesterov=nesterov,
+                                 global_momentum=global_momentum),
+        optim=OptimConfig(optimizer=optimizer, base_lr=0.05, base_batch=W * 4,
+                          weight_decay=wd, grad_clip=clip, lars_trust=0.01,
+                          noise_eta=noise_eta, lr_decay_steps=()))
+
+
+def _batch(t):
+    k = jax.random.fold_in(jax.random.PRNGKey(2), t)
+    x = jax.random.normal(k, (W, 4, 6))
+    y = jnp.tanh(x @ (jnp.ones((6, 5)) * 0.3)) @ (jnp.ones((5, 2)) * 0.3)
+    return {"x": x, "y": y}
+
+
+def _run(run, *, resident, rounds=ROUNDS, dtype=jnp.float32, hook=None):
+    """rounds x H local steps; ``hook(state, r) -> state`` runs after
+    each sync (mid-training boundary surgery in the round-trip test)."""
+    init, local_step, sync = make_local_sgd(
+        run, _loss, num_workers=W, wd_mask=WD_MASK,
+        use_kernel=resident, bucket_sync=resident)
+    state = init(jax.random.PRNGKey(0), _init_params(dtype=dtype))
+    assert is_resident(state) == resident
+    for r in range(rounds):
+        for _ in range(H):
+            state, metrics = local_step(state, _batch(int(state.step)))
+        state = sync(state)
+        if hook is not None:
+            state = hook(state, r)
+    return state, metrics
+
+
+def _assert_states_match(res_state, ref_state, *, rtol=2e-4, atol=1e-6):
+    """Resident trajectory == per-leaf reference: dtypes preserved
+    bit-level, values within fp32/kernel tolerance."""
+    view = unpack_state(res_state)
+    for field in ("params", "momentum", "anchor", "global_u", "ef_memory"):
+        got, want = getattr(view, field), getattr(ref_state, field)
+        assert (got is None) == (want is None), field
+        if got is None:
+            continue
+        for k in want:
+            assert got[k].dtype == want[k].dtype, (field, k)
+            assert got[k].shape == want[k].shape, (field, k)
+            np.testing.assert_allclose(
+                np.asarray(got[k], np.float32), np.asarray(want[k], np.float32),
+                rtol=rtol, atol=atol, err_msg=f"{field}/{k}")
+
+
+# ---------------------------------------------------------------------------
+# SGD / LARS trajectory equivalence (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("momentum,nesterov", [(0.0, False), (0.9, False),
+                                               (0.9, True)])
+@pytest.mark.parametrize("wd,clip", [(0.0, 0.0), (1e-3, 0.5)])
+def test_sgd_resident_matches_reference(momentum, nesterov, wd, clip):
+    run = _cfg(momentum=momentum, nesterov=nesterov, wd=wd, clip=clip)
+    s_res, _ = _run(run, resident=True)
+    s_ref, _ = _run(run, resident=False)
+    _assert_states_match(s_res, s_ref)
+
+
+@pytest.mark.parametrize("wd", [0.0, 1e-3])
+def test_lars_resident_matches_reference(wd):
+    """Bucketized LARS: segment-norm trust ratios == per-leaf ratios
+    over a full multi-sync trajectory (wd-mask exercises the skip rows,
+    which must take the plain LR)."""
+    run = _cfg(optimizer="lars", wd=wd)
+    s_res, _ = _run(run, resident=True)
+    s_ref, _ = _run(run, resident=False)
+    _assert_states_match(s_res, s_ref)
+
+
+@pytest.mark.parametrize("compression,wire_pack,gm", [
+    ("sign", False, 0.0), ("sign", True, 0.0), ("ef_sign", False, 0.0),
+    ("ef_sign", True, 0.0), ("sign", True, 0.9), ("none", False, 0.9)])
+def test_compressed_sync_resident_matches_reference(compression, wire_pack, gm):
+    """Sync entirely in bucket form (compressor + wire pack + global
+    momentum + anchor update) == the per-leaf reference."""
+    run = _cfg(compression=compression, wire_pack=wire_pack,
+               global_momentum=gm, clip=0.5)
+    s_res, _ = _run(run, resident=True)
+    s_ref, _ = _run(run, resident=False)
+    _assert_states_match(s_res, s_ref)
+
+
+def test_resident_bf16_dtype_preserved():
+    """bf16 params stay bf16 in bucket form and through unpack (bit-level
+    dtype preservation), with the trajectory matching the per-leaf
+    reference at bf16 tolerance."""
+    run = _cfg()
+    s_res, _ = _run(run, resident=True, dtype=jnp.bfloat16)
+    s_ref, _ = _run(run, resident=False, dtype=jnp.bfloat16)
+    view = unpack_state(s_res)
+    assert view.params["w1"].dtype == jnp.bfloat16
+    assert view.params["b1"].dtype == jnp.float32   # mixed-dtype buckets
+    assert view.momentum["w1"].dtype == jnp.bfloat16
+    _assert_states_match(s_res, s_ref, rtol=0.05, atol=1e-2)
+
+
+def test_resident_metrics_and_mean_params():
+    run = _cfg()
+    s_res, m_res = _run(run, resident=True)
+    s_ref, m_ref = _run(run, resident=False)
+    np.testing.assert_allclose(float(m_res["loss"]), float(m_ref["loss"]),
+                               rtol=1e-4)
+    mp = mean_params(s_res)
+    for k, v in mean_params(s_ref).items():
+        assert mp[k].shape == v.shape
+        np.testing.assert_allclose(np.asarray(mp[k]), np.asarray(v),
+                                   rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# BucketState lifecycle: unpack -> mutate -> pack mid-training
+# ---------------------------------------------------------------------------
+
+def test_unpack_pack_pure_roundtrip_is_bitexact():
+    run = _cfg(compression="sign", wire_pack=True, clip=0.5)
+    state, _ = _run(run, resident=True, rounds=2)
+    back = pack_state(unpack_state(state), wd_mask=WD_MASK)
+    assert is_resident(back)
+    assert back.params.layout == state.params.layout
+    for a, b in zip(state.params.buckets, back.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    for a, b in zip(state.anchor.buckets, back.anchor.buckets):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_unpack_pack_roundtrip_promoted_mixed_dtype_state():
+    """Regression: ef_memory/global_u promote to f32 after the first
+    sync while bf16 params keep two dtype buckets — pack_state must
+    re-pack the promoted fields with the params bucket GEOMETRY (not a
+    fresh collapsed layout), or the next sync zips mismatched bucket
+    lists.  The round-trip must be bit-exact and training must continue
+    identically."""
+    run = _cfg(compression="ef_sign", wire_pack=True, global_momentum=0.9,
+               clip=0.5)
+    state, _ = _run(run, resident=True, rounds=2, dtype=jnp.bfloat16)
+    assert state.ef_memory.buckets[0].dtype == jnp.float32   # promoted
+    back = pack_state(unpack_state(state), wd_mask=WD_MASK)
+    for field in ("params", "ef_memory", "global_u", "anchor"):
+        a_bs, b_bs = getattr(state, field), getattr(back, field)
+        assert len(a_bs.buckets) == len(b_bs.buckets)
+        for a, b in zip(a_bs.buckets, b_bs.buckets):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    # the repacked state survives another full round (sync zips strict)
+    init, local_step, sync = make_local_sgd(run, _loss, num_workers=W,
+                                            wd_mask=WD_MASK, use_kernel=True)
+    for _ in range(H):
+        state, _ = local_step(state, _batch(int(state.step)))
+        back, _ = local_step(back, _batch(int(back.step)))
+    state, back = sync(state), sync(back)
+    for a, b in zip(state.params.buckets, back.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_mask_padding_matches_dense_valid_mask():
+    """The fused lane-iota mask (runtime form) == the dense valid_mask
+    (test form) on every bucket."""
+    tree = _stacked_delta()
+    layout = flatbuf.build_layout(tree, leading=1)
+    rng = np.random.default_rng(11)
+    for b in range(layout.num_buckets):
+        x = jnp.asarray(rng.normal(size=(W, layout.bucket_rows[b],
+                                         flatbuf.LANE)), jnp.float32)
+        got = flatbuf.mask_padding(layout, b, x)
+        want = x * flatbuf.valid_mask(layout, b)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        cnt = flatbuf.lane_counts(layout, b)
+        assert cnt.sum() == flatbuf.valid_mask(layout, b).sum()
+
+
+def test_unpack_mutate_repack_midtraining():
+    """Host-side surgery at a sync boundary: materialize the view,
+    mutate a leaf, re-enter resident form, keep training — must track
+    the reference applying the identical mutation to its pytree state."""
+    def mutate_tree(params):
+        return {**params, "w1": params["w1"] * 1.01}
+
+    def hook_res(state, r):
+        if r != 0:
+            return state
+        view = unpack_state(state)
+        mutated = type(view)(params=mutate_tree(view.params),
+                             momentum=view.momentum, anchor=view.anchor,
+                             global_u=view.global_u, ef_memory=view.ef_memory,
+                             step=view.step, rng=view.rng)
+        return pack_state(mutated, wd_mask=WD_MASK)
+
+    def hook_ref(state, r):
+        if r != 0:
+            return state
+        return type(state)(params=mutate_tree(state.params),
+                           momentum=state.momentum, anchor=state.anchor,
+                           global_u=state.global_u, ef_memory=state.ef_memory,
+                           step=state.step, rng=state.rng)
+
+    run = _cfg(clip=0.5)
+    s_res, _ = _run(run, resident=True, hook=hook_res)
+    s_ref, _ = _run(run, resident=False, hook=hook_ref)
+    _assert_states_match(s_res, s_ref)
+
+
+def _assert_padding_zero(bucket_state):
+    lay = bucket_state.layout
+    for b, buf in enumerate(bucket_state.buckets):
+        pad = 1.0 - flatbuf.valid_mask(lay, b)
+        np.testing.assert_array_equal(np.asarray(buf, np.float32) * pad, 0.0)
+
+
+def test_resident_padding_invariant_survives_wirepack_rounds():
+    """The 1-bit wire unpack writes sign*scale everywhere; the resident
+    sync must re-mask so padding stays exactly zero across rounds (else
+    LARS segment norms and compressor scales drift)."""
+    run = _cfg(compression="sign", wire_pack=True, clip=0.5)
+    state, _ = _run(run, resident=True, rounds=2)
+    for field in (state.params, state.momentum, state.anchor):
+        _assert_padding_zero(field)
+
+
+def test_resident_noise_keeps_padding_zero():
+    """Isotropic grad noise on buckets is masked to TRUE elements; the
+    run stays finite and padding stays zero (stream differs from the
+    per-leaf reference — documented in ROADMAP)."""
+    run = _cfg(noise_eta=0.01)
+    state, metrics = _run(run, resident=True, rounds=1)
+    assert np.isfinite(float(metrics["loss"]))
+    for field in (state.params, state.momentum):
+        _assert_padding_zero(field)
+
+
+# ---------------------------------------------------------------------------
+# Bucket-in/bucket-out compressors
+# ---------------------------------------------------------------------------
+
+def _stacked_delta():
+    rng = np.random.default_rng(7)
+    return {"w1": jnp.asarray(rng.normal(size=(W, 6, 5)), jnp.float32),
+            "b1": jnp.asarray(rng.normal(size=(W, 5)), jnp.float32),
+            "w2": jnp.asarray(rng.normal(size=(W, 5, 2)), jnp.float32)}
+
+
+def test_sign_compress_buckets_matches_leaf_path():
+    """sign_compress on raw stacked buckets == the per-leaf compressor
+    (scale averaged over ALL workers per leaf), and padding slots stay
+    exactly zero."""
+    tree = _stacked_delta()
+    layout = flatbuf.build_layout(tree, leading=1)
+    bufs = flatbuf.flatten(layout, tree, leading=1)
+    ys = comp.sign_compress_buckets(layout, bufs, leading=1)
+    got = flatbuf.unflatten(layout, ys, leading=1)
+    want = comp.sign_compress(tree, use_kernel=False)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    for b, y in enumerate(ys):
+        pad = 1.0 - flatbuf.valid_mask(layout, b)
+        np.testing.assert_array_equal(np.asarray(y) * pad, 0.0)
+
+
+def test_sign_compress_buckets_jnp_form_matches_kernel():
+    """The GSPMD-friendly jnp form (used when buckets are worker-sharded
+    under a mesh) == the Pallas form == the per-leaf compressor."""
+    tree = _stacked_delta()
+    layout = flatbuf.build_layout(tree, leading=1)
+    bufs = flatbuf.flatten(layout, tree, leading=1)
+    y_k = comp.sign_compress_buckets(layout, bufs, leading=1, kernel=True)
+    y_j = comp.sign_compress_buckets(layout, bufs, leading=1, kernel=False)
+    for a, b in zip(y_k, y_j):
+        assert b.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # and the single-copy (leading=0) form
+    single = jax.tree.map(lambda x: x[0], tree)
+    lay0 = flatbuf.build_layout(single)
+    b0 = flatbuf.flatten(lay0, single)
+    y0_k = comp.sign_compress_buckets(lay0, b0, kernel=True)
+    y0_j = comp.sign_compress_buckets(lay0, b0, kernel=False)
+    for a, b in zip(y0_k, y0_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_ef_compress_buckets_invariant_and_equivalence():
+    tree = _stacked_delta()
+    mem = jax.tree.map(lambda x: 0.1 * x, tree)
+    layout = flatbuf.build_layout(tree, leading=1)
+    dbufs = flatbuf.flatten(layout, tree, leading=1)
+    ebufs = flatbuf.flatten(layout, mem, leading=1)
+    out_b, mem_b = comp.ef_compress_buckets(layout, dbufs, ebufs, leading=1)
+    # EF invariant holds exactly on raw buckets (incl. zero padding)
+    for o, m, d, e in zip(out_b, mem_b, dbufs, ebufs):
+        np.testing.assert_allclose(np.asarray(o + m), np.asarray(d + e),
+                                   rtol=1e-6, atol=1e-7)
+    out_r, mem_r = comp.ef_compress(tree, mem, use_kernel=False)
+    got_o = flatbuf.unflatten(layout, out_b, leading=1)
+    got_m = flatbuf.unflatten(layout, mem_b, leading=1)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got_o[k]), np.asarray(out_r[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+        np.testing.assert_allclose(np.asarray(got_m[k]), np.asarray(mem_r[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_resident_sync_has_no_reflatten_pair():
+    """Jaxpr census: the resident sync path (compressor -> wire pack ->
+    anchor update, all on buckets) contains ZERO pack ops, while the
+    tree-in/tree-out kernel sync pays the redundant unflatten/re-flatten
+    pair between sign_compress and bucket_packed_mean."""
+    run = _cfg(compression="sign", wire_pack=True)
+
+    def census(resident):
+        init, _, sync = make_local_sgd(run, _loss, num_workers=W,
+                                       wd_mask=WD_MASK, use_kernel=True,
+                                       resident=resident)
+        state = jax.eval_shape(init, jax.random.PRNGKey(0), _init_params())
+        return jaxpr_op_counts(jax.make_jaxpr(lambda s: sync(s))(state))
+
+    res, leg = census(True), census(False)
+    assert res.get("concatenate", 0) == 0 and res.get("pad", 0) == 0, res
+    assert leg.get("concatenate", 0) >= 2     # compressor pack + wire pack
+    # one compressor + one wire launch path per bucket either way
+    assert res["pallas_call"] == leg["pallas_call"]
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing straight from resident buckets
+# ---------------------------------------------------------------------------
+
+def test_resident_checkpoint_roundtrip_exact(tmp_path):
+    run = _cfg(compression="sign", wire_pack=True, clip=0.5)
+    state, _ = _run(run, resident=True, rounds=2)
+    path = str(tmp_path / "res")
+    ckpt.save_flat(path, state, step=int(state.step))
+    assert ckpt.load_meta(path)["resident"] is True
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    out = ckpt.restore_flat(path, tmpl)
+    assert is_resident(out)
+    assert out.params.layout == state.params.layout
+    for a, b in zip(state.params.buckets, out.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(state.anchor.buckets, out.anchor.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(ckpt.load_meta(path)["step"]) == int(state.step)
+
+
+def test_per_leaf_checkpoint_restores_into_resident(tmp_path):
+    """Cross-format compatibility: a checkpoint written from the pytree
+    view restores through the per-leaf template and re-enters resident
+    form bit-exactly (pack is deterministic)."""
+    run = _cfg(clip=0.5)
+    state, _ = _run(run, resident=True, rounds=2)
+    view = unpack_state(state)
+    path = str(tmp_path / "leafckpt")
+    ckpt.save(path, view, step=int(state.step))
+    assert ckpt.load_meta(path)["step"] == int(state.step)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), view)
+    restored = pack_state(ckpt.restore(path, tmpl), wd_mask=WD_MASK)
+    assert is_resident(restored)
+    assert restored.params.layout == state.params.layout
+    for a, b in zip(state.params.buckets, restored.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the restored resident state keeps training identically
+    _, local_step, _ = make_local_sgd(run, _loss, num_workers=W,
+                                      wd_mask=WD_MASK, use_kernel=True)
+    s1, _ = local_step(restored, _batch(int(restored.step)))
+    s2, _ = local_step(state, _batch(int(state.step)))
+    for a, b in zip(s1.params.buckets, s2.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
