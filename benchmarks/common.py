@@ -22,11 +22,33 @@ from repro.data.partition import ShardedBatches
 from repro.data.synthetic import cluster_classification
 
 ROWS: list[str] = []
+RECORDS: list[dict] = []
+
+
+def _parse_derived(derived: str) -> dict:
+    """Best-effort parse of the semi-structured derived column
+    ("k=v;k2=v2;freeform") into typed fields for the JSON artifact."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        v = v.strip().split(" ")[0]
+        try:
+            out[k.strip()] = int(v)
+        except ValueError:
+            try:
+                out[k.strip()] = float(v)
+            except ValueError:
+                out[k.strip()] = v
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    **_parse_derived(derived), "derived_raw": derived})
     print(row, flush=True)
 
 

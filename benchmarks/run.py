@@ -20,6 +20,7 @@ Mapping to the paper (see DESIGN.md §6):
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -32,6 +33,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke subset: kernel + bucket + resident-state "
                          "microbenches only")
+    ap.add_argument("--json-out", default="",
+                    help="write a BENCH_local_sgd.json artifact (structured "
+                         "rows: step time, bytes/round, pack/unpack bytes, "
+                         "collective counts) so the perf trajectory is "
+                         "tracked across PRs")
     args = ap.parse_args()
 
     from benchmarks import bench_convex, bench_kernels, bench_roofline, paper_tables
@@ -72,6 +78,24 @@ def main() -> None:
             failures += 1
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+    if args.json_out:
+        import platform
+
+        import jax
+
+        from benchmarks.common import RECORDS
+        artifact = {
+            "bench": "local_sgd",
+            "selected": selected,
+            "failures": failures,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "records": RECORDS,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {args.json_out} ({len(RECORDS)} records)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,134 @@
+"""Adaptive local SGD: the paper's trade-off frontier as ONE run.
+
+The paper's Table 2 / Table 4 study sweeps static configurations (H,
+compression) and reports the communication/performance frontier.  With
+the telemetry + controller subsystem (ISSUE 3) a single adaptive run
+walks that frontier online: the ``diversity_h`` policy grows H as the
+measured inter-worker gradient diversity collapses, and the
+``auto_compress`` policy turns the sign / EF-sign compressor on per
+bucket once the measured compression error fits the budget.
+
+Workload: the synthetic cluster-classification MLP the benchmark suite
+uses as its CIFAR/ResNet-20 stand-in (benchmarks/common.py).  Four
+configurations, same data and step budget:
+
+  * constant H=1   (mini-batch SGD baseline: max communication)
+  * constant H=8   (static local SGD: the paper's pre-scheduled point)
+  * diversity_h    (adaptive H from measured diversity)
+  * auto_compress  (H=4 + runtime compressor escalation, 1-bit wire)
+
+Prints held-out accuracy vs. ledger wire bytes, plus the adaptive H /
+compressor trajectories from the telemetry JSONL logs.
+
+    PYTHONPATH=src python examples/adaptive_local_sgd.py
+"""
+import json
+import pathlib
+import sys
+
+root = pathlib.Path(__file__).parent.parent
+sys.path[:0] = [str(root / "src"), str(root)]
+
+import jax
+
+from benchmarks.common import DIM, dataset, mlp_loss, test_acc
+from repro.configs.base import (ControllerConfig, InputShape, LocalSGDConfig,
+                                ModelConfig, OptimConfig, RunConfig)
+from repro.core.local_sgd import make_local_sgd
+from repro.data.partition import ShardedBatches
+from repro.launch.steps import TrainBundle
+from repro.launch.train import fit
+from repro.models.base import ParamSpec
+
+K, B_LOC, STEPS, WIDTH = 8, 64, 160, 128
+
+train, test = dataset()
+
+
+def mlp_specs(width=WIDTH):
+    """ParamSpec tree matching benchmarks.common.mlp_init."""
+    import benchmarks.common as bc
+    return {"w1": ParamSpec((DIM, width), (None, None)),
+            "b1": ParamSpec((width,), (None,), init="zeros"),
+            "w2": ParamSpec((width, width), (None, None)),
+            "b2": ParamSpec((width,), (None,), init="zeros"),
+            "w3": ParamSpec((width, bc.CLASSES), (None, None)),
+            "b3": ParamSpec((bc.CLASSES,), (None,), init="zeros")}
+
+
+def make_bundle(run: RunConfig) -> TrainBundle:
+    cc = run.controller
+    init, local_step, sync = make_local_sgd(
+        run, mlp_loss, num_workers=K, telemetry=cc.wants_telemetry,
+        speculate_compression=cc.kind == "auto_compress")
+    return TrainBundle(
+        cfg=run.model, run=run, layout=None, num_workers=K,
+        specs=mlp_specs(), init=init,
+        local_step=jax.jit(local_step),
+        sync=jax.jit(sync, static_argnames=("group", "compression")),
+        telemetry=cc.wants_telemetry)
+
+
+def run_one(name, ls, controller, telemetry_path=None):
+    run = RunConfig(
+        model=ModelConfig(name="mlp", family="dense", citation=""),
+        shape=InputShape("adapt", DIM, K * B_LOC, "train"),
+        local_sgd=ls, controller=controller,
+        optim=OptimConfig(base_lr=0.15, base_batch=K * B_LOC,
+                          lr_warmup_steps=STEPS // 20,
+                          lr_decay_steps=(STEPS // 2, 3 * STEPS // 4),
+                          weight_decay=1e-4),
+        steps=STEPS)
+    state, hist, summary = fit(run, ShardedBatches(train, K, B_LOC),
+                               bundle=make_bundle(run), num_steps=STEPS,
+                               telemetry_path=telemetry_path)
+    return {"name": name, "acc": test_acc(state, test),
+            "loss": hist[-1]["loss"],
+            "rounds": summary["ledger"]["sync_rounds"],
+            "wire_mb": summary["ledger"]["wire_bytes"] / 1e6,
+            "controller": summary["controller"]}
+
+
+tdir = pathlib.Path("telemetry")
+tdir.mkdir(exist_ok=True)
+rows = [
+    run_one("minibatch_h1", LocalSGDConfig(local_steps=1),
+            ControllerConfig(kind="static", telemetry=True),
+            tdir / "h1.jsonl"),
+    run_one("static_h8", LocalSGDConfig(local_steps=8),
+            ControllerConfig(kind="static", telemetry=True),
+            tdir / "h8.jsonl"),
+    run_one("diversity_h", LocalSGDConfig(local_steps=1),
+            ControllerConfig(kind="diversity_h", h0=1, h_max=16,
+                             low=0.45, high=0.8),
+            tdir / "diversity_h.jsonl"),
+    run_one("auto_compress",
+            LocalSGDConfig(local_steps=4, sync_compression="ef_sign",
+                           wire_pack=True),
+            ControllerConfig(kind="auto_compress", err_budget=0.9,
+                             patience=1),
+            tdir / "auto_compress.jsonl"),
+]
+
+print(f"\n{'config':<16} {'test acc':>9} {'final loss':>11} "
+      f"{'sync rounds':>12} {'wire MB':>10}")
+for r in rows:
+    print(f"{r['name']:<16} {r['acc']:>9.3f} {r['loss']:>11.4f} "
+          f"{r['rounds']:>12d} {r['wire_mb']:>10.3f}")
+
+print("\nadaptive trajectories (telemetry/*.jsonl):")
+for name in ("diversity_h", "auto_compress"):
+    recs = [json.loads(l) for l in open(tdir / f"{name}.jsonl")]
+    print(f"  {name}: H per round = {[r['h'] for r in recs]}")
+    if name == "auto_compress":
+        print(f"  {name}: next mode per round = "
+              f"{[r['next_compression'] for r in recs]}")
+    else:
+        print(f"  {name}: diversity per round = "
+              f"{[round(r.get('diversity', 0.0), 3) for r in recs]}")
+
+base = next(r for r in rows if r["name"] == "minibatch_h1")
+adapt = next(r for r in rows if r["name"] == "diversity_h")
+print(f"\ndiversity_h vs H=1: "
+      f"{base['wire_mb'] / max(adapt['wire_mb'], 1e-9):.1f}x fewer wire "
+      f"bytes at test acc {adapt['acc']:.3f} vs {base['acc']:.3f}")

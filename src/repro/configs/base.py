@@ -185,11 +185,63 @@ class OptimConfig:
 
 
 @dataclass(frozen=True)
+class ControllerConfig:
+    """Adaptive sync controller (ISSUE 3): measure the comm/performance
+    trade-off online and drive H(t) / compression / batch size from it.
+
+    kinds (see core/controller.py):
+      * static         — today's pre-scheduled H(t); bitwise-identical
+                         trajectories to the plain scheduler.
+      * diversity_h    — adapt H from the measured inter-worker gradient
+                         diversity ratio (Yin et al. 2017): diversity
+                         collapse (workers agree) drives H up, diversity
+                         growth drives H back down.
+      * adaptive_batch — grow the per-worker batch on loss plateau
+                         (Lau et al. 2024) instead of decaying the LR.
+      * auto_compress  — escalate the sync compressor none->sign->ef_sign
+                         per bucket while the measured relative
+                         compression error stays under ``err_budget``
+                         (requires ``sync_compression='ef_sign'`` so the
+                         state allocates anchor + EF memory up front).
+
+    ``telemetry=None`` enables stats collection exactly when the kind
+    needs it (any non-static kind); set True to collect round telemetry
+    (and write the JSONL log from launch/train.fit) under the static
+    schedule too.
+    """
+
+    kind: Literal["static", "diversity_h", "adaptive_batch",
+                  "auto_compress"] = "static"
+    telemetry: bool | None = None     # None => kind != "static"
+    # H adaptation bounds / start (diversity_h)
+    h_min: int = 1
+    h_max: int = 64
+    h0: int = 0                       # 0 => local_sgd.local_steps
+    # control-signal smoothing + diversity thresholds
+    ema: float = 0.5
+    low: float = 0.1                  # diversity below => H doubles
+    high: float = 0.5                 # diversity above => H halves
+    # loss-plateau detection (adaptive_batch)
+    patience: int = 2
+    tol: float = 0.01                 # relative improvement per round
+    max_batch_scale: int = 8
+    # compression escalation (auto_compress)
+    err_budget: float = 0.7           # relative L2 error budget per bucket
+
+    @property
+    def wants_telemetry(self) -> bool:
+        if self.telemetry is None:
+            return self.kind != "static"
+        return self.telemetry
+
+
+@dataclass(frozen=True)
 class RunConfig:
     model: ModelConfig
     shape: InputShape = TRAIN_4K
     local_sgd: LocalSGDConfig = LocalSGDConfig()
     optim: OptimConfig = OptimConfig()
+    controller: ControllerConfig = ControllerConfig()
     seed: int = 0
     remat: Literal["none", "block", "full"] = "block"
     steps: int = 100

@@ -47,44 +47,49 @@ def sign_compress_buckets(layout, bufs, *, leading: int = 0,
     shapes.  Padding slots compress to sign(0)*scale = 0, preserving the
     padding-is-zero invariant.
     """
+    return [sign_compress_bucket(layout, b, x, leading=leading, kernel=kernel)
+            for b, x in enumerate(bufs)]
+
+
+def sign_compress_bucket(layout, b: int, x, *, leading: int = 0,
+                         kernel: bool = True):
+    """Compress ONE bucket (see :func:`sign_compress_buckets`): the
+    per-bucket entry point the adaptive controller's mixed-mode sync
+    uses (core/local_sgd resident sync with a per-bucket mode tuple)."""
     from repro.core import flatbuf
     from repro.kernels import ops as kops
 
-    out = []
-    for b, x in enumerate(bufs):
-        seg = flatbuf.row_segments(layout, b)
-        sizes = flatbuf.segment_sizes(layout, b)
-        if not kernel:
-            n_seg = int(sizes.shape[0])
-            seg_j = jnp.asarray(seg)
-            xf = x.astype(jnp.float32)
-            row_abs = jnp.sum(jnp.abs(xf), axis=-1)         # (*lead, rows)
-            if leading:
-                # per-shard segment totals, then a tiny (n_seg,) cross-
-                # worker reduction — O(rows) scatter-add, no dense
-                # (rows, n_seg) one-hot constant
-                totals = jax.vmap(lambda r: jax.ops.segment_sum(
-                    r, seg_j, num_segments=n_seg))(
-                        row_abs.reshape((-1, row_abs.shape[-1])))
-                totals = totals.sum(axis=0)
-                denom = sizes * float(np.prod(x.shape[:leading]))
-            else:
-                totals = jax.ops.segment_sum(row_abs, seg_j,
-                                             num_segments=n_seg)
-                denom = sizes
-            scales = totals / jnp.asarray(denom)
-            out.append(jnp.sign(xf) * scales[seg_j][:, None])
-        elif leading:
-            lead = x.shape[:leading]
-            W = int(np.prod(lead))
-            y, _ = kops.bucket_sign_compress(
-                x.reshape((W * x.shape[-2], x.shape[-1])),
-                np.tile(seg, W), sizes * W)
-            out.append(y.reshape(lead + x.shape[leading:]))
+    seg = flatbuf.row_segments(layout, b)
+    sizes = flatbuf.segment_sizes(layout, b)
+    if not kernel:
+        n_seg = int(sizes.shape[0])
+        seg_j = jnp.asarray(seg)
+        xf = x.astype(jnp.float32)
+        row_abs = jnp.sum(jnp.abs(xf), axis=-1)         # (*lead, rows)
+        if leading:
+            # per-shard segment totals, then a tiny (n_seg,) cross-
+            # worker reduction — O(rows) scatter-add, no dense
+            # (rows, n_seg) one-hot constant
+            totals = jax.vmap(lambda r: jax.ops.segment_sum(
+                r, seg_j, num_segments=n_seg))(
+                    row_abs.reshape((-1, row_abs.shape[-1])))
+            totals = totals.sum(axis=0)
+            denom = sizes * float(np.prod(x.shape[:leading]))
         else:
-            y, _ = kops.bucket_sign_compress(x, seg, sizes)
-            out.append(y)
-    return out
+            totals = jax.ops.segment_sum(row_abs, seg_j,
+                                         num_segments=n_seg)
+            denom = sizes
+        scales = totals / jnp.asarray(denom)
+        return jnp.sign(xf) * scales[seg_j][:, None]
+    if leading:
+        lead = x.shape[:leading]
+        W = int(np.prod(lead))
+        y, _ = kops.bucket_sign_compress(
+            x.reshape((W * x.shape[-2], x.shape[-1])),
+            np.tile(seg, W), sizes * W)
+        return y.reshape(lead + x.shape[leading:])
+    y, _ = kops.bucket_sign_compress(x, seg, sizes)
+    return y
 
 
 def ef_compress_buckets(layout, dbufs, ebufs, *, leading: int = 0,
@@ -93,10 +98,20 @@ def ef_compress_buckets(layout, dbufs, ebufs, *, leading: int = 0,
     e' = input - output.  Returns (compressed, new_memory) bucket lists
     (both f32), preserving the EF invariant compressed + e' == delta + e
     exactly in fp32 (padding stays 0 through both)."""
-    inp = [d.astype(jnp.float32) + e.astype(jnp.float32)
-           for d, e in zip(dbufs, ebufs, strict=True)]
-    out = sign_compress_buckets(layout, inp, leading=leading, kernel=kernel)
-    return out, [i - o for i, o in zip(inp, out)]
+    outs = [ef_compress_bucket(layout, b, d, e, leading=leading,
+                               kernel=kernel)
+            for b, (d, e) in enumerate(zip(dbufs, ebufs, strict=True))]
+    return [o[0] for o in outs], [o[1] for o in outs]
+
+
+def ef_compress_bucket(layout, b: int, d, e, *, leading: int = 0,
+                       kernel: bool = True):
+    """EF compression of ONE bucket: returns (compressed, new_memory,
+    input) — the raw input ``d + e`` rides along so telemetry can form
+    the compression-error residual without re-adding (core/local_sgd)."""
+    inp = d.astype(jnp.float32) + e.astype(jnp.float32)
+    out = sign_compress_bucket(layout, b, inp, leading=leading, kernel=kernel)
+    return out, inp - out, inp
 
 
 def _sign_compress_bucketed(tree, bucketable=None):

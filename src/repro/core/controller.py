@@ -1,0 +1,239 @@
+"""Adaptive sync controllers: close the comm/performance loop (ISSUE 3).
+
+The paper *pre-schedules* the communication/performance trade-off
+(static H(t) in core/schedule.py); these controllers *measure* it at
+runtime via the telemetry subsystem (repro/telemetry) and drive H(t),
+the sync compressor, and the per-worker batch size from the measured
+signals, stepped HOST-side at each global sync boundary.
+
+Control signals (see telemetry.stats.round_summary):
+
+* ``diversity`` — worker dispersion at sync normalized by accumulated
+  update norm: the local-SGD form of gradient diversity (Yin et al.
+  2017).  Diversity collapse (workers moving together) means averaging
+  is redundant -> H can grow; diversity growth (per-worker movement
+  mostly noise) means averaging pays -> H shrinks.
+* ``loss`` plateau — relative improvement per round under ``tol`` for
+  ``patience`` rounds: grow the per-worker batch instead of decaying
+  the LR (Lau et al. 2024).
+* ``comp_rel_err`` — measured (or speculative) per-bucket relative L2
+  compression error: escalate none -> sign -> ef_sign per bucket while
+  it stays under ``err_budget``.
+
+Protocol: ``h_at(step)`` is consulted EVERY local step (so the static
+policy is bitwise-identical to the legacy scheduler, including
+mid-round warmup H changes); ``update(report)`` is called once per
+GLOBAL sync round with the host-side telemetry summary; the
+``compression()`` / ``batch_scale()`` decisions apply from the next
+round on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Protocol, runtime_checkable
+
+from repro.configs.base import ControllerConfig, RunConfig
+from repro.core.schedule import local_steps_at
+
+
+@dataclass
+class RoundReport:
+    """Host-side per-round record handed to ``update`` (and serialized
+    as one JSONL line by launch/train.fit)."""
+    round: int
+    step: int
+    h: int
+    loss: float
+    stats: dict = field(default_factory=dict)   # telemetry.round_summary
+    wire_bytes: float = 0.0
+    collectives: int = 0
+
+
+@runtime_checkable
+class SyncController(Protocol):
+    def h_at(self, step: int) -> int: ...
+    def compression(self) -> Any: ...           # None | str | per-bucket tuple
+    def batch_scale(self) -> int: ...
+    def update(self, report: RoundReport) -> None: ...
+
+
+class StaticController:
+    """Today's pre-scheduled H(t) — the identity policy.
+
+    ``h_at`` delegates to ``local_steps_at`` so trajectories are
+    bitwise-identical to the plain scheduler; ``update`` observes and
+    decides nothing.
+    """
+
+    kind = "static"
+
+    def __init__(self, run: RunConfig):
+        self.ls = run.local_sgd
+
+    def h_at(self, step: int) -> int:
+        return local_steps_at(self.ls, step)
+
+    def compression(self):
+        return None
+
+    def batch_scale(self) -> int:
+        return 1
+
+    def update(self, report: RoundReport) -> None:
+        pass
+
+
+class DiversityHController:
+    """Adapt H from the measured gradient-diversity ratio.
+
+    EMA-smoothed ``diversity`` under ``low`` doubles H (up to
+    ``h_max``); over ``high`` halves it (down to ``h_min``).  Starts at
+    ``h0`` (default: the configured ``local_steps``).
+    """
+
+    kind = "diversity_h"
+
+    def __init__(self, run: RunConfig):
+        cc = run.controller
+        self.cc = cc
+        self.h = int(cc.h0 or run.local_sgd.local_steps)
+        self.h = min(max(self.h, cc.h_min), cc.h_max)
+        self.ema = None
+
+    def h_at(self, step: int) -> int:
+        return self.h
+
+    def compression(self):
+        return None
+
+    def batch_scale(self) -> int:
+        return 1
+
+    def update(self, report: RoundReport) -> None:
+        d = report.stats.get("diversity")
+        if d is None:
+            return
+        self.ema = d if self.ema is None else \
+            self.cc.ema * self.ema + (1 - self.cc.ema) * d
+        if self.ema < self.cc.low:
+            self.h = min(self.h * 2, self.cc.h_max)
+        elif self.ema > self.cc.high:
+            self.h = max(self.h // 2, self.cc.h_min)
+
+
+class AdaptiveBatchController:
+    """Grow the per-worker batch on loss plateau (Lau et al. 2024).
+
+    Keeps the configured H schedule; when the EMA loss improves by less
+    than ``tol`` (relative) for ``patience`` consecutive rounds, the
+    batch scale doubles (up to ``max_batch_scale``) — communication per
+    EXAMPLE drops because each round consumes ``scale`` x the data.
+    """
+
+    kind = "adaptive_batch"
+
+    def __init__(self, run: RunConfig):
+        self.ls = run.local_sgd
+        self.cc = run.controller
+        self.scale = 1
+        self.ema = None
+        self.best = None
+        self.stall = 0
+
+    def h_at(self, step: int) -> int:
+        return local_steps_at(self.ls, step)
+
+    def compression(self):
+        return None
+
+    def batch_scale(self) -> int:
+        return self.scale
+
+    def update(self, report: RoundReport) -> None:
+        loss = report.loss
+        self.ema = loss if self.ema is None else \
+            self.cc.ema * self.ema + (1 - self.cc.ema) * loss
+        if self.best is None or self.ema < self.best * (1 - self.cc.tol):
+            self.best = self.ema
+            self.stall = 0
+            return
+        self.stall += 1
+        if self.stall >= self.cc.patience and \
+                self.scale < self.cc.max_batch_scale:
+            self.scale *= 2
+            self.stall = 0
+
+
+class AutoCompressController:
+    """Escalate the sync compressor none -> sign -> ef_sign per bucket.
+
+    Requires ``sync_compression='ef_sign'`` in the config so anchor +
+    EF memory are allocated up front; starts with every bucket
+    uncompressed and watches the measured relative compression error
+    (speculative sign error while uncompressed — see
+    ``speculate_compression``): ``patience`` consecutive rounds under
+    ``err_budget`` switch a bucket to ``sign``; once signed, a round
+    OVER budget escalates to ``ef_sign`` (keep the 1-bit wire but let
+    error feedback absorb the residual).  Escalation is monotone.
+    """
+
+    kind = "auto_compress"
+
+    def __init__(self, run: RunConfig, *, n_comp: int = 1):
+        if run.local_sgd.sync_compression != "ef_sign":
+            raise ValueError(
+                "auto_compress requires sync_compression='ef_sign' so the "
+                "state allocates anchor + EF memory for runtime escalation")
+        self.cc = run.controller
+        self.ls = run.local_sgd
+        self.modes = ["none"] * n_comp
+        self.streak = [0] * n_comp
+
+    def h_at(self, step: int) -> int:
+        return local_steps_at(self.ls, step)
+
+    def compression(self):
+        return tuple(self.modes)
+
+    def batch_scale(self) -> int:
+        return 1
+
+    def update(self, report: RoundReport) -> None:
+        errs = report.stats.get("comp_rel_err") or []
+        if not report.stats.get("comp_measured"):
+            return
+        for b, e in enumerate(errs[:len(self.modes)]):
+            if self.modes[b] == "none":
+                if e <= self.cc.err_budget:
+                    self.streak[b] += 1
+                    if self.streak[b] >= self.cc.patience:
+                        self.modes[b] = "sign"
+                        self.streak[b] = 0
+                else:
+                    self.streak[b] = 0
+            elif self.modes[b] == "sign" and e > self.cc.err_budget:
+                self.modes[b] = "ef_sign"
+
+
+_KINDS = {
+    "static": StaticController,
+    "diversity_h": DiversityHController,
+    "adaptive_batch": AdaptiveBatchController,
+    "auto_compress": AutoCompressController,
+}
+
+
+def make_controller(run: RunConfig, *, n_comp: int = 1) -> SyncController:
+    """Instantiate the policy named by ``run.controller.kind``.
+
+    ``n_comp`` is the number of compression-error slots the telemetry
+    reports (dtype buckets on the resident path, 1 on the tree path) —
+    the granularity at which ``auto_compress`` escalates.
+    """
+    kind = run.controller.kind
+    if kind not in _KINDS:
+        raise ValueError(f"unknown controller kind {kind!r}; "
+                         f"one of {sorted(_KINDS)}")
+    if kind == "auto_compress":
+        return AutoCompressController(run, n_comp=n_comp)
+    return _KINDS[kind](run)

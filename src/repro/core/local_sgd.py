@@ -47,6 +47,7 @@ from repro.core import noise as noise_mod
 from repro.core.schedule import lr_at
 from repro.optim.lars import apply_lars, apply_lars_buckets
 from repro.optim.sgd import apply_sgd, apply_sgd_buckets, init_momentum
+from repro.telemetry import stats as tstats
 
 
 @jax.tree_util.register_dataclass
@@ -59,6 +60,7 @@ class LocalSGDState:
     ef_memory: Any       # stacked (W, ...) or None
     step: Any            # () int32
     rng: Any             # PRNGKey
+    stats: Any = None    # telemetry.StatsAccumulator or None (ISSUE 3)
 
 
 def needs_anchor(cfg: LocalSGDConfig) -> bool:
@@ -88,7 +90,7 @@ def unpack_state(state: "LocalSGDState") -> "LocalSGDState":
     return LocalSGDState(params=up(state.params), momentum=up(state.momentum),
                          anchor=up(state.anchor), global_u=up(state.global_u),
                          ef_memory=up(state.ef_memory), step=state.step,
-                         rng=state.rng)
+                         rng=state.rng, stats=state.stats)
 
 
 def pack_state(state: "LocalSGDState", *, wd_mask=None) -> "LocalSGDState":
@@ -135,7 +137,7 @@ def pack_state(state: "LocalSGDState", *, wd_mask=None) -> "LocalSGDState":
                          anchor=pack(state.anchor, 0),
                          global_u=pack(state.global_u, 0),
                          ef_memory=pack(state.ef_memory, 1),
-                         step=state.step, rng=state.rng)
+                         step=state.step, rng=state.rng, stats=state.stats)
 
 
 def mean_params(state: "LocalSGDState"):
@@ -350,13 +352,53 @@ def pack_axes_tree(specs, layout):
     return jax.tree.map(pick, specs, is_leaf=mbase.is_spec)
 
 
+_COMP_MODES = ("none", "sign", "ef_sign")
+
+
+def resolve_comp_modes(compression, num_buckets: int, default: str):
+    """Per-bucket compression modes for one sync call.
+
+    ``compression`` is the runtime override the adaptive controller
+    passes through ``sync(..., compression=...)`` (a static argument —
+    each distinct mode tuple compiles once): ``None`` keeps the config
+    default, a single string applies to every bucket, a tuple gives one
+    mode per dtype bucket (resident path).
+    """
+    if compression is None:
+        modes = (default,) * num_buckets
+    elif isinstance(compression, str):
+        modes = (compression,) * num_buckets
+    else:
+        modes = tuple(compression)
+        if len(modes) != num_buckets:
+            raise ValueError(f"compression tuple has {len(modes)} entries "
+                             f"for {num_buckets} buckets")
+    bad = set(modes) - set(_COMP_MODES)
+    if bad:
+        raise ValueError(f"unknown compression mode(s) {sorted(bad)}")
+    return modes
+
+
+def _sumsq(x, *, from_axis: int = 0):
+    """f32 sum of squares over all dims from ``from_axis`` on (telemetry)."""
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=tuple(range(from_axis, x.ndim)))
+
+
+def _tree_sumsq_w(tree):
+    """(W,) per-worker sum of squares over all leaves of a stacked tree."""
+    return sum(_sumsq(l, from_axis=1) for l in jax.tree.leaves(tree))
+
+
 def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                    wd_mask=None, use_kernel: bool = False,
                    packed_mean_fn: Callable | None = None,
                    packed_mean_flat_fn: Callable | None = None,
                    bucket_sync: bool = True, bucketable=None,
                    resident: bool | None = None,
-                   sharded: bool | None = None):
+                   sharded: bool | None = None,
+                   telemetry: bool = False,
+                   speculate_compression: bool = False):
     """Build (init, local_step, sync) for a single-worker ``loss_fn``.
 
     loss_fn(params, batch) -> (loss, metrics dict). The returned
@@ -385,6 +427,22 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
     compressor form instead of Pallas launches, whose opaque calls on
     sharded operands would force a dense gather of the payload.
     Default: inferred from whether a mesh-pinned wire pack is wired in.
+
+    ``telemetry`` carries a ``telemetry.StatsAccumulator`` in
+    ``state.stats`` (ISSUE 3): per-step grad/update norms (fused into
+    the already-launched optimizer kernels on the resident path), a
+    pre-/post-mean norm pair and compression error at each global sync.
+    Telemetry is a pure observer — the parameter trajectory is bitwise
+    identical with it on or off.  ``speculate_compression`` additionally
+    measures the WOULD-BE sign-compression error on uncompressed anchor
+    syncs (one extra compressor pass per sync, O(1/H)) so the
+    ``auto_compress`` controller can decide when to start compressing.
+
+    ``sync`` accepts a static ``compression`` override (see
+    :func:`resolve_comp_modes`) so the controller can switch
+    mean -> sign -> EF-sign at runtime; overrides other than the config
+    default require the config to have allocated the anchor (and EF
+    memory for ``ef_sign``) up front.
     """
     ls = run.local_sgd
     opt = run.optim
@@ -398,7 +456,8 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
             run, loss_fn, num_workers=W, wd_mask=wd_mask,
             packed_mean_flat_fn=packed_mean_flat_fn,
             sharded=(packed_mean_flat_fn is not None if sharded is None
-                     else sharded))
+                     else sharded),
+            telemetry=telemetry, speculate_compression=speculate_compression)
 
     def init(rng, params_single) -> LocalSGDState:
         params = stack_tree(params_single, W)
@@ -412,6 +471,7 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                        else None),
             step=jnp.int32(0),
             rng=rng,
+            stats=tstats.init_stats(W, 1) if telemetry else None,
         )
 
     def _worker_step(p, u, batch, rng, lr, step):
@@ -419,6 +479,19 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         if opt.noise_eta > 0:
             g = noise_mod.isotropic_noise(g, rng, step=step, eta=opt.noise_eta,
                                           gamma=opt.noise_gamma)
+        gsq = usq = None
+        if telemetry:
+            # pure observation: the update path below is untouched, so
+            # telemetry cannot perturb the trajectory by construction.
+            # grad_sq reports the APPLIED (post-clip) gradient norm^2,
+            # computed analytically from the raw norm — clipping scales
+            # the whole vector, so ||clip(g)||^2 = min(||g||, c)^2.
+            gn2 = sum(_sumsq(l) for l in jax.tree.leaves(g))
+            if opt.grad_clip and opt.optimizer != "lars":
+                gsq = jnp.minimum(gn2, jnp.float32(opt.grad_clip) ** 2)
+            else:
+                gsq = gn2
+        p0 = p
         if opt.optimizer == "lars":
             p, u = apply_lars(p, g, u, lr=lr, trust=opt.lars_trust,
                               momentum_coef=ls.local_momentum,
@@ -430,44 +503,111 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                              weight_decay=opt.weight_decay, nesterov=ls.nesterov,
                              wd_mask=wd_mask, grad_clip=opt.grad_clip,
                              use_kernel=use_kernel)
+        if telemetry:
+            usq = sum(_sumsq(a.astype(jnp.float32) - b.astype(jnp.float32))
+                      for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p0)))
+            return p, u, loss, metrics, gsq, usq
         return p, u, loss, metrics
 
     def local_step(state: LocalSGDState, batch):
         """batch: pytree with leading (W, B_loc, ...) dims."""
         lr = lr_at(opt, state.step, global_batch=global_batch)
         rngs = jax.random.split(jax.random.fold_in(state.rng, state.step), W)
-        p, u, loss, metrics = jax.vmap(
+        out = jax.vmap(
             lambda pw, uw, bw, rw: _worker_step(pw, uw, bw, rw, lr, state.step)
         )(state.params, state.momentum, batch, rngs)
+        if telemetry:
+            p, u, loss, metrics, gsq_w, usq_w = out
+            new_stats = tstats.accumulate_step(state.stats, gsq_w, usq_w)
+        else:
+            p, u, loss, metrics = out
+            new_stats = state.stats
         metrics = jax.tree.map(lambda x: x.mean(), metrics)
         metrics = {**metrics, "loss": loss.mean(), "lr": lr}
         new = LocalSGDState(params=p, momentum=u, anchor=state.anchor,
                             global_u=state.global_u, ef_memory=state.ef_memory,
-                            step=state.step + 1, rng=state.rng)
+                            step=state.step + 1, rng=state.rng,
+                            stats=new_stats)
         return new, metrics
 
-    def sync(state: LocalSGDState, *, group: int | None = None) -> LocalSGDState:
-        """Average within worker groups; group=None => all W workers."""
+    def sync(state: LocalSGDState, *, group: int | None = None,
+             compression=None) -> LocalSGDState:
+        """Average within worker groups; group=None => all W workers.
+
+        ``compression`` (static) overrides the config compressor for
+        this call — the controller's runtime escalation hook.  On the
+        tree path a single mode applies to the whole state (per-bucket
+        tuples are a resident-path feature); overrides require the
+        config to have allocated anchor/EF state.
+        """
         g = group or W
+        mode = resolve_comp_modes(compression, 1, ls.sync_compression)[0]
+        record = telemetry and g == W
         if not needs_anchor(ls):
+            if mode != "none":
+                raise ValueError(
+                    "compression override needs an anchor: configure "
+                    "sync_compression/global_momentum so the state "
+                    "allocates one (needs_anchor)")
             if bucket_sync:
                 p = bucket_group_mean(state.params, g, bucketable)
             else:
                 p = jax.tree.map(lambda x: group_mean(x, g), state.params)
+            new_stats = state.stats
+            if record:
+                # pre-/post-mean pair of the synced quantity, CENTERED
+                # on the already-computed mean: x_k = p_k - pbar, so
+                # pre = mean_k ||x_k||^2 IS the worker dispersion and
+                # post = ||mean x_k||^2 = 0 exactly.  (Dispersion is
+                # shift-invariant; centering avoids the catastrophic
+                # cancellation of mean||p_k||^2 - ||pbar||^2, whose
+                # f32 resolution is far coarser than the dispersion
+                # once workers have nearly converged.)
+                cent = jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                                    - b.astype(jnp.float32), state.params, p)
+                pre = _tree_sumsq_w(cent).mean()
+                post = jnp.float32(0.0)
+                new_stats = tstats.record_sync(state.stats, pre_sync_sq=pre,
+                                               post_sync_sq=post)
             return LocalSGDState(params=p, momentum=state.momentum,
                                  anchor=None, global_u=None,
-                                 ef_memory=None, step=state.step, rng=state.rng)
+                                 ef_memory=None, step=state.step,
+                                 rng=state.rng, stats=new_stats)
 
         assert g == W, "compression / global momentum require flat local SGD"
+        if mode == "ef_sign" and state.ef_memory is None:
+            raise ValueError("ef_sign override requires the config to "
+                             "allocate EF memory (sync_compression='ef_sign')")
         delta = jax.tree.map(lambda a, p: a[None] - p, state.anchor, state.params)
         ef = state.ef_memory
-        if ls.sync_compression == "sign":
+        err = ref = None
+        if mode == "sign":
+            raw = delta
             delta = comp.sign_compress(delta, use_kernel=use_kernel,
                                        bucketable=bucketable)
-        elif ls.sync_compression == "ef_sign":
+            if record:
+                err = sum(_sumsq(r.astype(jnp.float32) - c)
+                          for r, c in zip(jax.tree.leaves(raw),
+                                          jax.tree.leaves(delta)))
+                ref = _tree_sumsq_w(raw).sum()
+        elif mode == "ef_sign":
+            raw = delta
             delta, ef = comp.ef_compress(delta, ef, use_kernel=use_kernel,
                                          bucketable=bucketable)
-        if ls.sync_compression != "none" and ls.wire_pack:
+            if record:
+                # EF residual e' = input - output IS the error
+                err = _tree_sumsq_w(ef).sum()
+                ref = sum(_sumsq(c + e)
+                          for c, e in zip(jax.tree.leaves(delta),
+                                          jax.tree.leaves(ef)))
+        elif record and speculate_compression:
+            cs = comp.sign_compress(delta, use_kernel=use_kernel,
+                                    bucketable=bucketable)
+            err = sum(_sumsq(d.astype(jnp.float32) - c)
+                      for d, c in zip(jax.tree.leaves(delta),
+                                      jax.tree.leaves(cs)))
+            ref = _tree_sumsq_w(delta).sum()
+        if mode != "none" and ls.wire_pack:
             # 1-bit wire format. Bucketized: one packed gather per dtype
             # bucket (make_packed_mean_flat; meshless fallback in CPU
             # tests). Per-leaf path kept for sharded leaves / equivalence.
@@ -491,6 +631,16 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         else:
             dbar = jax.tree.map(lambda d: d.mean(axis=0), delta)
 
+        new_stats = state.stats
+        if record:
+            pre = _tree_sumsq_w(delta).mean()
+            post = sum(_sumsq(d) for d in jax.tree.leaves(dbar))
+            kw = {}
+            if err is not None:
+                kw = dict(comp_err_sq=err[None], comp_ref_sq=ref[None])
+            new_stats = tstats.record_sync(state.stats, pre_sync_sq=pre,
+                                           post_sync_sq=post, **kw)
+
         gu = state.global_u
         if ls.global_momentum > 0:
             gu = jax.tree.map(lambda ug, d: ls.global_momentum * ug + d, gu, dbar)
@@ -503,7 +653,7 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         p = stack_tree(anchor, W)
         return LocalSGDState(params=p, momentum=state.momentum, anchor=anchor,
                              global_u=gu, ef_memory=ef, step=state.step,
-                             rng=state.rng)
+                             rng=state.rng, stats=new_stats)
 
     return init, local_step, sync
 
@@ -518,9 +668,15 @@ def _bucket_noise(layout, gbs, rng, *, step, eta: float, gamma: float):
     """Isotropic gradient noise straight on grad buckets.
 
     Same sigma_t = sqrt(eta/(1+t)^gamma) schedule as
-    ``noise.isotropic_noise`` but keyed per bucket instead of per leaf
-    (a different random stream, same distribution), and masked so
-    padding slots stay exactly zero (valid_mask invariant).
+    ``noise.isotropic_noise`` but keyed per BUCKET instead of per leaf
+    — a different random stream drawing from the same N(0, sigma_t^2)
+    distribution.  Consequence (documented contract, ROADMAP):
+    noise_eta > 0 trajectories are STATISTICALLY comparable across the
+    tree and resident paths (same schedule, same per-element moments —
+    pinned by tests/test_noise_parity.py) but NOT bitwise comparable;
+    the bitwise trajectory-equivalence harness only covers
+    noise_eta == 0.  Noise is masked so padding slots stay exactly zero
+    (valid_mask invariant).
     """
     if eta <= 0:
         return gbs
@@ -537,7 +693,8 @@ def _bucket_noise(layout, gbs, rng, *, step, eta: float, gamma: float):
 def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                              num_workers: int, wd_mask=None,
                              packed_mean_flat_fn: Callable | None = None,
-                             sharded: bool = False):
+                             sharded: bool = False, telemetry: bool = False,
+                             speculate_compression: bool = False):
     """(init, local_step, sync) with state held resident in bucket form.
 
     Local steps differentiate the loss THROUGH the bucket view:
@@ -549,6 +706,14 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
     consumes and produces buckets directly as well (one collective /
     compressor launch per dtype bucket, no unflatten/re-flatten pair
     between the compressor and the wire pack).
+
+    With ``telemetry``, the per-step grad/update norms come out of the
+    SAME fused optimizer launches (``stats=True`` aux outputs in
+    kernels/fused_bucket) — zero extra full-state HBM passes and zero
+    pack/unpack eqns per step (op-census-tested) — and each global sync
+    records the pre-/post-mean norm pair plus per-bucket compression
+    error into ``state.stats``.  ``sync`` accepts a per-bucket
+    ``compression`` mode tuple (the controller's escalation hook).
     """
     ls = run.local_sgd
     opt = run.optim
@@ -578,6 +743,8 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                        if ls.sync_compression == "ef_sign" else None),
             step=jnp.int32(0),
             rng=rng,
+            stats=(tstats.init_stats(W, layout.num_buckets) if telemetry
+                   else None),
         )
 
     def local_step(state: LocalSGDState, batch):
@@ -600,66 +767,145 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                 gbs = _bucket_noise(layout, gbs, rw, step=step_no,
                                     eta=opt.noise_eta, gamma=opt.noise_gamma)
             if opt.optimizer == "lars":
-                p2, u2 = apply_lars_buckets(
+                out = apply_lars_buckets(
                     layout, list(pbs), gbs, list(ubs), lr=lr,
                     trust=opt.lars_trust, momentum_coef=ls.local_momentum,
-                    weight_decay=opt.weight_decay, nesterov=ls.nesterov)
+                    weight_decay=opt.weight_decay, nesterov=ls.nesterov,
+                    want_stats=telemetry)
             else:
-                p2, u2 = apply_sgd_buckets(
+                out = apply_sgd_buckets(
                     layout, list(pbs), gbs, list(ubs), lr=lr,
                     momentum_coef=ls.local_momentum,
                     weight_decay=opt.weight_decay, nesterov=ls.nesterov,
-                    grad_clip=opt.grad_clip)
+                    grad_clip=opt.grad_clip, want_stats=telemetry)
+            if telemetry:
+                p2, u2, (gsq, usq) = out
+                return tuple(p2), tuple(u2), loss, metrics, gsq, usq
+            p2, u2 = out
             return tuple(p2), tuple(u2), loss, metrics
 
-        p, u, loss, metrics = jax.vmap(step_w)(
+        out = jax.vmap(step_w)(
             state.params.buckets, state.momentum.buckets, batch, rngs)
+        if telemetry:
+            p, u, loss, metrics, gsq_w, usq_w = out
+            new_stats = tstats.accumulate_step(state.stats, gsq_w, usq_w)
+        else:
+            p, u, loss, metrics = out
+            new_stats = state.stats
         metrics = jax.tree.map(lambda x: x.mean(), metrics)
         metrics = {**metrics, "loss": loss.mean(), "lr": lr}
         new = LocalSGDState(params=state.params.with_buckets(p),
                             momentum=state.momentum.with_buckets(u),
                             anchor=state.anchor, global_u=state.global_u,
                             ef_memory=state.ef_memory, step=state.step + 1,
-                            rng=state.rng)
+                            rng=state.rng, stats=new_stats)
         return new, metrics
 
-    def sync(state: LocalSGDState, *, group: int | None = None) -> LocalSGDState:
-        """Average within worker groups, entirely in bucket form."""
+    def sync(state: LocalSGDState, *, group: int | None = None,
+             compression=None) -> LocalSGDState:
+        """Average within worker groups, entirely in bucket form.
+
+        ``compression`` (static) overrides the config compressor — a
+        single mode or a PER-BUCKET tuple (see
+        :func:`resolve_comp_modes`): the ``auto_compress`` controller
+        escalates none -> sign -> ef_sign bucket by bucket as the
+        measured compression error allows.
+        """
         g = group or W
         layout = state.params.layout
+        nb = layout.num_buckets
         pb = list(state.params.buckets)
+        record = telemetry and g == W
         if not needs_anchor(ls):
+            if any(m != "none"
+                   for m in resolve_comp_modes(compression, nb, "none")):
+                raise ValueError(
+                    "compression override needs an anchor: configure "
+                    "sync_compression/global_momentum so the state "
+                    "allocates one (needs_anchor)")
             p = [group_mean(b, g) for b in pb]
+            new_stats = state.stats
+            if record:
+                # centered pre-/post-mean pair (see the tree-path sync):
+                # x_k = p_k - pbar, pre = dispersion, post = 0 exactly —
+                # immune to the cancellation of mean||p_k||^2 - ||pbar||^2
+                pre = sum(_sumsq(b.astype(jnp.float32)
+                                 - m.astype(jnp.float32), from_axis=1)
+                          for b, m in zip(pb, p)).mean()
+                post = jnp.float32(0.0)
+                new_stats = tstats.record_sync(state.stats, pre_sync_sq=pre,
+                                               post_sync_sq=post)
             return LocalSGDState(params=state.params.with_buckets(p),
                                  momentum=state.momentum, anchor=None,
                                  global_u=None, ef_memory=None,
-                                 step=state.step, rng=state.rng)
+                                 step=state.step, rng=state.rng,
+                                 stats=new_stats)
 
         assert g == W, "compression / global momentum require flat local SGD"
+        modes = resolve_comp_modes(compression, nb, ls.sync_compression)
+        if "ef_sign" in modes and state.ef_memory is None:
+            raise ValueError("ef_sign override requires the config to "
+                             "allocate EF memory (sync_compression='ef_sign')")
         ab = list(state.anchor.buckets)
         # strict: every field must share the params bucket structure
         # (pack_state preserves it even for dtype-promoted ef/global_u)
         delta = [a[None] - p for a, p in zip(ab, pb, strict=True)]
         ef = state.ef_memory
-        if ls.sync_compression == "sign":
-            delta = comp.sign_compress_buckets(layout, delta, leading=1,
+        efb = list(ef.buckets) if ef is not None else None
+        flat_fn = packed_mean_flat_fn or _packed_mean_flat_local
+        dbar = []
+        pre_w = jnp.zeros((W,), jnp.float32)
+        err = [jnp.float32(0.0)] * nb
+        ref = [jnp.float32(0.0)] * nb
+        for b in range(nb):
+            d = delta[b]
+            x = d                                     # the synced quantity
+            if modes[b] == "sign":
+                x = comp.sign_compress_bucket(layout, b, d, leading=1,
+                                              kernel=comp_kernel)
+                if record:
+                    err[b] = _sumsq(d.astype(jnp.float32) - x)
+                    ref[b] = _sumsq(d)
+            elif modes[b] == "ef_sign":
+                x, e_new, inp = comp.ef_compress_bucket(layout, b, d, efb[b],
+                                                        leading=1,
+                                                        kernel=comp_kernel)
+                efb[b] = e_new
+                if record:
+                    # EF residual e' = input - output IS the error
+                    err[b] = _sumsq(e_new)
+                    ref[b] = _sumsq(inp)
+            elif record and speculate_compression:
+                # measure the WOULD-BE sign error so auto_compress can
+                # decide when to start compressing this bucket
+                cs = comp.sign_compress_bucket(layout, b, d, leading=1,
                                                kernel=comp_kernel)
-        elif ls.sync_compression == "ef_sign":
-            delta, efb = comp.ef_compress_buckets(layout, delta,
-                                                  list(ef.buckets), leading=1,
-                                                  kernel=comp_kernel)
+                err[b] = _sumsq(d.astype(jnp.float32) - cs)
+                ref[b] = _sumsq(d)
+            if modes[b] != "none" and ls.wire_pack:
+                db = flat_fn(x, flatbuf.row_segments(layout, b),
+                             flatbuf.segment_sizes(layout, b))
+                # the 1-bit unpack emits sign(+1)*scale in padding
+                # slots; re-mask so padding-is-zero survives the round
+                db = flatbuf.mask_padding(layout, b, db)
+            else:
+                db = x.mean(axis=0)
+            if record:
+                pre_w = pre_w + _sumsq(x, from_axis=1)
+            dbar.append(db)
+        if ef is not None:
             ef = ef.with_buckets(efb)
-        if ls.sync_compression != "none" and ls.wire_pack:
-            flat_fn = packed_mean_flat_fn or _packed_mean_flat_local
-            dbar = [flat_fn(d, flatbuf.row_segments(layout, b),
-                            flatbuf.segment_sizes(layout, b))
-                    for b, d in enumerate(delta)]
-            # the 1-bit unpack emits sign(+1)*scale in padding slots;
-            # re-mask so the padding-is-zero invariant survives the round
-            dbar = [flatbuf.mask_padding(layout, b, d)
-                    for b, d in enumerate(dbar)]
-        else:
-            dbar = [d.mean(axis=0) for d in delta]
+
+        new_stats = state.stats
+        if record:
+            pre = pre_w.mean()
+            post = sum(_sumsq(d) for d in dbar)
+            kw = {}
+            if any(m != "none" for m in modes) or speculate_compression:
+                kw = dict(comp_err_sq=jnp.stack(err),
+                          comp_ref_sq=jnp.stack(ref))
+            new_stats = tstats.record_sync(state.stats, pre_sync_sq=pre,
+                                           post_sync_sq=post, **kw)
 
         gu = state.global_u
         if ls.global_momentum > 0:
@@ -676,6 +922,6 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                              momentum=state.momentum,
                              anchor=state.anchor.with_buckets(anchor_b),
                              global_u=gu, ef_memory=ef, step=state.step,
-                             rng=state.rng)
+                             rng=state.rng, stats=new_stats)
 
     return init, local_step, sync

@@ -26,30 +26,62 @@ def local_steps_at(cfg: LocalSGDConfig, step: int) -> int:
         if cfg.warmup_kind == "linear":
             return max(1, min(H, int(round(1 + frac * (H - 1)))))
         if cfg.warmup_kind == "exp":
+            if frac >= 1.0:
+                # a completed warmup must land on H even when H is not a
+                # power of two (2^floor(log2 6) = 4 would stick forever)
+                return H
             return max(1, min(H, int(2 ** math.floor(frac * math.log2(max(H, 1))))))
         if cfg.warmup_kind == "constant":
             return 1 if frac < 1.0 else H
     return H
 
 
+class DynamicSchedule:
+    """Stateful sync-boundary tracker: the dynamic-H handshake.
+
+    The H for each round comes from ``h_at(step)`` — either the static
+    ``local_steps_at`` closure (then this reproduces
+    :func:`sync_boundaries` exactly) or an adaptive controller's
+    current decision (core/controller.py), which may change BETWEEN
+    rounds.  Hierarchical block accounting (Alg. 5) is preserved: with
+    ``block_steps`` H^b > 1 every H-th step is an inner (level-1) sync
+    and every (H * H^b)-th an outer (level-2) sync, regardless of how H
+    itself evolves.
+    """
+
+    def __init__(self, cfg: LocalSGDConfig, h_at):
+        self.cfg = cfg
+        self.h_at = h_at
+        self.since_sync = 0
+        self.rounds = 0
+
+    def advance(self, step: int) -> int:
+        """Advance one local step; returns the sync level due AFTER
+        step ``step`` (0 = keep local, 1 = block sync, 2 = global)."""
+        H = max(int(self.h_at(step)), 1)
+        self.since_sync += 1
+        if self.since_sync < H:
+            return 0
+        self.since_sync = 0
+        self.rounds += 1
+        if self.cfg.block_steps > 1:
+            return 2 if self.rounds % self.cfg.block_steps == 0 else 1
+        return 2
+
+
 def sync_boundaries(cfg: LocalSGDConfig, total_steps: int):
     """Yield (step, level) sync events; level 1 = block (inner), 2 = global.
 
     With block_steps H^b > 1 (hierarchical, Alg. 5), every H-th step is an
-    inner sync and every (H * H^b)-th an outer sync.
+    inner sync and every (H * H^b)-th an outer sync.  Implemented on the
+    same :class:`DynamicSchedule` the controller-driven trainer uses, so
+    the static schedule and ``controller.kind='static'`` cannot drift.
     """
-    since_sync = 0
-    rounds = 0
+    sched = DynamicSchedule(cfg, lambda t: local_steps_at(cfg, t))
     for t in range(total_steps):
-        H = local_steps_at(cfg, t)
-        since_sync += 1
-        if since_sync >= H:
-            since_sync = 0
-            rounds += 1
-            if cfg.block_steps > 1:
-                yield t, (2 if rounds % cfg.block_steps == 0 else 1)
-            else:
-                yield t, 2
+        level = sched.advance(t)
+        if level:
+            yield t, level
 
 
 def lr_at(cfg: OptimConfig, step, *, global_batch: int):

@@ -20,6 +20,13 @@ sign_compress.py with ONE launch per bucket:
     and weight-decay-mask operands, so every layer of a bucket shares
     one launch (apply_lars used to dispatch per leaf).
 
+Telemetry outputs (ISSUE 3): both update kernels accept ``stats=True``,
+which adds two tiny per-grid-block partial sums to the SAME launch —
+sum(g^2) of the raw gradient and sum((lr*step)^2) of the applied update
+— so per-round grad-norm^2 / update-norm^2 telemetry costs zero extra
+HBM passes: the operands are already streaming through VMEM for the
+update; the stats are a few extra VPU ops plus a (num_blocks, 1) write.
+
 Reduction kernels mask the final partial grid block explicitly: the
 grid over ``cdiv(rows, BLOCK_ROWS)`` reads out-of-bounds rows in its
 last block and those values are undefined (NaN in interpret mode) — an
@@ -43,47 +50,71 @@ def _row_mask(shape, block_idx: int, br: int, rows: int):
     return rid < rows
 
 
-def _sgd_kernel(lr_ref, wd_ref, p_ref, g_ref, u_ref, po_ref, uo_ref, *,
-                momentum: float, weight_decay: float, nesterov: bool):
+def _sgd_kernel(lr_ref, wd_ref, p_ref, g_ref, u_ref, po_ref, uo_ref,
+                *stat_refs, momentum: float, weight_decay: float,
+                nesterov: bool, rows: int = 0, br: int = 0):
     lr = lr_ref[0, 0]
     p = p_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
+    if stat_refs:
+        # raw-gradient norm^2 BEFORE decay (the telemetry signal); the
+        # final partial grid block reads undefined out-of-bounds rows,
+        # which the reductions must mask (cf. _sq_sum_kernel)
+        mask = _row_mask(g.shape, pl.program_id(0), br, rows)
+        gm = jnp.where(mask, g, 0.0)
+        stat_refs[0][0, 0] = jnp.sum(gm * gm)
     if weight_decay:
         # wd_ref is the (br, 1) per-row mask: 1.0 on decayed leaves' rows
         g = g + (weight_decay * wd_ref[...]) * p
     u_new = momentum * u + g
     step = momentum * u_new + g if nesterov else u_new
-    po_ref[...] = (p - lr * step).astype(po_ref.dtype)
+    d = lr * step
+    po_ref[...] = (p - d).astype(po_ref.dtype)
     uo_ref[...] = u_new.astype(uo_ref.dtype)
+    if stat_refs:
+        dm = jnp.where(mask, d, 0.0)
+        stat_refs[1][0, 0] = jnp.sum(dm * dm)
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
-                                             "nesterov", "interpret"))
+                                             "nesterov", "stats", "interpret"))
 def fused_sgd_bucket_2d(p, g, u, lr, wd_row, *, momentum: float,
                         weight_decay: float, nesterov: bool,
-                        interpret: bool = True):
+                        stats: bool = False, interpret: bool = True):
     """One fused SGD launch over a whole bucket.
 
     p, g, u: (rows, 128) same dtype; lr: (1, 1) f32 (SMEM, may be
     traced); wd_row: (rows, 1) f32 weight-decay row mask.
-    Returns (p', u').
+    Returns (p', u'), or (p', u', sum(g^2), sum((lr*step)^2)) with
+    ``stats=True`` — the two scalars ride the same launch (telemetry).
     """
     rows = p.shape[0]
     br = min(BLOCK_ROWS, rows)
+    n = pl.cdiv(rows, br)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
-    return pl.pallas_call(
+    sspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out_specs = [spec, spec] + ([sspec, sspec] if stats else [])
+    out_shape = [jax.ShapeDtypeStruct(p.shape, p.dtype),
+                 jax.ShapeDtypeStruct(u.shape, u.dtype)]
+    if stats:
+        out_shape += [jax.ShapeDtypeStruct((n, 1), jnp.float32)] * 2
+    out = pl.pallas_call(
         functools.partial(_sgd_kernel, momentum=momentum,
-                          weight_decay=weight_decay, nesterov=nesterov),
-        grid=(pl.cdiv(rows, br),),
+                          weight_decay=weight_decay, nesterov=nesterov,
+                          rows=rows, br=br),
+        grid=(n,),
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), mspec,
                   spec, spec, spec],
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
-                   jax.ShapeDtypeStruct(u.shape, u.dtype)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(lr, wd_row, p, g, u)
+    if stats:
+        po, uo, gsq, usq = out
+        return po, uo, gsq.sum(), usq.sum()
+    return out
 
 
 def _sq_sum_kernel(x_ref, o_ref, *, rows, br):
@@ -168,49 +199,72 @@ def lars_row_norms_2d(p, g, wd_row, *, weight_decay: float,
     )(wd_row, p, g)
 
 
-def _lars_kernel(lr_ref, wd_ref, r_ref, p_ref, g_ref, u_ref, po_ref, uo_ref, *,
-                 momentum: float, weight_decay: float, nesterov: bool):
+def _lars_kernel(lr_ref, wd_ref, r_ref, p_ref, g_ref, u_ref, po_ref, uo_ref,
+                 *stat_refs, momentum: float, weight_decay: float,
+                 nesterov: bool, rows: int = 0, br: int = 0):
     lr = lr_ref[0, 0]
     p = p_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
+    if stat_refs:
+        # raw-gradient norm^2 before decay/trust scaling (telemetry);
+        # mask the final partial grid block (cf. _sgd_kernel)
+        mask = _row_mask(g.shape, pl.program_id(0), br, rows)
+        gm = jnp.where(mask, g, 0.0)
+        stat_refs[0][0, 0] = jnp.sum(gm * gm)
     if weight_decay:
         g = g + (weight_decay * wd_ref[...]) * p
     # r_ref is the (br, 1) per-row trust ratio (1.0 on norm/bias rows)
     g = g * r_ref[...]
     u_new = momentum * u + g
     step = momentum * u_new + g if nesterov else u_new
-    po_ref[...] = (p - lr * step).astype(po_ref.dtype)
+    d = lr * step
+    po_ref[...] = (p - d).astype(po_ref.dtype)
     uo_ref[...] = u_new.astype(uo_ref.dtype)
+    if stat_refs:
+        dm = jnp.where(mask, d, 0.0)
+        stat_refs[1][0, 0] = jnp.sum(dm * dm)
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
-                                             "nesterov", "interpret"))
+                                             "nesterov", "stats", "interpret"))
 def fused_lars_bucket_2d(p, g, u, lr, wd_row, ratio_row, *, momentum: float,
                          weight_decay: float, nesterov: bool,
-                         interpret: bool = True):
+                         stats: bool = False, interpret: bool = True):
     """One fused LARS launch over a whole bucket.
 
     p, g, u: (rows, 128) same dtype; lr: (1, 1) f32; wd_row: (rows, 1)
     f32 decay mask; ratio_row: (rows, 1) f32 per-row trust ratio
     (trust * ||p|| / (||g + wd*p|| + eps) per layer, 1.0 on skip rows).
-    Returns (p', u').
+    Returns (p', u'), or (p', u', sum(g^2), sum((lr*step)^2)) with
+    ``stats=True`` — the two scalars ride the same launch (telemetry).
     """
     rows = p.shape[0]
     br = min(BLOCK_ROWS, rows)
+    n = pl.cdiv(rows, br)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
-    return pl.pallas_call(
+    sspec = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    out_specs = [spec, spec] + ([sspec, sspec] if stats else [])
+    out_shape = [jax.ShapeDtypeStruct(p.shape, p.dtype),
+                 jax.ShapeDtypeStruct(u.shape, u.dtype)]
+    if stats:
+        out_shape += [jax.ShapeDtypeStruct((n, 1), jnp.float32)] * 2
+    out = pl.pallas_call(
         functools.partial(_lars_kernel, momentum=momentum,
-                          weight_decay=weight_decay, nesterov=nesterov),
-        grid=(pl.cdiv(rows, br),),
+                          weight_decay=weight_decay, nesterov=nesterov,
+                          rows=rows, br=br),
+        grid=(n,),
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), mspec, mspec,
                   spec, spec, spec],
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype),
-                   jax.ShapeDtypeStruct(u.shape, u.dtype)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(lr, wd_row, ratio_row, p, g, u)
+    if stats:
+        po, uo, gsq, usq = out
+        return po, uo, gsq.sum(), usq.sum()
+    return out
 
 
 def _scale_sign_rows_kernel(x_ref, s_ref, o_ref):

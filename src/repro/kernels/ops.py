@@ -73,18 +73,21 @@ def sign_compress(x, *, interpret: bool | None = None):
 
 def bucket_fused_sgd(p2, g2, u2, wd_row, *, lr, momentum: float,
                      weight_decay: float, nesterov: bool = True,
-                     interpret: bool | None = None):
+                     stats: bool = False, interpret: bool | None = None):
     """One fused SGD launch over a whole (rows, 128) bucket.
 
     ``wd_row`` is the (rows, 1) f32 per-row weight-decay mask from
-    ``flatbuf.wd_rows``. Returns (p2', u2')."""
+    ``flatbuf.wd_rows``. Returns (p2', u2'), or with ``stats=True``
+    (p2', u2', sum(g^2), sum(||update||^2)) from the SAME launch
+    (telemetry; zero extra HBM passes)."""
     if interpret is None:
         interpret = not _on_tpu()
     lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
     return _fb.fused_sgd_bucket_2d(p2, g2, u2, lr2, jnp.asarray(wd_row),
                                    momentum=momentum,
                                    weight_decay=weight_decay,
-                                   nesterov=nesterov, interpret=interpret)
+                                   nesterov=nesterov, stats=stats,
+                                   interpret=interpret)
 
 
 def bucket_sq_sum(x2, *, interpret: bool | None = None):
@@ -110,18 +113,21 @@ def bucket_lars_norms(p2, g2, wd_row, *, weight_decay: float,
 
 def bucket_fused_lars(p2, g2, u2, wd_row, ratio_row, *, lr, momentum: float,
                       weight_decay: float, nesterov: bool = True,
-                      interpret: bool | None = None):
+                      stats: bool = False, interpret: bool | None = None):
     """One fused LARS launch over a whole (rows, 128) bucket.
 
     ``ratio_row`` is the (rows, 1) f32 per-row trust ratio (1.0 on
-    norm/bias rows, which take the plain LR). Returns (p2', u2')."""
+    norm/bias rows, which take the plain LR). Returns (p2', u2'), or
+    with ``stats=True`` (p2', u2', sum(g^2), sum(||update||^2)) from
+    the SAME launch (telemetry; zero extra HBM passes)."""
     if interpret is None:
         interpret = not _on_tpu()
     lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
     return _fb.fused_lars_bucket_2d(p2, g2, u2, lr2, jnp.asarray(wd_row),
                                     ratio_row, momentum=momentum,
                                     weight_decay=weight_decay,
-                                    nesterov=nesterov, interpret=interpret)
+                                    nesterov=nesterov, stats=stats,
+                                    interpret=interpret)
 
 
 def bucket_sign_compress(x2, seg_ids, seg_sizes, *, interpret: bool | None = None):

@@ -43,10 +43,26 @@ class TrainBundle:
     sync: Callable
     state_shardings: Any = None
     batch_shardings: Any = None
+    telemetry: bool = False     # state carries a StatsAccumulator
+    n_comp: int = 1             # compression-error slots (dtype buckets)
+
+
+def _stats_partition_specs(layout: MeshLayout):
+    """Specs for the telemetry StatsAccumulator: the per-worker (W,)
+    accumulators shard over the worker axes (they come out of the
+    vmapped per-worker step), everything else is replicated scalars."""
+    from repro.telemetry.stats import StatsAccumulator
+    wa = layout.worker_axes
+    w = wa if len(wa) != 1 else wa[0]
+    return StatsAccumulator(
+        acc_grad_sq=P(w), acc_update_sq=P(w), acc_steps=P(),
+        round_grad_sq=P(w), round_update_sq=P(w), round_steps=P(),
+        pre_sync_sq=P(), post_sync_sq=P(),
+        comp_err_sq=P(), comp_ref_sq=P(), rounds=P())
 
 
 def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
-                          resident: bool = False):
+                          resident: bool = False, telemetry: bool = False):
     """PartitionSpecs for a LocalSGDState built from param specs.
 
     ``resident=True`` mirrors the resident bucket form (see
@@ -54,9 +70,11 @@ def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
     construction (resident mode requires all leaves bucketable), so the
     stacked buffers shard only their leading worker dim over the worker
     axes and single-copy buffers (anchor/global_u) are fully replicated.
+    ``telemetry`` mirrors ``make_local_sgd(telemetry=...)``.
     """
     from repro.core.local_sgd import needs_anchor
     ls = run.local_sgd
+    stats = _stats_partition_specs(layout) if telemetry else None
     if resident:
         from repro.core import flatbuf
         blay = flatbuf.build_layout(
@@ -73,7 +91,7 @@ def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
             anchor=sg() if needs_anchor(ls) else None,
             global_u=sg() if ls.global_momentum > 0 else None,
             ef_memory=st() if ls.sync_compression == "ef_sign" else None,
-            step=P(), rng=P())
+            step=P(), rng=P(), stats=stats)
     stacked = mbase.partition_specs(specs, layout, stacked=True)
     single = mbase.partition_specs(specs, layout, stacked=False)
     return LocalSGDState(
@@ -84,6 +102,7 @@ def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
         ef_memory=stacked if ls.sync_compression == "ef_sign" else None,
         step=P(),
         rng=P(),
+        stats=stats,
     )
 
 
@@ -132,19 +151,35 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
     # back to the tree-in/tree-out kernel path (still one launch/bucket).
     from repro.core.local_sgd import resident_eligible
     resident = resident_eligible(use_kernel, True, bucketable)
+    # Telemetry + controller (ISSUE 3): collect round stats whenever the
+    # configured controller needs them; speculative compression-error
+    # measurement only for the auto_compress policy (it decides when to
+    # START compressing from the would-be sign error).
+    cc = run.controller
+    telemetry = cc.wants_telemetry
     init, local_step, sync = make_local_sgd(run, loss, num_workers=num_workers,
                                             wd_mask=wd_mask, use_kernel=use_kernel,
                                             packed_mean_fn=pm,
                                             packed_mean_flat_fn=pm_flat,
                                             bucketable=bucketable,
                                             resident=resident,
-                                            sharded=mesh is not None)
+                                            sharded=mesh is not None,
+                                            telemetry=telemetry,
+                                            speculate_compression=(
+                                                cc.kind == "auto_compress"))
 
+    n_comp = 1
+    if resident:
+        n_comp = flatbuf.build_layout(
+            mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
+            wd_mask=wd_mask).num_buckets
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
-                         specs=specs, init=init, local_step=local_step, sync=sync)
+                         specs=specs, init=init, local_step=local_step, sync=sync,
+                         telemetry=telemetry, n_comp=n_comp)
 
     if mesh is not None and jit:
-        sspec = state_partition_specs(specs, layout, run, resident=resident)
+        sspec = state_partition_specs(specs, layout, run, resident=resident,
+                                      telemetry=telemetry)
         bspec = inp.train_batch_pspecs(cfg, run.shape, layout)
         ssh = _named(mesh, sspec)
         bsh = _named(mesh, bspec)
@@ -152,7 +187,7 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         bundle.batch_shardings = bsh
         bundle.local_step = jax.jit(local_step, in_shardings=(ssh, bsh),
                                     out_shardings=(ssh, None))
-        bundle.sync = jax.jit(sync, static_argnames=("group",),
+        bundle.sync = jax.jit(sync, static_argnames=("group", "compression"),
                               in_shardings=(ssh,), out_shardings=ssh)
     return bundle
 

@@ -2,7 +2,15 @@
 
 ``fit`` runs mini-batch SGD / local SGD / post-local SGD / hierarchical
 local SGD purely by LocalSGDConfig — the communication pattern is decided
-host-side exactly like the paper's Alg. 1/2/5 outer loops.
+host-side exactly like the paper's Alg. 1/2/5 outer loops — and, with a
+non-static ``ControllerConfig``, closes the loop (ISSUE 3): per-round
+telemetry (repro/telemetry) feeds a ``SyncController``
+(core/controller.py) that drives H(t), the sync compressor, and the
+per-worker batch size at each global sync boundary.  Every global round
+is appended to the comms ledger and (optionally) one JSONL line in
+``telemetry_path`` (schema: the RoundReport fields + the
+``round_summary`` stats + ledger costs + the controller's NEXT
+decisions).
 
 CLI (end-to-end example entry point):
     PYTHONPATH=src python -m repro.launch.train --arch paper-lm --steps 200
@@ -10,6 +18,7 @@ CLI (end-to-end example entry point):
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -17,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro import telemetry as tele
 from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
-from repro.core.schedule import local_steps_at
+from repro.core.controller import RoundReport, make_controller
+from repro.core.schedule import DynamicSchedule
 from repro.data.partition import ShardedBatches
 from repro.data.synthetic import lm_examples, markov_lm
 from repro.launch import steps as steps_mod
@@ -26,9 +37,33 @@ from repro.models import base as mbase
 from repro.models import lm
 
 
+def _sync_layout(state):
+    """Per-worker flatbuf layout of the synced state (ledger cost model)."""
+    from repro.core import flatbuf
+    from repro.core.local_sgd import is_resident
+    if is_resident(state):
+        return state.params.layout
+    return flatbuf.build_layout(state.params, leading=1)
+
+
+def _scaled_batch(data_iter, scale: int):
+    """Concatenate ``scale`` batches along the local-batch dim (axis 1 of
+    the (W, B_loc, ...) leaves) — the adaptive_batch controller's
+    actuator.  Each distinct scale compiles the step once."""
+    if scale <= 1:
+        return next(data_iter)
+    parts = [next(data_iter) for _ in range(scale)]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *parts)
+
+
 def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
-        eval_every=0, eval_fn=None, log=print, mesh=None, layout=None):
-    """Run the full schedule; returns (state, history)."""
+        eval_every=0, eval_fn=None, log=print, mesh=None, layout=None,
+        controller=None, telemetry_path=None):
+    """Run the full schedule; returns (state, history, summary).
+
+    ``controller`` overrides the policy built from ``run.controller``;
+    ``telemetry_path`` writes one JSON line per global sync round.
+    """
     bundle = bundle or steps_mod.build_train(run, mesh=mesh, layout=layout)
     num_steps = num_steps or run.steps
     ls = run.local_sgd
@@ -38,40 +73,106 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                                 dtype=jnp.dtype(run.model.param_dtype))
     state = bundle.init(jax.random.fold_in(rng, 1), params0)
 
+    controller = controller or make_controller(run, n_comp=bundle.n_comp)
+    sched = DynamicSchedule(ls, controller.h_at)
+    ledger = tele.CommsLedger()
+    cost_cache: dict = {}
+    slayout = _sync_layout(state)
+
+    def sync_cost(group, modes):
+        key = (group, modes)
+        if key not in cost_cache:
+            cost_cache[key] = tele.analytic_sync_cost(
+                slayout, group=group or bundle.num_workers, modes=modes,
+                wire_pack=ls.wire_pack)
+        return cost_cache[key]
+
+    tlog = open(telemetry_path, "w") if telemetry_path else None
     history = []
-    since_sync = 0
-    rounds = 0
     comm_rounds = {"block": 0, "global": 0}
+    global_rounds = 0
     t_start = time.time()
-    for t in range(num_steps):
-        batch = next(data_iter)
-        state, metrics = bundle.local_step(state, batch)
-        since_sync += 1
-        H = local_steps_at(ls, t)
-        synced = ""
-        if since_sync >= H:
-            since_sync = 0
-            rounds += 1
-            if ls.block_steps > 1 and rounds % ls.block_steps != 0:
-                state = bundle.sync(state, group=bundle.num_workers // max(
-                    1, _num_blocks(bundle)))
+    try:
+        for t in range(num_steps):
+            batch = _scaled_batch(data_iter, controller.batch_scale())
+            state, metrics = bundle.local_step(state, batch)
+            h_now = max(int(controller.h_at(t)), 1)
+            level = sched.advance(t)
+            synced = ""
+            if level == 1:
+                group = bundle.num_workers // max(1, _num_blocks(bundle))
+                state = bundle.sync(state, group=group)
+                ledger.record(step=t, level=1, h=h_now,
+                              cost=sync_cost(group, None))
                 comm_rounds["block"] += 1
                 synced = "block"
-            else:
-                state = bundle.sync(state)
+            elif level == 2:
+                modes = controller.compression()
+                if modes is None:
+                    state = bundle.sync(state)
+                else:
+                    state = bundle.sync(state, compression=modes)
+                global_rounds += 1
+                # modes=None means the sync ran the CONFIG compressor —
+                # price the wire accordingly, not as a dense mean
+                cost_modes = modes if modes is not None \
+                    else ls.sync_compression
+                entry = ledger.record(
+                    step=t, level=2, h=h_now,
+                    cost=sync_cost(None, cost_modes),
+                    compression=cost_modes,
+                    batch_scale=controller.batch_scale())
                 comm_rounds["global"] += 1
                 synced = "global"
-        rec = {k: float(v) for k, v in metrics.items()}
-        rec.update(step=t, synced=synced)
-        history.append(rec)
-        if eval_every and eval_fn and (t + 1) % eval_every == 0:
-            ev = eval_fn(state)
-            rec.update({f"eval_{k}": float(v) for k, v in ev.items()})
-            log(f"step {t+1}: loss={rec['loss']:.4f} "
-                + " ".join(f"eval_{k}={float(v):.4f}" for k, v in ev.items()))
+                report = RoundReport(
+                    round=global_rounds, step=t, h=h_now,
+                    loss=float(metrics["loss"]),
+                    stats=(tele.round_summary(state.stats)
+                           if bundle.telemetry else {}),
+                    wire_bytes=entry["bytes_on_wire"],
+                    collectives=entry["collectives"])
+                controller.update(report)
+                if tlog is not None:
+                    rec = {"round": report.round, "step": t, "h": h_now,
+                           "loss": report.loss, **report.stats,
+                           "wire_bytes": report.wire_bytes,
+                           "collectives": report.collectives,
+                           "cum_wire_bytes": ledger.total_bytes(),
+                           "next_h": int(controller.h_at(t + 1)),
+                           "next_compression": _mode_str(
+                               controller.compression()),
+                           "next_batch_scale": controller.batch_scale()}
+                    tlog.write(json.dumps(rec) + "\n")
+                    tlog.flush()
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=t, synced=synced)
+            history.append(rec)
+            if eval_every and eval_fn and (t + 1) % eval_every == 0:
+                ev = eval_fn(state)
+                rec.update({f"eval_{k}": float(v) for k, v in ev.items()})
+                log(f"step {t+1}: loss={rec['loss']:.4f} "
+                    + " ".join(f"eval_{k}={float(v):.4f}"
+                               for k, v in ev.items()))
+    finally:
+        if tlog is not None:
+            tlog.close()
     wall = time.time() - t_start
-    summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps}
+    summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps,
+               "ledger": ledger.summary(),
+               "controller": {"kind": getattr(controller, "kind", "custom"),
+                              "h_final": int(controller.h_at(num_steps)),
+                              "compression": _mode_str(
+                                  controller.compression()),
+                              "batch_scale": controller.batch_scale()}}
     return state, history, summary
+
+
+def _mode_str(modes) -> str:
+    if modes is None:
+        return "config"
+    if isinstance(modes, str):
+        return modes
+    return "|".join(modes)
 
 
 def _num_blocks(bundle) -> int:

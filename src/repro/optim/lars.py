@@ -39,7 +39,7 @@ def _lars_leaf(p, g, u, skip, *, lr, trust, momentum, wd, nesterov):
 
 def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
                        momentum_coef: float, weight_decay: float,
-                       nesterov: bool):
+                       nesterov: bool, want_stats: bool = False):
     """Bucket-in/bucket-out fused LARS: the resident-state hot path.
 
     Per bucket: one fused row-norms pass yields per-row sums of p^2 and
@@ -49,12 +49,16 @@ def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
     pack/unpack — relies on the padding-is-zero invariant
     (flatbuf.valid_mask) so padded slots contribute 0 to both norms.
 
-    Returns (pb', ub') as lists of buckets.
+    Returns (pb', ub') as lists of buckets; ``want_stats=True`` adds a
+    (grad_sq, update_sq) scalar pair fused into the SAME update
+    launches (see kernels/fused_bucket; telemetry costs zero extra
+    full-state HBM passes).
     """
     from repro.core import flatbuf
     from repro.kernels import ops as kops
 
     po, uo = [], []
+    gsq = usq = jnp.float32(0.0)
     for b in range(layout.num_buckets):
         wd_row = flatbuf.wd_rows(layout, b)
         seg = jnp.asarray(flatbuf.row_segments(layout, b))
@@ -66,13 +70,21 @@ def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
         gn = jnp.sqrt(jax.ops.segment_sum(g_sq[:, 0], seg, num_segments=n_seg))
         ratio = jnp.where((wn > 0) & (gn > 0), trust * wn / (gn + 1e-9), 1.0)
         ratio = jnp.where(skip, 1.0, ratio)     # norm/bias: plain LR
-        p2, u2 = kops.bucket_fused_lars(pb[b], gb[b], ub[b], wd_row,
-                                        ratio[seg][:, None], lr=lr,
-                                        momentum=momentum_coef,
-                                        weight_decay=weight_decay,
-                                        nesterov=nesterov)
+        out = kops.bucket_fused_lars(pb[b], gb[b], ub[b], wd_row,
+                                     ratio[seg][:, None], lr=lr,
+                                     momentum=momentum_coef,
+                                     weight_decay=weight_decay,
+                                     nesterov=nesterov, stats=want_stats)
+        if want_stats:
+            p2, u2, bg, bu = out
+            gsq = gsq + bg
+            usq = usq + bu
+        else:
+            p2, u2 = out
         po.append(p2)
         uo.append(u2)
+    if want_stats:
+        return po, uo, (gsq, usq)
     return po, uo
 
 

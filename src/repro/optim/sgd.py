@@ -51,7 +51,7 @@ def _leaf_update(p, g, u, skip_wd, *, lr, momentum, wd, nesterov):
 
 def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
                       weight_decay: float, nesterov: bool,
-                      grad_clip: float = 0.0):
+                      grad_clip: float = 0.0, want_stats: bool = False):
     """Bucket-in/bucket-out fused SGD: the resident-state hot path.
 
     ``pb``/``gb``/``ub`` are per-bucket (rows, 128) buffers laid out by
@@ -60,7 +60,11 @@ def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
     state held resident across local steps (core/local_sgd) the flatten
     cost is paid once per sync round instead of once per step.
 
-    Returns (pb', ub') as lists of buckets.
+    Returns (pb', ub') as lists of buckets; with ``want_stats=True``
+    returns (pb', ub', (grad_sq, update_sq)) where the two f32 scalars
+    — sum over all buckets of ||g||^2 (post-clip) and ||Δp||^2 — come
+    out of the SAME fused update launches (see kernels/fused_bucket),
+    so telemetry adds zero extra full-state HBM passes.
     """
     from repro.core import flatbuf
     from repro.kernels import ops as kops
@@ -73,14 +77,23 @@ def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
         scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
         gb = [(g * scale).astype(g.dtype) for g in gb]
     po, uo = [], []
+    gsq = usq = jnp.float32(0.0)
     for b in range(layout.num_buckets):
-        p2, u2 = kops.bucket_fused_sgd(pb[b], gb[b], ub[b],
-                                       flatbuf.wd_rows(layout, b), lr=lr,
-                                       momentum=momentum_coef,
-                                       weight_decay=weight_decay,
-                                       nesterov=nesterov)
+        out = kops.bucket_fused_sgd(pb[b], gb[b], ub[b],
+                                    flatbuf.wd_rows(layout, b), lr=lr,
+                                    momentum=momentum_coef,
+                                    weight_decay=weight_decay,
+                                    nesterov=nesterov, stats=want_stats)
+        if want_stats:
+            p2, u2, bg, bu = out
+            gsq = gsq + bg
+            usq = usq + bu
+        else:
+            p2, u2 = out
         po.append(p2)
         uo.append(u2)
+    if want_stats:
+        return po, uo, (gsq, usq)
     return po, uo
 
 

@@ -1,0 +1,23 @@
+"""Telemetry: on-device round statistics + host-side comms ledger.
+
+The measurement half of the adaptive sync controller (ISSUE 3):
+
+* :mod:`repro.telemetry.stats` — a :class:`StatsAccumulator` carried in
+  ``LocalSGDState`` that fuses per-round statistics out of the resident
+  dtype buckets (grad-norm^2 / update-norm^2 ride the already-launched
+  fused optimizer kernels; inter-worker gradient diversity comes from a
+  pre-/post-mean norm pair at sync; per-bucket compression error from
+  the compressor residual).
+* :mod:`repro.telemetry.ledger` — a host-side :class:`CommsLedger`
+  counting bytes / collectives per sync round, either measured from
+  compiled HLO via ``roofline/hlo.parse_collectives`` or from the
+  analytic ring-cost model over the flatbuf bucket layout.
+"""
+from repro.telemetry.ledger import CommsLedger, analytic_sync_cost, hlo_sync_cost
+from repro.telemetry.stats import (StatsAccumulator, accumulate_step,
+                                   init_stats, record_sync, round_summary)
+
+__all__ = [
+    "StatsAccumulator", "init_stats", "accumulate_step", "record_sync",
+    "round_summary", "CommsLedger", "analytic_sync_cost", "hlo_sync_cost",
+]

@@ -1,0 +1,113 @@
+"""Host-side comms ledger: bytes / collectives per sync round.
+
+Two cost sources, one record format:
+
+* :func:`hlo_sync_cost` — parse a compiled sync's HLO with the existing
+  ``roofline/hlo.parse_collectives`` machinery (exact per-device ring
+  bytes for the program XLA actually emitted).  Available whenever the
+  sync is jitted on a real mesh.
+* :func:`analytic_sync_cost` — the same ring formulas applied to the
+  flatbuf bucket layout (one all-reduce per dense bucket, one uint8
+  payload gather + one scale gather per wire-packed bucket).  The
+  meshless fallback for CPU runs, and the model the collective-count
+  tests pin the real lowering against (tests/test_bucket_sync.py).
+
+The :class:`CommsLedger` accumulates one entry per sync round; the
+controller and the trade-off reports (examples/adaptive_local_sgd.py)
+read totals from it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.roofline.hlo import _ring_bytes, parse_collectives
+
+
+@dataclass(frozen=True)
+class SyncCost:
+    """Per-device cost of ONE sync round."""
+    bytes_on_wire: float
+    collectives: int
+    source: str = "analytic"        # "analytic" | "hlo"
+
+
+def analytic_sync_cost(layout, *, group: int, modes=None,
+                       wire_pack: bool = False) -> SyncCost:
+    """Ring-cost model of one sync over a flatbuf bucket layout.
+
+    ``layout`` is the per-worker ``flatbuf.FlatLayout`` of the synced
+    state; ``group`` the number of workers averaged together; ``modes``
+    an optional per-bucket compression tuple (``None`` => all dense).
+    Per bucket: dense mean = one all-reduce of the bucket bytes;
+    compressed + wire_pack = one uint8 payload all-gather (1 bit/elt,
+    lane dim packed 8x) + one f32 scale all-gather (one scale per leaf
+    segment); compressed without wire_pack still moves the dense f32
+    sign*scale payload through one all-reduce.
+    """
+    from repro.core import flatbuf
+
+    n = max(int(group), 1)
+    if modes is None:
+        modes = ("none",) * layout.num_buckets
+    if isinstance(modes, str):
+        modes = (modes,) * layout.num_buckets
+    total = 0.0
+    count = 0
+    for b in range(layout.num_buckets):
+        rows = layout.bucket_rows[b]
+        if modes[b] != "none" and wire_pack:
+            payload = n * rows * (flatbuf.LANE // 8)           # uint8 gather
+            scales = n * len(layout.bucket_slots(b)) * 4       # f32 gather
+            total += _ring_bytes("all-gather", payload, n)
+            total += _ring_bytes("all-gather", scales, n)
+            count += 2
+        else:
+            # dense mean (or unpacked sign*scale): f32-width all-reduce
+            itemsize = (4 if modes[b] != "none"
+                        else np.dtype(layout.bucket_dtypes[b]).itemsize)
+            total += _ring_bytes("all-reduce", rows * flatbuf.LANE * itemsize, n)
+            count += 1
+    return SyncCost(bytes_on_wire=total, collectives=count, source="analytic")
+
+
+def hlo_sync_cost(hlo_text: str, *, pod_size: int = 0) -> SyncCost:
+    """Measure one compiled sync with ``roofline/hlo.parse_collectives``."""
+    s = parse_collectives(hlo_text, pod_size=pod_size)
+    return SyncCost(bytes_on_wire=s.total_bytes(), collectives=s.count(),
+                    source="hlo")
+
+
+@dataclass
+class CommsLedger:
+    """Accumulates one entry per sync round (host-side, plain floats)."""
+    entries: list = field(default_factory=list)
+
+    def record(self, *, step: int, level: int, h: int, cost: SyncCost,
+               compression="none", batch_scale: int = 1) -> dict:
+        e = {"step": int(step), "level": int(level), "h": int(h),
+             "bytes_on_wire": float(cost.bytes_on_wire),
+             "collectives": int(cost.collectives),
+             "cost_source": cost.source,
+             "compression": (list(compression)
+                             if isinstance(compression, (tuple, list))
+                             else str(compression)),
+             "batch_scale": int(batch_scale)}
+        self.entries.append(e)
+        return e
+
+    def total_bytes(self, *, level: int | None = None) -> float:
+        return float(sum(e["bytes_on_wire"] for e in self.entries
+                         if level is None or e["level"] == level))
+
+    def total_collectives(self) -> int:
+        return int(sum(e["collectives"] for e in self.entries))
+
+    def num_rounds(self) -> int:
+        return len(self.entries)
+
+    def summary(self) -> dict:
+        return {"sync_rounds": self.num_rounds(),
+                "wire_bytes": self.total_bytes(),
+                "collectives": self.total_collectives()}

@@ -1,0 +1,144 @@
+"""On-device per-round training statistics (the controller's sensors).
+
+A :class:`StatsAccumulator` rides in ``LocalSGDState.stats`` when
+telemetry is enabled (``make_local_sgd(..., telemetry=True)``; see
+``ControllerConfig.wants_telemetry``).  Two groups of fields:
+
+* ``acc_*`` — accumulators updated every LOCAL step.  On the resident
+  bucket path the per-worker grad-norm^2 / update-norm^2 scalars come
+  out of the already-launched fused optimizer kernels
+  (``kernels/fused_bucket`` with ``stats=True``), so per-step telemetry
+  adds ZERO extra full-state HBM passes and zero pack/unpack
+  (op-census-tested).  The tree path computes the same quantities with
+  plain jnp reductions (the reference path is not HBM-constrained).
+* ``round_* / pre_sync_sq / post_sync_sq / comp_*`` — the last
+  completed round's snapshot, written at each GLOBAL sync boundary
+  (``record_sync``): the accumulators roll into ``round_*`` and reset,
+  and the sync itself contributes the pre-/post-mean norm pair plus the
+  per-bucket compression error.  Sync-time stats cost O(payload) reads
+  once per round — amortized ``1/H`` like the sync itself.
+
+The pre-/post-mean pair is the gradient-diversity sensor (Yin et al.
+2017): for the synced quantity x_k (the model difference on anchor
+paths, the MEAN-CENTERED params p_k - pbar on plain-mean paths, where
+post = 0 exactly — centering sidesteps the f32 cancellation of
+mean||p_k||^2 - ||pbar||^2 once workers have nearly converged),
+
+    pre  = mean_k ||x_k||^2        post = ||mean_k x_k||^2
+    dispersion = pre - post = mean_k ||x_k - mean x||^2   (>= 0)
+
+Dispersion is shift-invariant, so both paths measure the same
+inter-worker disagreement.  ``round_summary`` normalizes it by the
+accumulated update norm into the scale-free ``diversity`` ratio the
+``diversity_h`` policy consumes: workers agreeing (diversity collapse)
+means averaging is redundant and H can grow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class StatsAccumulator:
+    # per-round accumulators (every local step adds into these)
+    acc_grad_sq: Any      # (W,) f32: sum over steps of per-worker ||g||^2
+    acc_update_sq: Any    # (W,) f32: sum over steps of per-worker ||dp||^2
+    acc_steps: Any        # () int32: local steps since last global sync
+    # last completed round (written by record_sync at global syncs)
+    round_grad_sq: Any    # (W,) f32
+    round_update_sq: Any  # (W,) f32
+    round_steps: Any      # () int32
+    pre_sync_sq: Any      # () f32: mean_k ||x_k||^2 at the last sync
+    post_sync_sq: Any     # () f32: ||mean_k x_k||^2 at the last sync
+    comp_err_sq: Any      # (n_comp,) f32: per-bucket ||input - C(input)||^2
+    comp_ref_sq: Any      # (n_comp,) f32: per-bucket ||input||^2
+    rounds: Any           # () int32: completed global rounds
+
+
+def init_stats(num_workers: int, n_comp: int = 1) -> StatsAccumulator:
+    """Zero accumulator: ``n_comp`` compression-error slots (one per
+    dtype bucket on the resident path, 1 global slot on the tree path)."""
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return StatsAccumulator(
+        acc_grad_sq=z(num_workers), acc_update_sq=z(num_workers),
+        acc_steps=jnp.int32(0),
+        round_grad_sq=z(num_workers), round_update_sq=z(num_workers),
+        round_steps=jnp.int32(0),
+        pre_sync_sq=z(), post_sync_sq=z(),
+        comp_err_sq=z(n_comp), comp_ref_sq=z(n_comp),
+        rounds=jnp.int32(0))
+
+
+def accumulate_step(stats: StatsAccumulator, grad_sq_w,
+                    update_sq_w) -> StatsAccumulator:
+    """Add one local step's per-worker (W,) grad/update norms."""
+    return StatsAccumulator(
+        acc_grad_sq=stats.acc_grad_sq + grad_sq_w,
+        acc_update_sq=stats.acc_update_sq + update_sq_w,
+        acc_steps=stats.acc_steps + 1,
+        round_grad_sq=stats.round_grad_sq,
+        round_update_sq=stats.round_update_sq,
+        round_steps=stats.round_steps,
+        pre_sync_sq=stats.pre_sync_sq, post_sync_sq=stats.post_sync_sq,
+        comp_err_sq=stats.comp_err_sq, comp_ref_sq=stats.comp_ref_sq,
+        rounds=stats.rounds)
+
+
+def record_sync(stats: StatsAccumulator, *, pre_sync_sq, post_sync_sq,
+                comp_err_sq=None, comp_ref_sq=None) -> StatsAccumulator:
+    """Close a round at a GLOBAL sync: roll the accumulators into the
+    ``round_*`` snapshot, record the sync-time pair, reset for the next
+    round.  ``comp_*`` default to zeros (no compressor ran/measured)."""
+    z = jnp.zeros_like
+    return StatsAccumulator(
+        acc_grad_sq=z(stats.acc_grad_sq),
+        acc_update_sq=z(stats.acc_update_sq),
+        acc_steps=jnp.int32(0),
+        round_grad_sq=stats.acc_grad_sq,
+        round_update_sq=stats.acc_update_sq,
+        round_steps=stats.acc_steps,
+        pre_sync_sq=jnp.asarray(pre_sync_sq, jnp.float32),
+        post_sync_sq=jnp.asarray(post_sync_sq, jnp.float32),
+        comp_err_sq=(z(stats.comp_err_sq) if comp_err_sq is None
+                     else jnp.asarray(comp_err_sq, jnp.float32)),
+        comp_ref_sq=(z(stats.comp_ref_sq) if comp_ref_sq is None
+                     else jnp.asarray(comp_ref_sq, jnp.float32)),
+        rounds=stats.rounds + 1)
+
+
+def round_summary(stats: StatsAccumulator, *, eps: float = 1e-12) -> dict:
+    """Host-side summary of the last completed round (floats/lists).
+
+    ``diversity`` is the controller signal: worker dispersion at sync
+    normalized by the mean per-worker accumulated update norm^2 — small
+    when workers moved together (sync redundant -> H can grow), O(1)
+    when per-worker movement is mostly noise (sync pays -> H down).
+    ``comp_rel_err`` is the per-bucket relative L2 compression error
+    (actual when a compressor ran, speculative sign error otherwise).
+    """
+    s = jax.device_get(stats)
+    grad_sq = float(np.mean(s.round_grad_sq))
+    update_sq = float(np.mean(s.round_update_sq))
+    pre = float(s.pre_sync_sq)
+    post = float(s.post_sync_sq)
+    dispersion = max(pre - post, 0.0)
+    ref = np.asarray(s.comp_ref_sq, np.float64)
+    err = np.asarray(s.comp_err_sq, np.float64)
+    return {
+        "rounds": int(s.rounds),
+        "round_steps": int(s.round_steps),
+        "grad_sq": grad_sq,
+        "update_sq": update_sq,
+        "pre_sync_sq": pre,
+        "post_sync_sq": post,
+        "dispersion": dispersion,
+        "diversity": dispersion / (update_sq + eps),
+        "comp_rel_err": [float(e / (r + eps)) for e, r in zip(err, ref)],
+        "comp_measured": bool(ref.sum() > 0),
+    }

@@ -4,7 +4,8 @@ plus jaxpr op-census modes for the resident-state regression (count
 optimizer kernel launches and pack/unpack ops per local step / sync).
 
 Usage: python _bucket_sync_probe.py
-           {bucket|leaf|resident|ops_resident|ops_kernel}
+           {bucket|leaf|resident|ops_resident|ops_kernel|
+            ops_resident_telemetry}
 
 ``resident`` lowers the RESIDENT-state sync (state held as
 flatbuf.BucketState buffers, sharded P(worker) on the leading dim): the
@@ -33,10 +34,15 @@ SHAPES = {"w1": (64, 33), "w2": (33,), "w3": (16, 7), "w4": (130,),
 W = 8
 
 
-def ops_census(resident: bool):
+def ops_census(resident: bool, telemetry: bool = False):
     """Jaxpr op counts of one local step and one sync, resident vs the
     tree-in/tree-out kernel path (`flatten` = concatenate+pad eqns,
     `unflatten` = slice/gather eqns, optimizer launches = pallas_call).
+
+    ``telemetry`` runs the resident path with the StatsAccumulator
+    enabled: the ISSUE-3 acceptance census — stats must ride the
+    already-launched fused kernels (same pallas_call count, zero new
+    concatenate/pad eqns).
     """
     from repro.core.local_sgd import make_local_sgd
     from repro.roofline.hlo import jaxpr_op_counts
@@ -59,7 +65,7 @@ def ops_census(resident: bool):
     wd_mask = {"w1": False, "b1": True, "w2": False}
     init, local_step, sync = make_local_sgd(
         run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
-        resident=resident)
+        resident=resident, telemetry=telemetry)
     params = {"w1": jax.ShapeDtypeStruct((6, 5), jnp.float32),
               "b1": jax.ShapeDtypeStruct((5,), jnp.float32),
               "w2": jax.ShapeDtypeStruct((5, 2), jnp.float32)}
@@ -71,7 +77,8 @@ def ops_census(resident: bool):
     from repro.core import flatbuf
     nb = flatbuf.build_layout(params).num_buckets
     print(json.dumps({
-        "mode": "ops_resident" if resident else "ops_kernel",
+        "mode": ("ops_resident_telemetry" if telemetry
+                 else "ops_resident" if resident else "ops_kernel"),
         "num_buckets": nb,
         "step": step_counts,
         "sync": sync_counts,
@@ -80,7 +87,8 @@ def ops_census(resident: bool):
 
 def main():
     if sys.argv[1].startswith("ops_"):
-        ops_census(sys.argv[1] == "ops_resident")
+        ops_census(sys.argv[1] != "ops_kernel",
+                   telemetry=sys.argv[1] == "ops_resident_telemetry")
         return
     mode = sys.argv[1]
     bucket = mode == "bucket"

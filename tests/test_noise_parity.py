@@ -1,0 +1,89 @@
+"""Resident noise-stream statistical parity (ROADMAP open item).
+
+``core/local_sgd._bucket_noise`` keys the isotropic gradient noise per
+BUCKET while the per-leaf reference (``noise.isotropic_noise``) keys it
+per LEAF: noise_eta > 0 trajectories are therefore statistically — but
+NOT bitwise — comparable across the tree and resident paths.  These
+tests pin the statistical half of that contract: same sigma_t schedule,
+same per-element mean/variance (per bucket and per leaf segment), and
+exact zeros in the padding slots.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatbuf
+from repro.core import noise as noise_mod
+from repro.core.local_sgd import _bucket_noise
+
+TREE = {"a": jnp.zeros((40, 7), jnp.float32), "b": jnp.zeros((130,), jnp.float32)}
+ETA, GAMMA, STEP = 0.3, 0.55, 4
+SIGMA = float(np.sqrt(ETA / (1.0 + STEP) ** GAMMA))
+TRIALS = 400
+
+
+def _bucket_samples():
+    layout = flatbuf.build_layout(TREE)
+    gbs = flatbuf.flatten(layout, TREE)
+
+    def one(key):
+        return _bucket_noise(layout, gbs, key, step=STEP, eta=ETA,
+                             gamma=GAMMA)
+
+    keys = jax.random.split(jax.random.PRNGKey(0), TRIALS)
+    out = jax.vmap(one)(keys)              # list of (TRIALS, rows, 128)
+    return layout, out
+
+
+def test_bucket_noise_matches_leaf_noise_moments():
+    """Mean/std of the injected noise match the per-leaf reference
+    distribution N(0, sigma_t^2) within Monte-Carlo tolerance."""
+    layout, bufs = _bucket_samples()
+    keys = jax.random.split(jax.random.PRNGKey(1), TRIALS)
+    leaf = jax.vmap(lambda k: noise_mod.isotropic_noise(
+        TREE, k, step=STEP, eta=ETA, gamma=GAMMA))(keys)
+    for b, buf in enumerate(bufs):
+        mask = flatbuf.valid_mask(layout, b).astype(bool)
+        vals = np.asarray(buf)[:, mask]            # (TRIALS, true elts)
+        n = vals.size
+        se = SIGMA / np.sqrt(n)
+        assert abs(vals.mean()) < 5 * se, (b, vals.mean())
+        np.testing.assert_allclose(vals.std(), SIGMA, rtol=0.02)
+    for leaf_vals in jax.tree.leaves(leaf):
+        v = np.asarray(leaf_vals)
+        np.testing.assert_allclose(v.std(), SIGMA, rtol=0.02)
+        assert abs(v.mean()) < 5 * SIGMA / np.sqrt(v.size)
+
+
+def test_bucket_noise_per_segment_variance():
+    """Every leaf SEGMENT of a bucket sees the same noise scale — the
+    bucket-keyed stream must not favor any leaf."""
+    layout, bufs = _bucket_samples()
+    for b, buf in enumerate(bufs):
+        arr = np.asarray(buf).reshape(TRIALS, -1)
+        for s in layout.bucket_slots(b):
+            off = s.row_offset * flatbuf.LANE
+            seg = arr[:, off:off + s.size]
+            np.testing.assert_allclose(seg.std(), SIGMA, rtol=0.05,
+                                       err_msg=f"bucket {b} seg {s.seg}")
+
+
+def test_bucket_noise_keeps_padding_zero():
+    layout, bufs = _bucket_samples()
+    for b, buf in enumerate(bufs):
+        pad = ~flatbuf.valid_mask(layout, b).astype(bool)
+        assert np.all(np.asarray(buf)[:, pad] == 0.0)
+
+
+def test_bucket_noise_streams_differ_bitwise():
+    """The documented caveat: same distribution, DIFFERENT stream — the
+    two paths must not be expected to agree elementwise."""
+    layout = flatbuf.build_layout(TREE)
+    gbs = flatbuf.flatten(layout, TREE)
+    key = jax.random.PRNGKey(3)
+    bucket = _bucket_noise(layout, gbs, key, step=STEP, eta=ETA, gamma=GAMMA)
+    leaf = noise_mod.isotropic_noise(TREE, key, step=STEP, eta=ETA,
+                                     gamma=GAMMA)
+    leaf_flat = flatbuf.flatten(layout, leaf)
+    assert not all(np.allclose(np.asarray(a), np.asarray(b))
+                   for a, b in zip(bucket, leaf_flat))

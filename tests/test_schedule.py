@@ -1,0 +1,82 @@
+"""Schedule edge cases + the dynamic-H handshake (ISSUE 3 satellites).
+
+Covers the sync_boundaries corners the paper's Alg. 2/5 compositions
+hit: post-local switching combined with hierarchical blocks, exp
+local-step warmup with a non-power-of-two H, and the H=1 degenerate
+case — plus the DynamicSchedule used by the controller-driven trainer.
+"""
+from repro.configs.base import LocalSGDConfig
+from repro.core.schedule import (DynamicSchedule, local_steps_at,
+                                 sync_boundaries)
+
+
+def test_post_local_with_hierarchical_blocks():
+    """post_local_switch combined with block_steps>1: the switch changes
+    WHEN rounds happen, never the block/global round accounting."""
+    ls = LocalSGDConfig(local_steps=4, post_local_switch=6, block_steps=2)
+    events = list(sync_boundaries(ls, 22))
+    # H=1 until step 6 (sync every step), then H=4 (steps 9, 13, 17, 21)
+    assert [t for t, _ in events] == [0, 1, 2, 3, 4, 5, 9, 13, 17, 21]
+    # every 2nd round is global, counted across the switch
+    assert [lv for _, lv in events] == [1, 2, 1, 2, 1, 2, 1, 2, 1, 2]
+
+
+def test_warmup_exp_non_power_of_two_h():
+    """exp warmup must land exactly on H even when H is not a power of
+    two (2^floor(log2 6) = 4 would otherwise stick forever)."""
+    ls = LocalSGDConfig(local_steps=6, warmup_kind="exp", warmup_steps=8)
+    vals = [local_steps_at(ls, t) for t in range(12)]
+    assert vals[0] == 1
+    assert vals == sorted(vals)                    # monotone ramp
+    assert set(vals) <= {1, 2, 4, 6}               # powers of two, then H
+    assert vals[8] == 6 and vals[-1] == 6          # completed warmup == H
+    # boundary step right before completion still uses the exp ladder
+    assert vals[7] <= 4
+
+
+def test_h1_degenerate():
+    """H=1 syncs after every step, also under blocks and warmup."""
+    ls = LocalSGDConfig(local_steps=1)
+    events = list(sync_boundaries(ls, 5))
+    assert [t for t, _ in events] == [0, 1, 2, 3, 4]
+    assert all(lv == 2 for _, lv in events)
+    # hierarchical H=1: every block_steps-th round is global
+    lsb = LocalSGDConfig(local_steps=1, block_steps=3)
+    levels = [lv for _, lv in sync_boundaries(lsb, 9)]
+    assert levels == [1, 1, 2, 1, 1, 2, 1, 1, 2]
+    # exp warmup with H=1 never yields H>1 (log2(1) = 0 ladder)
+    lsw = LocalSGDConfig(local_steps=1, warmup_kind="exp", warmup_steps=4)
+    assert all(local_steps_at(lsw, t) == 1 for t in range(8))
+
+
+def test_dynamic_schedule_matches_static_boundaries():
+    """DynamicSchedule with the static h_at closure IS sync_boundaries
+    (the controller.kind='static' no-drift guarantee)."""
+    for ls in (LocalSGDConfig(local_steps=4),
+               LocalSGDConfig(local_steps=4, block_steps=3),
+               LocalSGDConfig(local_steps=8, warmup_kind="linear",
+                              warmup_steps=10),
+               LocalSGDConfig(local_steps=6, post_local_switch=5,
+                              block_steps=2)):
+        sched = DynamicSchedule(ls, lambda t, ls=ls: local_steps_at(ls, t))
+        got = [(t, lv) for t in range(40)
+               if (lv := sched.advance(t))]
+        assert got == list(sync_boundaries(ls, 40)), ls
+
+
+def test_dynamic_schedule_adaptive_h_keeps_block_accounting():
+    """A mid-run H change moves the boundaries but the block/global
+    cadence (every block_steps-th round is global) is preserved."""
+    ls = LocalSGDConfig(local_steps=2, block_steps=2)
+    h = {"v": 2}
+    sched = DynamicSchedule(ls, lambda t: h["v"])
+    events = []
+    for t in range(24):
+        lv = sched.advance(t)
+        if lv:
+            events.append((t, lv))
+            if len(events) == 3:
+                h["v"] = 4              # controller doubles H mid-run
+    # rounds at steps 1,3,5 under H=2, then every 4 steps
+    assert [t for t, _ in events] == [1, 3, 5, 9, 13, 17, 21]
+    assert [lv for _, lv in events] == [1, 2, 1, 2, 1, 2, 1]
