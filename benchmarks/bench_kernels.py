@@ -205,3 +205,67 @@ def resident_bench():
              f"concatenate={counts.get('concatenate', 0)};"
              f"pad={counts.get('pad', 0)};"
              f"tpu_hbm_bound_us={(kernel_passes + pack_bytes)/819e9*1e6:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Sharded sub-buckets: FSDP/TP-class leaves on the resident bus (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def sharded_bench():
+    """Resident local SGD with (dtype, sharding-class) sub-buckets.
+
+    Simulates a 2-way within-worker sharding class on the paper_lm-like
+    tree (matrix leaves sharded, vectors replicated): measures the
+    resident step with per-shard launch grids and reports the sub-bucket
+    census plus the analytic per-round sync wire bytes — per-DEVICE
+    payloads scale with shard-local rows, so the bytes halve for the
+    sharded buckets vs the replicated packing of the same leaves.
+    """
+    from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+    from repro.core.local_sgd import make_local_sgd
+    from repro.telemetry.ledger import analytic_sync_cost
+
+    W, S = 2, 2
+    params, wd_mask = _paper_lm_like_tree(layers=6)
+
+    def cls_of(x):
+        if x.ndim == 2 and all(d % S == 0 for d in x.shape):
+            return flatbuf.ShardClass(axes=("model",), dims=((1, S),))
+        return flatbuf.REPLICATED
+
+    classes = jax.tree.map(cls_of, params)
+
+    def loss(p, b):
+        l = sum(jnp.mean(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(p))
+        return l, {"xent": l}
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, local_momentum=0.9,
+                                 sync_compression="sign", wire_pack=True),
+        optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=1e-4,
+                          grad_clip=0.5, lr_decay_steps=()))
+    batch = {"x": jnp.zeros((W, 1), jnp.float32)}
+
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
+        resident=True, shard_classes=classes)
+    state = init(jax.random.PRNGKey(0), params)
+    lay = state.params.layout
+    n_sharded = sum(1 for b in range(lay.num_buckets) if lay.bucket_class(b))
+    step = jax.jit(local_step)
+    us = time_fn(step, state, batch, iters=2, warmup=1)
+    cost = analytic_sync_cost(lay, group=W, modes="sign", wire_pack=True)
+    # the same tree packed WITHOUT classes: replicated per-device rows
+    rep = flatbuf.build_layout(params, wd_mask=wd_mask)
+    rep_cost = analytic_sync_cost(rep, group=W, modes="sign", wire_pack=True)
+    emit("bucket/local_step_sharded", us,
+         f"sub_buckets={lay.num_buckets};sharded_buckets={n_sharded};"
+         f"shards={S};sync_wire_bytes={cost.bytes_on_wire:.0f};"
+         f"replicated_wire_bytes={rep_cost.bytes_on_wire:.0f};"
+         f"collectives={cost.collectives}")
+    us_s = time_fn(jax.jit(sync), state, iters=2, warmup=1)
+    emit("bucket/sync_sharded", us_s,
+         f"collectives={cost.collectives};wire_bytes={cost.bytes_on_wire:.0f}")

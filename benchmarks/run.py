@@ -46,6 +46,7 @@ def main() -> None:
         "kernels": bench_kernels.kernels_bench,
         "bucket": bench_kernels.bucket_bench,
         "resident": bench_kernels.resident_bench,
+        "sharded": bench_kernels.sharded_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -64,7 +65,7 @@ def main() -> None:
     }
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
-    smoke = ("kernels", "bucket", "resident")
+    smoke = ("kernels", "bucket", "resident", "sharded")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

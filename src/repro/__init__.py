@@ -16,22 +16,25 @@ Public API tour:
 
 flatbuf — the flat parameter bus. Packs the parameter pytree into
 dtype-homogeneous contiguous (rows, 128) lane-layout buckets with static
-per-leaf metadata (offset, rows, true size, wd-mask bit, pack axis).
-Invariants: leaves in ``jax.tree.flatten`` order; one bucket per dtype
-in first-appearance order; each leaf zero-padded to a LANE multiple and
-its rows rounded to a SUBLANE (8) multiple so every leaf starts on a
-(8, 128) tile boundary; reductions divide by TRUE element counts, so
-padding never biases a scale or a norm. The three hot paths ride it:
-``optim/sgd.apply_sgd(use_kernel=True)`` — one fused Pallas launch per
-bucket (kernels/fused_bucket) with a per-row weight-decay mask;
-``core/compression.sign_compress(use_kernel=True)`` — per-leaf L1
-scales from one segmented reduction per bucket; and the sync paths
-``bucket_group_mean`` / ``make_packed_mean_flat`` — ONE collective per
-bucket instead of one per leaf. Within-worker-sharded leaves are marked
-non-bucketable (``flatbuf.bucketable_tree``) and stay per-leaf.
+per-leaf metadata (offset, rows, true size, wd-mask bit, pack axis,
+sharded dims). Invariants: leaves in ``jax.tree.flatten`` order; one
+bucket per (dtype, sharding class) in first-appearance order — the
+class (``flatbuf.shard_classes``) is the leaf's EFFECTIVE within-worker
+sharding under the mesh layout, so FSDP/TP leaves ride their own
+sub-bucket whose row dim stays sharded (shard-major packing; no
+gathers) instead of falling off the bus; each leaf zero-padded to a
+LANE multiple and its rows rounded to a SUBLANE (8) multiple so every
+leaf starts on a (8, 128) tile boundary; reductions divide by TRUE
+element counts, so padding never biases a scale or a norm. The three
+hot paths ride it: ``optim/sgd.apply_sgd(use_kernel=True)`` — one fused
+Pallas launch per bucket (kernels/fused_bucket) with a per-row
+weight-decay mask; ``core/compression.sign_compress(use_kernel=True)``
+— per-leaf L1 scales from one segmented reduction per bucket; and the
+sync paths ``bucket_group_mean`` / ``make_packed_mean_flat`` — ONE
+worker-axis collective per sub-bucket instead of one per leaf.
 
-Resident bucket state — with ``use_kernel=True`` (all leaves
-bucketable) the optimizer state LIVES in bucket form across local steps
+Resident bucket state — with ``use_kernel=True`` (EVERY layout,
+sharded ones included) the optimizer state LIVES in bucket form across local steps
 (``flatbuf.BucketState``): local steps differentiate the loss through
 the bucket view so grads arrive already bucketed, ``apply_sgd`` /
 ``apply_lars`` update buckets in place-shape, and sync (mean / sign /

@@ -224,18 +224,28 @@ def pack_signs(x, axis: int = -1):
     return packed, scale
 
 
-def pack_bucket_signs(x2, seg_ids, seg_sizes):
+def pack_bucket_signs(x2, seg_ids, seg_sizes, *, psum_axes=()):
     """One worker's (rows, 128) f32 bucket -> (packed (rows, 16) uint8,
     per-leaf scales (num_segments,) f32).
 
-    The lane dim is always unsharded in a bucket (the worker dim is the
-    only sharded dim), so packing 8 neighbours along it is shard-local.
-    Scales divide by TRUE element counts, so bucket padding (zeros)
-    never biases them. sign(0) packs as +1, as in :func:`pack_signs`.
+    The lane dim is always unsharded in a bucket (the worker dim and,
+    for sharded sub-buckets, the row dim are the only sharded dims), so
+    packing 8 neighbours along it is shard-local.  Scales divide by
+    TRUE element counts, so bucket padding (zeros) never biases them.
+    sign(0) packs as +1, as in :func:`pack_signs`.
+
+    ``psum_axes``: inside a shard_map over a SHARDED sub-bucket, ``x2``
+    is one shard's (local_rows, 128) block and ``seg_ids`` the shard-
+    local segment map; the per-leaf L1 totals are then summed across
+    the shard mesh axes (a (num_segments,)-sized psum — the only cross-
+    shard traffic of the whole pack) so every shard packs against the
+    GLOBAL per-leaf scale, exactly as the per-leaf compressor does.
     """
     row_abs = jnp.sum(jnp.abs(x2), axis=-1)                   # (rows,)
     totals = jax.ops.segment_sum(row_abs, seg_ids,
                                  num_segments=int(seg_sizes.shape[0]))
+    if psum_axes:
+        totals = jax.lax.psum(totals, psum_axes)
     scales = totals / seg_sizes
     bits = (x2 >= 0).astype(jnp.uint8).reshape(x2.shape[0], -1, 8)
     weights = (1 << jnp.arange(8, dtype=jnp.int32)).astype(jnp.uint8)

@@ -18,9 +18,11 @@ Variants carried in state:
 * sign / EF-sign  — compress per-worker model differences before the
   average (Alg. 3 / Alg. 4)
 
-Resident bucket state (ISSUE 2): with ``use_kernel=True`` (and every
-leaf bucketable) the state fields hold ``flatbuf.BucketState`` buffers
-instead of pytrees.  Local steps differentiate the loss THROUGH the
+Resident bucket state (ISSUE 2/4): with ``use_kernel=True`` the state
+fields hold ``flatbuf.BucketState`` buffers instead of pytrees — for
+EVERY layout, including within-worker-sharded (FSDP/TP) ones, whose
+leaves ride (dtype, sharding-class) sub-buckets (``flatbuf.shard_classes``)
+kept row-sharded on the bus.  Local steps differentiate the loss THROUGH the
 bucket view — ``unflatten`` is part of the forward graph, so autodiff
 transposes it into grad buckets for free — and the fused optimizer
 consumes/produces buckets directly: zero explicit flatten/unflatten
@@ -93,11 +95,14 @@ def unpack_state(state: "LocalSGDState") -> "LocalSGDState":
                          rng=state.rng, stats=state.stats)
 
 
-def pack_state(state: "LocalSGDState", *, wd_mask=None) -> "LocalSGDState":
+def pack_state(state: "LocalSGDState", *, wd_mask=None,
+               shard_classes=None) -> "LocalSGDState":
     """Re-enter resident bucket form from a pytree state.
 
     ``wd_mask`` is recorded in the params layout (the fused optimizer
-    reads the per-row decay mask from it).  EVERY field is packed with
+    reads the per-row decay mask from it); ``shard_classes`` re-enters
+    the (dtype, sharding-class) sub-bucket form of a sharded layout
+    (``flatbuf.shard_classes``).  EVERY field is packed with
     the params layout's bucket GEOMETRY — the resident sync zips
     anchor/global_u/ef buckets against params buckets one-to-one — with
     the actual per-bucket dtype preserved: ef_memory/global_u leaves
@@ -107,7 +112,8 @@ def pack_state(state: "LocalSGDState", *, wd_mask=None) -> "LocalSGDState":
     """
     if is_resident(state):
         return state
-    layout = flatbuf.build_layout(state.params, wd_mask=wd_mask, leading=1)
+    layout = flatbuf.build_layout(state.params, wd_mask=wd_mask, leading=1,
+                                  shard_classes=shard_classes)
 
     def pack(tree, leading):
         if tree is None:
@@ -149,15 +155,20 @@ def mean_params(state: "LocalSGDState"):
     return jax.tree.map(lambda p: p.mean(axis=0), state.params)
 
 
-def resident_eligible(use_kernel: bool, bucket_sync: bool, bucketable) -> bool:
+def resident_eligible(use_kernel: bool, bucket_sync: bool,
+                      bucketable=None) -> bool:
     """Single source of truth for the resident-mode default: the kernel
-    flat bus must be on, sync bucketized (an explicit bucket_sync=False
-    keeps the per-leaf oracle per-leaf all the way), and every leaf
-    bucketable (within-worker-sharded leaves would need a per-leaf side
-    channel).  build_train uses the same predicate so its sharding specs
-    always agree with the state structure make_local_sgd returns."""
-    return bool(use_kernel and bucket_sync and
-                (bucketable is None or all(jax.tree.leaves(bucketable))))
+    flat bus must be on and sync bucketized (an explicit
+    bucket_sync=False keeps the per-leaf oracle per-leaf all the way).
+    Within-worker-sharded leaves no longer disqualify residency — they
+    ride their own (dtype, sharding-class) sub-bucket
+    (flatbuf.shard_classes), so FSDP/TP layouts take the same resident
+    path as replicated ones.  build_train uses the same predicate so
+    its sharding specs always agree with the state structure
+    make_local_sgd returns.  ``bucketable`` is accepted for backward
+    compatibility and ignored."""
+    del bucketable
+    return bool(use_kernel and bucket_sync)
 
 
 def group_mean(x, group: int):
@@ -259,26 +270,37 @@ def make_packed_mean(mesh, worker_axes: tuple[str, ...]):
 
 def make_packed_mean_flat(mesh, worker_axes: tuple[str, ...]):
     """Bucket-level 1-bit wire mean: ONE uint8 all_gather (+ one tiny
-    f32 scale gather) per dtype bucket instead of one pair per leaf.
+    f32 scale gather) per sub-bucket instead of one pair per leaf.
 
     The bucket is a contiguous (W, rows, 128) buffer (core/flatbuf);
-    signs pack 8-per-uint8 along the 128-lane dim (always unsharded —
-    the worker dim is the only sharded dim of a bucket), per-leaf L1
-    scales come from one segmented reduction over row |x| sums, and
-    unpack + averaging stay shard-local after the gather.
+    signs pack 8-per-uint8 along the 128-lane dim (always unsharded),
+    per-leaf L1 scales come from one segmented reduction over row |x|
+    sums, and unpack + averaging stay shard-local after the gather.
+
+    SHARDED sub-buckets (bucket_class != ()): the row dim is
+    partitioned over the class's mesh axes, so the shard_map goes
+    manual over worker AND shard axes — each device packs its own
+    (local_rows, 128) block, the payload gather runs over the WORKER
+    axes only (per-device wire bytes scale with shard-local rows, not
+    the gathered leaf), and the per-leaf scale totals cross shards via
+    one (num_segments,)-sized psum.  The synced result comes back
+    row-sharded over the same axes: the full leaf is never gathered.
     """
     from jax.sharding import PartitionSpec as P
 
     axis = worker_axes if len(worker_axes) > 1 else worker_axes[0]
 
-    def packed_mean_flat(bucket, seg_ids, seg_sizes):
+    def packed_mean_flat(bucket, layout, b):
         W = bucket.shape[0]
-        seg_ids_j = jnp.asarray(seg_ids)
-        sizes_j = jnp.asarray(seg_sizes)
+        cls = layout.bucket_class(b)
+        seg_ids_j = jnp.asarray(flatbuf.row_segments_local(layout, b))
+        sizes_j = jnp.asarray(flatbuf.segment_sizes(layout, b))
+        cls_spec = None if not cls else (cls[0] if len(cls) == 1 else cls)
 
-        def f(local):                     # (1, rows, 128)
+        def f(local):                     # (1, local_rows, 128)
             x = local.astype(jnp.float32)[0]
-            packed, scales = comp.pack_bucket_signs(x, seg_ids_j, sizes_j)
+            packed, scales = comp.pack_bucket_signs(x, seg_ids_j, sizes_j,
+                                                    psum_axes=cls)
             allp = jax.lax.all_gather(packed, axis)             # uint8 on wire
             alls = jax.lax.all_gather(scales, axis)
             allp = allp.reshape((W,) + packed.shape)
@@ -286,21 +308,27 @@ def make_packed_mean_flat(mesh, worker_axes: tuple[str, ...]):
             return comp.unpack_bucket_signs(allp, alls, seg_ids_j).mean(axis=0)
 
         from repro.utils import shard_map_compat
-        # fully manual: bucketable leaves are replicated within a worker
-        # by construction, so no within-worker dim needs GSPMD (and jax
-        # 0.4.x partial-auto aborts in the XLA partitioner)
-        g = shard_map_compat(f, mesh=mesh, in_specs=P(axis), out_specs=P(),
-                             manual_axes=None)
+        # fully manual over ALL mesh axes (the only mode jax 0.4.x
+        # lowers without an XLA IsManualSubgroup abort): the in_specs
+        # place the worker dim and the class's row sharding; mesh axes
+        # outside worker+class replicate the (cheap, shard-local)
+        # pack/unpack work, the payload gather runs over the worker
+        # axes only, and the scale totals psum over the class axes only
+        g = shard_map_compat(f, mesh=mesh, in_specs=P(axis, cls_spec),
+                             out_specs=P(cls_spec), manual_axes=None)
         return g(bucket)
 
     return packed_mean_flat
 
 
-def _packed_mean_flat_local(bucket, seg_ids, seg_sizes):
+def _packed_mean_flat_local(bucket, layout, b):
     """Meshless equivalent of make_packed_mean_flat (CPU tests): the
-    same pack/unpack helpers, vmapped over workers instead of gathered."""
-    seg_ids_j = jnp.asarray(seg_ids)
-    sizes_j = jnp.asarray(seg_sizes)
+    same pack/unpack helpers, vmapped over workers instead of gathered.
+    Sharded sub-buckets need no special casing here — the TILED segment
+    map makes one segment_sum over all rows produce the same global
+    per-leaf totals the mesh form assembles via its cross-shard psum."""
+    seg_ids_j = jnp.asarray(flatbuf.row_segments(layout, b))
+    sizes_j = jnp.asarray(flatbuf.segment_sizes(layout, b))
     x = bucket.astype(jnp.float32)                              # (W, rows, 128)
     packed, scales = jax.vmap(
         lambda xw: comp.pack_bucket_signs(xw, seg_ids_j, sizes_j))(x)
@@ -328,23 +356,27 @@ def bucket_packed_mean(delta, bucketable=None, *, flat_fn=None,
         axes_tree = jax.tree.map(lambda _: -1, delta)
     return _bucketed_map(
         delta, bucketable,
-        lambda b, lay, j: flat_fn(b, flatbuf.row_segments(lay, j),
-                                  flatbuf.segment_sizes(lay, j)),
+        lambda b, lay, j: flat_fn(b, lay, j),
         lambda d, axis: leaf_fn(d, -1 if axis is None else axis),
         leaf_args=axes_tree)
 
 
 def pack_axes_tree(specs, layout):
     """Per-leaf pack axis: the largest UNSHARDED dim of the stacked leaf
-    (offset +1 for the worker dim). Falls back to the last dim."""
+    (offset +1 for the worker dim). Falls back to the last dim.
+
+    "Unsharded" comes from the EFFECTIVE spec rules
+    (``MeshLayout.dim_shards``, as the classifier and partition specs
+    use), so a dim whose rule is dropped (uneven, or deduped
+    first-wins) is correctly available for packing.
+    """
     from repro.models import base as mbase
 
     def pick(ps: "mbase.ParamSpec"):
         best, best_size = -1, -1
-        for i, (a, n) in enumerate(zip(ps.axes, ps.shape)):
-            r = None if a is None else layout.rule(a)
-            sharded = r is not None and layout.axis_size(r) > 1 and \
-                n % max(layout.axis_size(r), 1) == 0
+        eff = layout.dim_shards(ps.axes, ps.shape)
+        for i, (r, n) in enumerate(zip(eff, ps.shape)):
+            sharded = r is not None and layout.axis_size(r) > 1
             if not sharded and n >= 8 and n > best_size:
                 best, best_size = i + 1, n
         return best if best >= 1 else -1
@@ -395,6 +427,7 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                    packed_mean_fn: Callable | None = None,
                    packed_mean_flat_fn: Callable | None = None,
                    bucket_sync: bool = True, bucketable=None,
+                   shard_classes=None,
                    resident: bool | None = None,
                    sharded: bool | None = None,
                    telemetry: bool = False,
@@ -405,27 +438,34 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
     ``local_step`` takes per-worker-stacked params/batch.
 
     ``bucket_sync`` routes the sync averages through the flat parameter
-    bus (one collective per dtype bucket; core/flatbuf) —
+    bus (one collective per sub-bucket; core/flatbuf) —
     ``bucket_sync=False`` keeps the per-leaf path (used by the
     equivalence tests). ``bucketable`` marks within-worker-sharded
-    leaves that must stay per-leaf; ``packed_mean_flat_fn`` is the
-    mesh-pinned bucket wire-pack from :func:`make_packed_mean_flat`.
+    leaves that must stay per-leaf ON THE NON-RESIDENT TREE PATH (its
+    on-the-fly layouts are always replicated); ``packed_mean_flat_fn``
+    is the mesh-pinned bucket wire-pack from
+    :func:`make_packed_mean_flat`.
+
+    ``shard_classes`` is the per-leaf :class:`flatbuf.ShardClass`
+    pytree (``flatbuf.shard_classes(specs, layout)``): the resident
+    path buckets leaves per (dtype, sharding class), so FSDP/TP
+    layouts get the same resident state, one-launch-per-bucket
+    optimizer, and one-worker-collective-per-bucket sync as replicated
+    layouts — the per-leaf fallback is gone from the main training
+    flow.
 
     ``resident`` holds the optimizer state IN bucket form across local
     steps (flatbuf.BucketState; see module docstring).  Default: on
     whenever ``use_kernel`` and ``bucket_sync`` are set (an explicit
     ``bucket_sync=False`` keeps the per-leaf oracle per-leaf all the
-    way) and every leaf is bucketable —
-    within-worker-sharded leaves would need a per-leaf side channel, so
-    such layouts fall back to the tree-in/tree-out kernel path.  The
-    resident ``init`` returns a state whose params/momentum (and
-    anchor/global_u/ef_memory when present) are BucketStates; use
+    way).  The resident ``init`` returns a state whose params/momentum
+    (and anchor/global_u/ef_memory when present) are BucketStates; use
     ``unpack_state`` at eval/checkpoint/logging boundaries.
 
-    ``sharded`` marks the state as worker-sharded under a mesh (set by
-    build_train); the resident sync then uses the GSPMD-friendly jnp
-    compressor form instead of Pallas launches, whose opaque calls on
-    sharded operands would force a dense gather of the payload.
+    ``sharded`` marks the state as mesh-sharded (set by build_train);
+    the resident path then uses the GSPMD-friendly jnp forms for BOTH
+    the optimizer update and the compressor instead of Pallas launches,
+    whose opaque calls on sharded operands would force a dense gather.
     Default: inferred from whether a mesh-pinned wire pack is wired in.
 
     ``telemetry`` carries a ``telemetry.StatsAccumulator`` in
@@ -450,11 +490,12 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
     global_batch = run.shape.global_batch
 
     if resident is None:
-        resident = resident_eligible(use_kernel, bucket_sync, bucketable)
+        resident = resident_eligible(use_kernel, bucket_sync)
     if resident:
         return _make_resident_local_sgd(
             run, loss_fn, num_workers=W, wd_mask=wd_mask,
             packed_mean_flat_fn=packed_mean_flat_fn,
+            shard_classes=shard_classes,
             sharded=(packed_mean_flat_fn is not None if sharded is None
                      else sharded),
             telemetry=telemetry, speculate_compression=speculate_compression)
@@ -693,6 +734,7 @@ def _bucket_noise(layout, gbs, rng, *, step, eta: float, gamma: float):
 def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                              num_workers: int, wd_mask=None,
                              packed_mean_flat_fn: Callable | None = None,
+                             shard_classes=None,
                              sharded: bool = False, telemetry: bool = False,
                              speculate_compression: bool = False):
     """(init, local_step, sync) with state held resident in bucket form.
@@ -719,14 +761,16 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
     opt = run.optim
     W = num_workers
     global_batch = run.shape.global_batch
-    # compressor dispatch at sync: Pallas launches when the state is
-    # replicated (meshless CPU/single-host), the GSPMD-friendly jnp form
-    # when the buckets are worker-sharded under a mesh — a pallas_call
-    # on a sharded operand would force a dense gather of the payload
+    # kernel dispatch: Pallas launches when the state is replicated
+    # (meshless CPU/single-host), the GSPMD-friendly jnp forms for both
+    # the optimizer and the compressor when the buckets are sharded
+    # under a mesh (worker dim, and the row dim of sharded sub-buckets)
+    # — a pallas_call on a sharded operand would force a dense gather
     comp_kernel = not sharded
 
     def init(rng, params_single) -> LocalSGDState:
-        layout = flatbuf.build_layout(params_single, wd_mask=wd_mask)
+        layout = flatbuf.build_layout(params_single, wd_mask=wd_mask,
+                                      shard_classes=shard_classes)
         pb = flatbuf.flatten(layout, params_single)
         stacked = lambda bufs: tuple(
             jnp.broadcast_to(b[None], (W,) + b.shape) for b in bufs)
@@ -771,13 +815,14 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                     layout, list(pbs), gbs, list(ubs), lr=lr,
                     trust=opt.lars_trust, momentum_coef=ls.local_momentum,
                     weight_decay=opt.weight_decay, nesterov=ls.nesterov,
-                    want_stats=telemetry)
+                    want_stats=telemetry, kernel=comp_kernel)
             else:
                 out = apply_sgd_buckets(
                     layout, list(pbs), gbs, list(ubs), lr=lr,
                     momentum_coef=ls.local_momentum,
                     weight_decay=opt.weight_decay, nesterov=ls.nesterov,
-                    grad_clip=opt.grad_clip, want_stats=telemetry)
+                    grad_clip=opt.grad_clip, want_stats=telemetry,
+                    kernel=comp_kernel)
             if telemetry:
                 p2, u2, (gsq, usq) = out
                 return tuple(p2), tuple(u2), loss, metrics, gsq, usq
@@ -883,8 +928,7 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                 err[b] = _sumsq(d.astype(jnp.float32) - cs)
                 ref[b] = _sumsq(d)
             if modes[b] != "none" and ls.wire_pack:
-                db = flat_fn(x, flatbuf.row_segments(layout, b),
-                             flatbuf.segment_sizes(layout, b))
+                db = flat_fn(x, layout, b)
                 # the 1-bit unpack emits sign(+1)*scale in padding
                 # slots; re-mask so padding-is-zero survives the round
                 db = flatbuf.mask_padding(layout, b, db)

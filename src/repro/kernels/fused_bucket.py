@@ -31,10 +31,20 @@ Reduction kernels mask the final partial grid block explicitly: the
 grid over ``cdiv(rows, BLOCK_ROWS)`` reads out-of-bounds rows in its
 last block and those values are undefined (NaN in interpret mode) — an
 unmasked reduction silently folds them in once rows > BLOCK_ROWS.
+
+Sharded sub-buckets (core/flatbuf sharding classes): a bucket whose row
+dim is partitioned S-ways over mesh axes passes ``shards=S`` and the
+launch takes PER-SHARD row counts — the block size is clamped (and
+aligned, via gcd with the shard-local row count) so no grid block ever
+straddles a shard boundary: each block's HBM traffic stays on one
+device's memory, which is what lets the same launch geometry serve the
+shard_map-per-device form on a real mesh.  ``shards=1`` (default) is
+bit-identical to the pre-sub-bucket grid.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +52,20 @@ from jax.experimental import pallas as pl
 
 LANE = 128
 BLOCK_ROWS = 256          # (256, 128) f32 tile = 128 KiB per operand
+
+
+def _block_rows(rows: int, shards: int) -> int:
+    """Block size for a bucket launch: BLOCK_ROWS-clamped, and for
+    SHARDED buckets (shards > 1) additionally aligned to evenly tile
+    ONE shard's rows (shard-local rows are a SUBLANE multiple, so the
+    gcd is >= 8) so no block straddles a shard boundary.  Replicated
+    buckets keep the plain clamp — their final partial block is handled
+    by the in-kernel row masking, exactly as before sub-buckets."""
+    local = rows // max(shards, 1)
+    br = min(BLOCK_ROWS, local)
+    if shards > 1 and local % br:
+        br = math.gcd(local, br)
+    return br
 
 
 def _row_mask(shape, block_idx: int, br: int, rows: int):
@@ -78,10 +102,12 @@ def _sgd_kernel(lr_ref, wd_ref, p_ref, g_ref, u_ref, po_ref, uo_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
-                                             "nesterov", "stats", "interpret"))
+                                             "nesterov", "stats", "shards",
+                                             "interpret"))
 def fused_sgd_bucket_2d(p, g, u, lr, wd_row, *, momentum: float,
                         weight_decay: float, nesterov: bool,
-                        stats: bool = False, interpret: bool = True):
+                        stats: bool = False, shards: int = 1,
+                        interpret: bool = True):
     """One fused SGD launch over a whole bucket.
 
     p, g, u: (rows, 128) same dtype; lr: (1, 1) f32 (SMEM, may be
@@ -90,7 +116,7 @@ def fused_sgd_bucket_2d(p, g, u, lr, wd_row, *, momentum: float,
     ``stats=True`` — the two scalars ride the same launch (telemetry).
     """
     rows = p.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     n = pl.cdiv(rows, br)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
@@ -123,11 +149,11 @@ def _sq_sum_kernel(x_ref, o_ref, *, rows, br):
     o_ref[0, 0] = jnp.sum(x * x)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sq_sum_2d(x, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("shards", "interpret"))
+def sq_sum_2d(x, *, shards: int = 1, interpret: bool = True):
     """sum(x^2) over a bucket (f32 accumulate) — one HBM read."""
     rows = x.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     n = pl.cdiv(rows, br)
     out = pl.pallas_call(
         functools.partial(_sq_sum_kernel, rows=rows, br=br),
@@ -147,11 +173,11 @@ def _row_abs_sum_kernel(x_ref, o_ref):
     o_ref[...] = jnp.sum(jnp.abs(x), axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def row_abs_sum_2d(x, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("shards", "interpret"))
+def row_abs_sum_2d(x, *, shards: int = 1, interpret: bool = True):
     """(rows, 1) f32 per-row |x| sums — one HBM read of the bucket."""
     rows = x.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     return pl.pallas_call(
         _row_abs_sum_kernel,
         grid=(pl.cdiv(rows, br),),
@@ -174,8 +200,8 @@ def _lars_row_norms_kernel(wd_ref, p_ref, g_ref, pn_ref, gn_ref, *,
     gn_ref[...] = jnp.sum(g * g, axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("weight_decay", "interpret"))
-def lars_row_norms_2d(p, g, wd_row, *, weight_decay: float,
+@functools.partial(jax.jit, static_argnames=("weight_decay", "shards", "interpret"))
+def lars_row_norms_2d(p, g, wd_row, *, weight_decay: float, shards: int = 1,
                       interpret: bool = True):
     """Per-row sum-of-squares of p and of g + wd*mask*p, one HBM pass.
 
@@ -185,7 +211,7 @@ def lars_row_norms_2d(p, g, wd_row, *, weight_decay: float,
     holds; see flatbuf.valid_mask).
     """
     rows = p.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
     return pl.pallas_call(
@@ -227,10 +253,12 @@ def _lars_kernel(lr_ref, wd_ref, r_ref, p_ref, g_ref, u_ref, po_ref, uo_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("momentum", "weight_decay",
-                                             "nesterov", "stats", "interpret"))
+                                             "nesterov", "stats", "shards",
+                                             "interpret"))
 def fused_lars_bucket_2d(p, g, u, lr, wd_row, ratio_row, *, momentum: float,
                          weight_decay: float, nesterov: bool,
-                         stats: bool = False, interpret: bool = True):
+                         stats: bool = False, shards: int = 1,
+                         interpret: bool = True):
     """One fused LARS launch over a whole bucket.
 
     p, g, u: (rows, 128) same dtype; lr: (1, 1) f32; wd_row: (rows, 1)
@@ -240,7 +268,7 @@ def fused_lars_bucket_2d(p, g, u, lr, wd_row, ratio_row, *, momentum: float,
     ``stats=True`` — the two scalars ride the same launch (telemetry).
     """
     rows = p.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     n = pl.cdiv(rows, br)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
@@ -272,11 +300,11 @@ def _scale_sign_rows_kernel(x_ref, s_ref, o_ref):
     o_ref[...] = (jnp.sign(x) * s_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def scale_sign_rows_2d(x, scale_row, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("shards", "interpret"))
+def scale_sign_rows_2d(x, scale_row, *, shards: int = 1, interpret: bool = True):
     """y = sign(x) * scale_row (per-row scales; second compressor pass)."""
     rows = x.shape[0]
-    br = min(BLOCK_ROWS, rows)
+    br = _block_rows(rows, shards)
     spec = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     mspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
     return pl.pallas_call(

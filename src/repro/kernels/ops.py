@@ -73,7 +73,8 @@ def sign_compress(x, *, interpret: bool | None = None):
 
 def bucket_fused_sgd(p2, g2, u2, wd_row, *, lr, momentum: float,
                      weight_decay: float, nesterov: bool = True,
-                     stats: bool = False, interpret: bool | None = None):
+                     stats: bool = False, shards: int = 1,
+                     interpret: bool | None = None):
     """One fused SGD launch over a whole (rows, 128) bucket.
 
     ``wd_row`` is the (rows, 1) f32 per-row weight-decay mask from
@@ -87,18 +88,18 @@ def bucket_fused_sgd(p2, g2, u2, wd_row, *, lr, momentum: float,
                                    momentum=momentum,
                                    weight_decay=weight_decay,
                                    nesterov=nesterov, stats=stats,
-                                   interpret=interpret)
+                                   shards=shards, interpret=interpret)
 
 
-def bucket_sq_sum(x2, *, interpret: bool | None = None):
+def bucket_sq_sum(x2, *, shards: int = 1, interpret: bool | None = None):
     """sum(x^2) over a bucket (f32) — one fused HBM pass."""
     if interpret is None:
         interpret = not _on_tpu()
-    return _fb.sq_sum_2d(x2, interpret=interpret)
+    return _fb.sq_sum_2d(x2, shards=shards, interpret=interpret)
 
 
 def bucket_lars_norms(p2, g2, wd_row, *, weight_decay: float,
-                      interpret: bool | None = None):
+                      shards: int = 1, interpret: bool | None = None):
     """Per-row sum-of-squares of p and of g + wd*mask*p — one HBM pass.
 
     Returns ((rows, 1) f32, (rows, 1) f32); the per-layer LARS norms
@@ -107,13 +108,14 @@ def bucket_lars_norms(p2, g2, wd_row, *, weight_decay: float,
     if interpret is None:
         interpret = not _on_tpu()
     return _fb.lars_row_norms_2d(p2, g2, jnp.asarray(wd_row),
-                                 weight_decay=weight_decay,
+                                 weight_decay=weight_decay, shards=shards,
                                  interpret=interpret)
 
 
 def bucket_fused_lars(p2, g2, u2, wd_row, ratio_row, *, lr, momentum: float,
                       weight_decay: float, nesterov: bool = True,
-                      stats: bool = False, interpret: bool | None = None):
+                      stats: bool = False, shards: int = 1,
+                      interpret: bool | None = None):
     """One fused LARS launch over a whole (rows, 128) bucket.
 
     ``ratio_row`` is the (rows, 1) f32 per-row trust ratio (1.0 on
@@ -127,10 +129,11 @@ def bucket_fused_lars(p2, g2, u2, wd_row, ratio_row, *, lr, momentum: float,
                                     ratio_row, momentum=momentum,
                                     weight_decay=weight_decay,
                                     nesterov=nesterov, stats=stats,
-                                    interpret=interpret)
+                                    shards=shards, interpret=interpret)
 
 
-def bucket_sign_compress(x2, seg_ids, seg_sizes, *, interpret: bool | None = None):
+def bucket_sign_compress(x2, seg_ids, seg_sizes, *, shards: int = 1,
+                         interpret: bool | None = None):
     """Segment-aware sign compressor over a bucket.
 
     ``seg_ids`` (rows,) int32 maps each row to its leaf segment and
@@ -144,12 +147,12 @@ def bucket_sign_compress(x2, seg_ids, seg_sizes, *, interpret: bool | None = Non
     if interpret is None:
         interpret = not _on_tpu()
     seg_ids = jnp.asarray(seg_ids)
-    row_sums = _fb.row_abs_sum_2d(x2, interpret=interpret)
+    row_sums = _fb.row_abs_sum_2d(x2, shards=shards, interpret=interpret)
     totals = jax.ops.segment_sum(row_sums[:, 0], seg_ids,
                                  num_segments=int(seg_sizes.shape[0]))
     scales = totals / jnp.asarray(seg_sizes)
     y = _fb.scale_sign_rows_2d(x2, scales[seg_ids][:, None],
-                               interpret=interpret)
+                               shards=shards, interpret=interpret)
     return y, scales
 
 

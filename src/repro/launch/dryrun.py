@@ -103,7 +103,7 @@ def dryrun_train(arch: str, shape: InputShape, mesh, layout_kind="tp") -> dict:
         rep_local["compile_s"] = round(time.time() - t0, 1)
 
         t0 = time.time()
-        lowered_s = bundle.sync.lower(state)
+        lowered_s = bundle.sync_lower(state)
         compiled_s = lowered_s.compile()
         rep_sync = _report("sync", lowered_s, compiled_s, pod)
         rep_sync["compile_s"] = round(time.time() - t0, 1)

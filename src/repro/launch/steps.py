@@ -44,7 +44,8 @@ class TrainBundle:
     state_shardings: Any = None
     batch_shardings: Any = None
     telemetry: bool = False     # state carries a StatsAccumulator
-    n_comp: int = 1             # compression-error slots (dtype buckets)
+    n_comp: int = 1             # compression-error slots (sub-buckets)
+    sync_lower: Any = None      # mesh only: lower sync for HLO ledger costs
 
 
 def _stats_partition_specs(layout: MeshLayout):
@@ -62,30 +63,39 @@ def _stats_partition_specs(layout: MeshLayout):
 
 
 def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
-                          resident: bool = False, telemetry: bool = False):
+                          resident: bool = False, telemetry: bool = False,
+                          bucket_layout=None):
     """PartitionSpecs for a LocalSGDState built from param specs.
 
     ``resident=True`` mirrors the resident bucket form (see
-    core/local_sgd): every bucket is replicated within a worker by
-    construction (resident mode requires all leaves bucketable), so the
-    stacked buffers shard only their leading worker dim over the worker
-    axes and single-copy buffers (anchor/global_u) are fully replicated.
-    ``telemetry`` mirrors ``make_local_sgd(telemetry=...)``.
+    core/local_sgd): stacked buffers shard their leading worker dim over
+    the worker axes, and each sub-bucket's row dim is sharded over its
+    sharding-class mesh axes (``flatbuf.bucket_pspec``) — so FSDP/TP
+    sub-buckets stay sharded on the bus and single-copy buffers
+    (anchor/global_u) are replicated across workers but keep their row
+    sharding.  ``telemetry`` mirrors ``make_local_sgd(telemetry=...)``.
     """
     from repro.core.local_sgd import needs_anchor
     ls = run.local_sgd
     stats = _stats_partition_specs(layout) if telemetry else None
     if resident:
         from repro.core import flatbuf
-        blay = flatbuf.build_layout(
-            mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
-            wd_mask=mbase.norm_param_mask(specs))
+        # ``bucket_layout`` lets build_train pass the ONE abstract
+        # bucket layout it already built, so partition specs, n_comp
+        # and the resident state can never disagree on the bucketing
+        blay = bucket_layout if bucket_layout is not None else \
+            flatbuf.build_layout(
+                mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
+                wd_mask=mbase.norm_param_mask(specs),
+                shard_classes=flatbuf.shard_classes(specs, layout))
         wa = layout.worker_axes
         w = wa if len(wa) != 1 else wa[0]
         nb = blay.num_buckets
-        st = lambda: flatbuf.BucketState(blay, tuple(P(w) for _ in range(nb)),
-                                         leading=1)
-        sg = lambda: flatbuf.BucketState(blay, tuple(P() for _ in range(nb)))
+        st = lambda: flatbuf.BucketState(
+            blay, tuple(flatbuf.bucket_pspec(blay, b, worker=w)
+                        for b in range(nb)), leading=1)
+        sg = lambda: flatbuf.BucketState(
+            blay, tuple(flatbuf.bucket_pspec(blay, b) for b in range(nb)))
         return LocalSGDState(
             params=st(), momentum=st(),
             anchor=sg() if needs_anchor(ls) else None,
@@ -126,31 +136,38 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         return lm.loss_fn(cfg, params, batch, lay=lay_for_model, scan=True,
                           remat=run.remat)
 
-    # Flat-bus sync wiring: within-worker-sharded leaves stay per-leaf
-    # (bucketable=False); the rest ride one collective per dtype bucket.
+    # Flat-bus sync wiring: leaves are classified per (dtype, sharding
+    # class) sub-bucket (flatbuf.shard_classes — the EFFECTIVE spec
+    # rules, so classification always agrees with placement).  The
+    # resident path buckets every leaf, FSDP/TP included; only the
+    # non-resident tree path still routes sharded leaves per-leaf
+    # (its on-the-fly layouts are replicated).
     from repro.core import flatbuf
     from repro.core.local_sgd import (make_packed_mean, make_packed_mean_flat,
                                       pack_axes_tree)
     bucketable = None
+    shard_cls = None
     pm = None
     pm_flat = None
     if mesh is not None and layout is not None:
         lay_m = layout
-        bucketable = flatbuf.bucketable_tree(specs, lay_m)
+        shard_cls = flatbuf.shard_classes(specs, lay_m)
+        bucketable = flatbuf.replicated_tree(shard_cls)
         if run.local_sgd.wire_pack and run.local_sgd.sync_compression != "none":
             from repro.utils import partial_auto_shard_map_supported
             if partial_auto_shard_map_supported():
-                # per-leaf path for within-worker-sharded leaves; on jax
-                # 0.4.x it stays None -> plain GSPMD-hint pack/unpack
+                # per-leaf path for within-worker-sharded leaves on the
+                # NON-resident tree path; on jax 0.4.x it stays None ->
+                # plain GSPMD-hint pack/unpack
                 pm = (make_packed_mean(mesh, layout.worker_axes),
                       pack_axes_tree(specs, lay_m))
             pm_flat = make_packed_mean_flat(mesh, layout.worker_axes)
 
-    # Resident bucket state rides the kernel flag; within-worker-sharded
-    # leaves would need a per-leaf side channel, so those layouts fall
-    # back to the tree-in/tree-out kernel path (still one launch/bucket).
+    # Resident bucket state rides the kernel flag for EVERY layout:
+    # within-worker-sharded leaves live in their own sharded sub-bucket
+    # instead of falling back to the tree-in/tree-out kernel path.
     from repro.core.local_sgd import resident_eligible
-    resident = resident_eligible(use_kernel, True, bucketable)
+    resident = resident_eligible(use_kernel, True)
     # Telemetry + controller (ISSUE 3): collect round stats whenever the
     # configured controller needs them; speculative compression-error
     # measurement only for the auto_compress policy (it decides when to
@@ -162,6 +179,7 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                                             packed_mean_fn=pm,
                                             packed_mean_flat_fn=pm_flat,
                                             bucketable=bucketable,
+                                            shard_classes=shard_cls,
                                             resident=resident,
                                             sharded=mesh is not None,
                                             telemetry=telemetry,
@@ -169,17 +187,19 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                                                 cc.kind == "auto_compress"))
 
     n_comp = 1
+    blay = None
     if resident:
-        n_comp = flatbuf.build_layout(
+        blay = flatbuf.build_layout(
             mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
-            wd_mask=wd_mask).num_buckets
+            wd_mask=wd_mask, shard_classes=shard_cls)
+        n_comp = blay.num_buckets
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
                          specs=specs, init=init, local_step=local_step, sync=sync,
                          telemetry=telemetry, n_comp=n_comp)
 
     if mesh is not None and jit:
         sspec = state_partition_specs(specs, layout, run, resident=resident,
-                                      telemetry=telemetry)
+                                      telemetry=telemetry, bucket_layout=blay)
         bspec = inp.train_batch_pspecs(cfg, run.shape, layout)
         ssh = _named(mesh, sspec)
         bsh = _named(mesh, bspec)
@@ -187,8 +207,19 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         bundle.batch_shardings = bsh
         bundle.local_step = jax.jit(local_step, in_shardings=(ssh, bsh),
                                     out_shardings=(ssh, None))
-        bundle.sync = jax.jit(sync, static_argnames=("group", "compression"),
-                              in_shardings=(ssh,), out_shardings=ssh)
+        # pjit rejects kwargs once in_shardings is given (jax 0.4.x), so
+        # jit a positional adapter for the static (group, compression)
+        # args and keep the kwarg interface fit expects; the raw jitted
+        # object rides along so fit can .lower() the sync for the
+        # HLO-measured ledger costs.
+        jsync = jax.jit(
+            lambda s, group, compression: sync(s, group=group,
+                                               compression=compression),
+            static_argnums=(1, 2), in_shardings=(ssh,), out_shardings=ssh)
+        bundle.sync = (lambda s, *, group=None, compression=None:
+                       jsync(s, group, compression))
+        bundle.sync_lower = (lambda s, *, group=None, compression=None:
+                             jsync.lower(s, group, compression))
     return bundle
 
 

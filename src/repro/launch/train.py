@@ -78,13 +78,46 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     ledger = tele.CommsLedger()
     cost_cache: dict = {}
     slayout = _sync_layout(state)
+    # abstract avals of the state, for lowering sync in the ledger cost
+    # path — holding the concrete init state alive here would pin a
+    # second full optimizer state in device memory for the whole run
+    state_avals = jax.eval_shape(lambda s: s, state)
 
     def sync_cost(group, modes):
+        """Per-round ledger cost: the analytic ring model everywhere,
+        upgraded to the MEASURED (HLO-parsed) cost of the compiled sync
+        when a mesh is present — and cross-checked against the analytic
+        model, since a large deviation means the lowering moved bytes
+        the ring model didn't predict (e.g. a stray dense gather)."""
         key = (group, modes)
         if key not in cost_cache:
-            cost_cache[key] = tele.analytic_sync_cost(
+            cost = analytic = tele.analytic_sync_cost(
                 slayout, group=group or bundle.num_workers, modes=modes,
                 wire_pack=ls.wire_pack)
+            if mesh is not None and bundle.sync_lower is not None:
+                try:
+                    # one extra sync compile per (group, modes) key
+                    # (cached); executing this AOT object instead of the
+                    # jitted sync would drop jit's auto-resharding of
+                    # host-resident init arrays, so the dispatch path
+                    # keeps its own compile
+                    with mesh:
+                        txt = (bundle.sync_lower(state_avals, group=group,
+                                                 compression=modes)
+                               .compile().as_text())
+                    cost = tele.hlo_sync_cost(txt)
+                except Exception as e:       # lowering quirks: keep analytic
+                    log(f"ledger: hlo sync cost unavailable ({e!r}); "
+                        "using analytic ring model")
+                else:
+                    ratio = (cost.bytes_on_wire
+                             / max(analytic.bytes_on_wire, 1.0))
+                    if not 1 / 3 <= ratio <= 3 and analytic.bytes_on_wire:
+                        log(f"ledger: measured sync bytes "
+                            f"{cost.bytes_on_wire:.3g} deviate from the "
+                            f"analytic ring model "
+                            f"{analytic.bytes_on_wire:.3g} (x{ratio:.2f})")
+            cost_cache[key] = cost
         return cost_cache[key]
 
     tlog = open(telemetry_path, "w") if telemetry_path else None

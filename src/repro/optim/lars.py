@@ -37,9 +37,31 @@ def _lars_leaf(p, g, u, skip, *, lr, trust, momentum, wd, nesterov):
     return p_new.astype(p.dtype), u_new.astype(u.dtype)
 
 
+def _jnp_lars_update(p, g, u, wd_row, ratio_row, *, lr, momentum,
+                     weight_decay, nesterov, want_stats):
+    """Pure-jnp LARS bucket update, same op order as the fused kernel
+    (the GSPMD-friendly form for mesh-sharded buckets; cf.
+    optim.sgd._jnp_bucket_sgd)."""
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    gsq = jnp.sum(gf * gf) if want_stats else None
+    if weight_decay:
+        gf = gf + (weight_decay * wd_row) * pf
+    gf = gf * ratio_row
+    u_new = momentum * uf + gf
+    step = momentum * u_new + gf if nesterov else u_new
+    d = lr * step
+    out = ((pf - d).astype(p.dtype), u_new.astype(u.dtype))
+    if want_stats:
+        return out + (gsq, jnp.sum(d * d))
+    return out
+
+
 def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
                        momentum_coef: float, weight_decay: float,
-                       nesterov: bool, want_stats: bool = False):
+                       nesterov: bool, want_stats: bool = False,
+                       kernel: bool = True):
     """Bucket-in/bucket-out fused LARS: the resident-state hot path.
 
     Per bucket: one fused row-norms pass yields per-row sums of p^2 and
@@ -48,6 +70,16 @@ def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
     update launch applies them via a per-row ratio operand.  Zero
     pack/unpack — relies on the padding-is-zero invariant
     (flatbuf.valid_mask) so padded slots contribute 0 to both norms.
+
+    Sharded sub-buckets compose for free: the row->segment map is the
+    shard-local map tiled over shard regions (flatbuf.row_segments), so
+    the segmented reduction accumulates across shards and the trust
+    ratios come from GLOBAL per-layer norms — under a mesh this lowers
+    to a shard-local reduce plus one (num_segments,)-sized all-reduce,
+    mirroring the per-leaf reference semantics exactly.
+    ``kernel=False`` computes the row norms and the update as jnp ops
+    (GSPMD-friendly; see optim.sgd.apply_sgd_buckets); the kernel form
+    passes per-bucket shard counts to the launches.
 
     Returns (pb', ub') as lists of buckets; ``want_stats=True`` adds a
     (grad_sq, update_sq) scalar pair fused into the SAME update
@@ -63,18 +95,36 @@ def apply_lars_buckets(layout, pb, gb, ub, *, lr, trust: float,
         wd_row = flatbuf.wd_rows(layout, b)
         seg = jnp.asarray(flatbuf.row_segments(layout, b))
         skip = jnp.asarray(flatbuf.segment_skip_wd(layout, b))
-        p_sq, g_sq = kops.bucket_lars_norms(pb[b], gb[b], wd_row,
-                                            weight_decay=weight_decay)
+        S = layout.bucket_shard_count(b)
+        if kernel:
+            p_sq, g_sq = kops.bucket_lars_norms(pb[b], gb[b], wd_row,
+                                                weight_decay=weight_decay,
+                                                shards=S)
+        else:
+            pf = pb[b].astype(jnp.float32)
+            gf = gb[b].astype(jnp.float32)
+            if weight_decay:
+                gf = gf + (weight_decay * jnp.asarray(wd_row)) * pf
+            p_sq = jnp.sum(pf * pf, axis=1, keepdims=True)
+            g_sq = jnp.sum(gf * gf, axis=1, keepdims=True)
         n_seg = int(skip.shape[0])
         wn = jnp.sqrt(jax.ops.segment_sum(p_sq[:, 0], seg, num_segments=n_seg))
         gn = jnp.sqrt(jax.ops.segment_sum(g_sq[:, 0], seg, num_segments=n_seg))
         ratio = jnp.where((wn > 0) & (gn > 0), trust * wn / (gn + 1e-9), 1.0)
         ratio = jnp.where(skip, 1.0, ratio)     # norm/bias: plain LR
-        out = kops.bucket_fused_lars(pb[b], gb[b], ub[b], wd_row,
-                                     ratio[seg][:, None], lr=lr,
-                                     momentum=momentum_coef,
-                                     weight_decay=weight_decay,
-                                     nesterov=nesterov, stats=want_stats)
+        if kernel:
+            out = kops.bucket_fused_lars(pb[b], gb[b], ub[b], wd_row,
+                                         ratio[seg][:, None], lr=lr,
+                                         momentum=momentum_coef,
+                                         weight_decay=weight_decay,
+                                         nesterov=nesterov, stats=want_stats,
+                                         shards=S)
+        else:
+            out = _jnp_lars_update(pb[b], gb[b], ub[b], jnp.asarray(wd_row),
+                                   ratio[seg][:, None], lr=lr,
+                                   momentum=momentum_coef,
+                                   weight_decay=weight_decay,
+                                   nesterov=nesterov, want_stats=want_stats)
         if want_stats:
             p2, u2, bg, bu = out
             gsq = gsq + bg

@@ -49,9 +49,34 @@ def _leaf_update(p, g, u, skip_wd, *, lr, momentum, wd, nesterov):
     return p_new.astype(p.dtype), u_new.astype(u.dtype)
 
 
+def _jnp_bucket_sgd(p, g, u, wd_row, *, lr, momentum, weight_decay,
+                    nesterov, want_stats):
+    """Pure-jnp bucket update, same op order as the fused kernel.
+
+    The GSPMD-friendly form for buckets sharded under a mesh: a
+    ``pallas_call`` is opaque to the partitioner and would force a
+    dense gather of worker-/row-sharded operands, while these
+    elementwise ops partition trivially (the stats sums lower to a
+    shard-local reduce + scalar all-reduce)."""
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    gsq = jnp.sum(gf * gf) if want_stats else None
+    if weight_decay:
+        gf = gf + (weight_decay * wd_row) * pf
+    u_new = momentum * uf + gf
+    step = momentum * u_new + gf if nesterov else u_new
+    d = lr * step
+    out = ((pf - d).astype(p.dtype), u_new.astype(u.dtype))
+    if want_stats:
+        return out + (gsq, jnp.sum(d * d))
+    return out
+
+
 def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
                       weight_decay: float, nesterov: bool,
-                      grad_clip: float = 0.0, want_stats: bool = False):
+                      grad_clip: float = 0.0, want_stats: bool = False,
+                      kernel: bool = True):
     """Bucket-in/bucket-out fused SGD: the resident-state hot path.
 
     ``pb``/``gb``/``ub`` are per-bucket (rows, 128) buffers laid out by
@@ -59,6 +84,13 @@ def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
     fused sum-of-squares per bucket).  Performs ZERO pack/unpack — with
     state held resident across local steps (core/local_sgd) the flatten
     cost is paid once per sync round instead of once per step.
+
+    ``kernel=False`` dispatches the same math as jnp elementwise ops —
+    the GSPMD-friendly form for buckets sharded under a mesh (worker
+    dim and, for sharded sub-buckets, the row dim), where an opaque
+    Pallas call would force a dense gather of the operands.  The kernel
+    form passes each bucket's shard count so launch grids take
+    per-shard row counts (kernels/fused_bucket).
 
     Returns (pb', ub') as lists of buckets; with ``want_stats=True``
     returns (pb', ub', (grad_sq, update_sq)) where the two f32 scalars
@@ -73,17 +105,29 @@ def apply_sgd_buckets(layout, pb, gb, ub, *, lr, momentum_coef: float,
         # grad buckets have exact-zero padding (AD through the bucket
         # view transposes slices into zero-pads), so the bucket norm
         # equals the per-leaf global norm
-        gn = jnp.sqrt(sum(kops.bucket_sq_sum(g) for g in gb))
+        if kernel:
+            gn2 = sum(kops.bucket_sq_sum(g, shards=layout.bucket_shard_count(b))
+                      for b, g in enumerate(gb))
+        else:
+            gn2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gb)
+        gn = jnp.sqrt(gn2)
         scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
         gb = [(g * scale).astype(g.dtype) for g in gb]
     po, uo = [], []
     gsq = usq = jnp.float32(0.0)
     for b in range(layout.num_buckets):
-        out = kops.bucket_fused_sgd(pb[b], gb[b], ub[b],
-                                    flatbuf.wd_rows(layout, b), lr=lr,
-                                    momentum=momentum_coef,
-                                    weight_decay=weight_decay,
-                                    nesterov=nesterov, stats=want_stats)
+        wd_row = flatbuf.wd_rows(layout, b)
+        if kernel:
+            out = kops.bucket_fused_sgd(pb[b], gb[b], ub[b], wd_row, lr=lr,
+                                        momentum=momentum_coef,
+                                        weight_decay=weight_decay,
+                                        nesterov=nesterov, stats=want_stats,
+                                        shards=layout.bucket_shard_count(b))
+        else:
+            out = _jnp_bucket_sgd(pb[b], gb[b], ub[b], jnp.asarray(wd_row),
+                                  lr=lr, momentum=momentum_coef,
+                                  weight_decay=weight_decay,
+                                  nesterov=nesterov, want_stats=want_stats)
         if want_stats:
             p2, u2, bg, bu = out
             gsq = gsq + bg

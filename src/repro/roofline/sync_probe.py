@@ -51,10 +51,11 @@ def measure_sync(arch: str, *, compression: str, wire_pack: bool,
           if wire_pack and partial_auto_shard_map_supported() else None)
     pm_flat = (make_packed_mean_flat(mesh, lay.worker_axes)
                if wire_pack and bucket_sync else None)
+    cls = flatbuf.shard_classes(specs, lay_m)
     init, local_step, sync = make_local_sgd(
         run, loss, num_workers=W, packed_mean_fn=pm,
         packed_mean_flat_fn=pm_flat, bucket_sync=bucket_sync,
-        bucketable=flatbuf.bucketable_tree(specs, lay_m))
+        bucketable=flatbuf.replicated_tree(cls), shard_classes=cls)
     ssh = _named(mesh, state_partition_specs(specs, lay_m, run))
     jsync = jax.jit(sync, static_argnames=("group",),
                     in_shardings=(ssh,), out_shardings=ssh)

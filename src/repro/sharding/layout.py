@@ -59,6 +59,36 @@ class MeshLayout:
         names = (v,) if isinstance(v, str) else v
         return int(np.prod([self.sizes.get(a, 1) for a in names]))
 
+    def _effective(self, axes, dims, used: set) -> tuple[AxisVal, ...]:
+        """Apply the rules to logical ``axes`` exactly as a PartitionSpec
+        would be built: shape-aware divisibility drop plus first-wins
+        mesh-axis dedup, mutating ``used`` with the axes consumed."""
+        out: list[AxisVal] = []
+        for i, a in enumerate(axes):
+            r = None if a is None else self.rule(a)
+            if r is not None and dims is not None and self.sizes:
+                if dims[i] % self.axis_size(r) != 0:
+                    r = None
+            # a mesh axis may appear at most once per spec: first wins
+            if r is not None:
+                names = (r,) if isinstance(r, str) else r
+                if any(nm in used for nm in names):
+                    r = None
+                else:
+                    used.update(names)
+            out.append(r)
+        return tuple(out)
+
+    def dim_shards(self, axes, dims=None) -> tuple[AxisVal, ...]:
+        """Per-dim EFFECTIVE within-worker sharding of a leaf.
+
+        This is the single source of truth shared by :meth:`spec` and
+        ``flatbuf.shard_classes``: the rule actually applied to each dim
+        (after the shape-aware divisibility drop and first-wins dedup),
+        so sub-bucket classification can never disagree with the
+        PartitionSpecs the state is placed with."""
+        return self._effective(axes, dims, set())
+
     def spec(self, *axes: str | None, stacked: bool = False,
              dims: tuple[int, ...] | None = None) -> P:
         """PartitionSpec for logical axes. ``stacked`` prepends worker dim.
@@ -73,19 +103,7 @@ class MeshLayout:
         for v in parts:
             for nm in ((v,) if isinstance(v, str) else (v or ())):
                 used.add(nm)
-        for i, a in enumerate(axes):
-            r = None if a is None else self.rule(a)
-            if r is not None and dims is not None and self.sizes:
-                if dims[i] % self.axis_size(r) != 0:
-                    r = None
-            # a mesh axis may appear at most once per spec: first wins
-            if r is not None:
-                names = (r,) if isinstance(r, str) else r
-                if any(nm in used for nm in names):
-                    r = None
-                else:
-                    used.update(names)
-            parts.append(r)
+        parts.extend(self._effective(axes, dims, used))
         return P(*parts)
 
     def with_mesh(self, mesh: Mesh) -> "MeshLayout":

@@ -45,6 +45,14 @@ def analytic_sync_cost(layout, *, group: int, modes=None,
     lane dim packed 8x) + one f32 scale all-gather (one scale per leaf
     segment); compressed without wire_pack still moves the dense f32
     sign*scale payload through one all-reduce.
+
+    SHARDED sub-buckets (flatbuf sharding classes): the collectives run
+    over the worker axes only with per-DEVICE payloads of the bucket's
+    shard-local rows (rows / S) — matching the shard_map lowering of
+    ``make_packed_mean_flat`` — so the model stays comparable with the
+    HLO-parsed per-device costs ``fit`` cross-checks it against.  The
+    (num_segments,)-sized cross-shard scale psum is negligible and not
+    counted.
     """
     from repro.core import flatbuf
 
@@ -56,7 +64,7 @@ def analytic_sync_cost(layout, *, group: int, modes=None,
     total = 0.0
     count = 0
     for b in range(layout.num_buckets):
-        rows = layout.bucket_rows[b]
+        rows = layout.bucket_local_rows(b)     # per-device (shard-local) rows
         if modes[b] != "none" and wire_pack:
             payload = n * rows * (flatbuf.LANE // 8)           # uint8 gather
             scales = n * len(layout.bucket_slots(b)) * 4       # f32 gather
@@ -110,4 +118,6 @@ class CommsLedger:
     def summary(self) -> dict:
         return {"sync_rounds": self.num_rounds(),
                 "wire_bytes": self.total_bytes(),
-                "collectives": self.total_collectives()}
+                "collectives": self.total_collectives(),
+                "cost_sources": sorted({e["cost_source"]
+                                        for e in self.entries})}

@@ -4,13 +4,24 @@ plus jaxpr op-census modes for the resident-state regression (count
 optimizer kernel launches and pack/unpack ops per local step / sync).
 
 Usage: python _bucket_sync_probe.py
-           {bucket|leaf|resident|ops_resident|ops_kernel|
-            ops_resident_telemetry}
+           {bucket|leaf|resident|resident_sharded|ops_resident|
+            ops_kernel|ops_resident_telemetry|ops_resident_sharded}
 
 ``resident`` lowers the RESIDENT-state sync (state held as
 flatbuf.BucketState buffers, sharded P(worker) on the leading dim): the
 collective mix must be identical to the non-resident bucket path — one
 uint8 payload gather + one scale gather per dtype bucket.
+
+``resident_sharded`` (ISSUE 4) lowers the resident sync on a
+(data=4, model=2) mesh with HALF the leaves TP-sharded over 'model':
+those leaves ride a (f32, ('model',)) sub-bucket whose row dim stays
+sharded — the payload gathers must run over the 4 WORKERS only with
+shard-local row counts, and no collective may move a dense f32 payload
+(that would be the gathered-full-leaf failure mode sub-buckets remove).
+
+``ops_resident_sharded`` is the meshless jaxpr census of the same
+sharded-class layout: zero concatenate/pad per step and sync, and sync
+emits zero gather/slice (no unflatten on the resident sync path).
 """
 import os
 
@@ -34,7 +45,17 @@ SHAPES = {"w1": (64, 33), "w2": (33,), "w3": (16, 7), "w4": (130,),
 W = 8
 
 
-def ops_census(resident: bool, telemetry: bool = False):
+def _probe_shard_classes():
+    """w1 FSDP-style (dim0 over 'model'), w2 TP-style (dim1), b1
+    replicated — two sub-buckets from one f32 dtype."""
+    from repro.core import flatbuf
+    return {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+            "b1": flatbuf.REPLICATED,
+            "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 2),))}
+
+
+def ops_census(resident: bool, telemetry: bool = False,
+               sharded: bool = False):
     """Jaxpr op counts of one local step and one sync, resident vs the
     tree-in/tree-out kernel path (`flatten` = concatenate+pad eqns,
     `unflatten` = slice/gather eqns, optimizer launches = pallas_call).
@@ -63,9 +84,10 @@ def ops_census(resident: bool, telemetry: bool = False):
         optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=1e-3,
                           grad_clip=0.5, lr_decay_steps=()))
     wd_mask = {"w1": False, "b1": True, "w2": False}
+    cls = _probe_shard_classes() if sharded else None
     init, local_step, sync = make_local_sgd(
         run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
-        resident=resident, telemetry=telemetry)
+        resident=resident, telemetry=telemetry, shard_classes=cls)
     params = {"w1": jax.ShapeDtypeStruct((6, 5), jnp.float32),
               "b1": jax.ShapeDtypeStruct((5,), jnp.float32),
               "w2": jax.ShapeDtypeStruct((5, 2), jnp.float32)}
@@ -75,9 +97,10 @@ def ops_census(resident: bool, telemetry: bool = False):
     step_counts = jaxpr_op_counts(jax.make_jaxpr(local_step)(state, batch))
     sync_counts = jaxpr_op_counts(jax.make_jaxpr(lambda s: sync(s))(state))
     from repro.core import flatbuf
-    nb = flatbuf.build_layout(params).num_buckets
+    nb = flatbuf.build_layout(params, shard_classes=cls).num_buckets
     print(json.dumps({
-        "mode": ("ops_resident_telemetry" if telemetry
+        "mode": ("ops_resident_sharded" if sharded
+                 else "ops_resident_telemetry" if telemetry
                  else "ops_resident" if resident else "ops_kernel"),
         "num_buckets": nb,
         "step": step_counts,
@@ -85,10 +108,85 @@ def ops_census(resident: bool, telemetry: bool = False):
     }))
 
 
+def resident_sharded():
+    """Lower the resident sync on a (data=4, model=2) mesh with mixed
+    sharding classes and report the collective mix per group size."""
+    from repro.core import flatbuf
+
+    Wd, S = 4, 2
+    mesh = Mesh(np.array(jax.devices()[:Wd * S]).reshape(Wd, S),
+                ("data", "model"))
+    run = RunConfig(
+        model=ModelConfig(name="probe", family="dense", citation=""),
+        shape=InputShape("t", 8, Wd, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, sync_compression="sign",
+                                 wire_pack=True),
+        optim=OptimConfig(lr_decay_steps=()))
+
+    def loss(p, b):   # sync never traces the loss
+        raise NotImplementedError
+
+    cls = {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+           "b1": flatbuf.REPLICATED,
+           "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 2),)),
+           "w3": flatbuf.REPLICATED}
+    shapes = {"w1": (64, 33), "b1": (7,), "w2": (16, 128), "w3": (130,)}
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=Wd,
+        packed_mean_flat_fn=make_packed_mean_flat(mesh, ("data",)),
+        use_kernel=True, resident=True, shard_classes=cls)
+    single = {k: jax.ShapeDtypeStruct(s, jnp.float32)
+              for k, s in shapes.items()}
+    state = jax.eval_shape(init, jax.random.PRNGKey(0), single)
+
+    def bucket_sh(bs, worker):
+        lay = bs.layout
+        return flatbuf.BucketState(lay, tuple(
+            NamedSharding(mesh, flatbuf.bucket_pspec(lay, b, worker=worker))
+            for b in range(lay.num_buckets)), leading=bs.leading)
+
+    ssh = LocalSGDState(params=bucket_sh(state.params, "data"),
+                        momentum=bucket_sh(state.momentum, "data"),
+                        anchor=flatbuf.BucketState(
+                            state.anchor.layout,
+                            tuple(NamedSharding(mesh, flatbuf.bucket_pspec(
+                                state.anchor.layout, b))
+                                for b in range(state.anchor.num_buckets))),
+                        global_u=None, ef_memory=None,
+                        step=NamedSharding(mesh, P()),
+                        rng=NamedSharding(mesh, P()))
+    jsync = jax.jit(sync, static_argnames=("group", "compression"),
+                    in_shardings=(ssh,), out_shardings=ssh)
+    with mesh:
+        compiled = jsync.lower(state).compile()
+    s = parse_collectives(compiled.as_text())
+    gathers = [o for o in s.ops if o.op == "all-gather"]
+    lay = state.params.layout
+    print(json.dumps({
+        "mode": "resident_sharded",
+        "num_buckets": lay.num_buckets,
+        "bucket_classes": [list(c) for c in lay.bucket_classes],
+        "bucket_rows": list(lay.bucket_rows),
+        "bucket_local_rows": [lay.bucket_local_rows(b)
+                              for b in range(lay.num_buckets)],
+        "all_gather_count": len(gathers),
+        "all_gather_bytes": sum(o.result_bytes for o in gathers),
+        "gather_group_sizes": sorted(o.group_size for o in gathers),
+        "max_gather_result_bytes": max((o.result_bytes for o in gathers),
+                                       default=0),
+        "by_op": s.by_op(),
+        "count": s.count(),
+    }))
+
+
 def main():
     if sys.argv[1].startswith("ops_"):
         ops_census(sys.argv[1] != "ops_kernel",
-                   telemetry=sys.argv[1] == "ops_resident_telemetry")
+                   telemetry=sys.argv[1] == "ops_resident_telemetry",
+                   sharded=sys.argv[1] == "ops_resident_sharded")
+        return
+    if sys.argv[1] == "resident_sharded":
+        resident_sharded()
         return
     mode = sys.argv[1]
     bucket = mode == "bucket"

@@ -1,0 +1,122 @@
+"""Subprocess helper for test_sharded_subbuckets: run FSDP / TP layouts
+END TO END through ``fit`` on a forced 8-device host platform (4 workers
+x 2-way within-worker sharding) with the resident sub-bucket path, and
+compare the trajectory against the meshless per-leaf reference bundle.
+
+Usage: python _sharded_fit_probe.py {tp|fsdp}
+
+Prints one JSON line: per variant (optimizer x sync compressor) the max
+relative parameter difference vs the reference after STEPS steps, the
+max loss-history difference, the sub-bucket census of the resident
+layout, and the ledger cost sources (mesh runs must price sync rounds
+from the compiled HLO, not the analytic ring model — ISSUE 4
+satellite).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
+from repro.core.local_sgd import is_resident, mean_params
+from repro.data.partition import ShardedBatches
+from repro.data.synthetic import lm_examples, markov_lm
+from repro.launch import steps as steps_mod
+from repro.launch.train import fit
+from repro.sharding.layout import fsdp_within_worker_layout, train_layout
+
+W, S, SEQ, B_LOC, STEPS, H = 4, 2, 16, 2, 8, 2
+
+
+def make_run(optimizer: str, compression: str, wire_pack: bool) -> RunConfig:
+    cfg = configs.get_smoke("paper-lm").replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, max_seq_len=SEQ, act_dtype="float32")
+    shape = InputShape("t", SEQ, W * B_LOC, "train")
+    return RunConfig(
+        model=cfg, shape=shape,
+        local_sgd=LocalSGDConfig(local_steps=H, sync_compression=compression,
+                                 wire_pack=wire_pack, local_momentum=0.9,
+                                 nesterov=True),
+        optim=OptimConfig(optimizer=optimizer, base_lr=0.2,
+                          base_batch=shape.global_batch, weight_decay=1e-3,
+                          grad_clip=0.5 if optimizer == "sgd" else 0.0,
+                          lars_trust=0.02, lr_warmup_steps=2,
+                          lr_decay_steps=()))
+
+
+def data_iter(cfg):
+    toks = markov_lm(vocab=cfg.vocab_size, num_seqs=256, seq_len=SEQ, seed=0)
+    return ShardedBatches(lm_examples(toks), W, B_LOC, seed=0)
+
+
+def run_variant(kind: str, optimizer: str, compression: str,
+                wire_pack: bool) -> dict:
+    run = make_run(optimizer, compression, wire_pack)
+    mesh = Mesh(np.array(jax.devices()[:W * S]).reshape(W, S),
+                ("data", "model"))
+    if kind == "tp":
+        lay = train_layout(("data", "model"), worker_axes=("data",))
+    else:
+        lay = fsdp_within_worker_layout(("data", "model"),
+                                        worker_axes=("data",),
+                                        shard_axes=("model",))
+    bundle = steps_mod.build_train(run, mesh=mesh, layout=lay,
+                                   use_kernel=True)
+    with mesh:
+        state, hist, summary = fit(run, data_iter(run.model), bundle=bundle,
+                                   num_steps=STEPS, mesh=mesh,
+                                   log=lambda *_: None)
+    assert is_resident(state), "sharded layout must take the resident path"
+    blay = state.params.layout
+    n_sharded = sum(1 for b in range(blay.num_buckets) if blay.bucket_class(b))
+
+    ref_bundle = steps_mod.build_train(run, num_workers=W)
+    rstate, rhist, rsummary = fit(run, data_iter(run.model),
+                                  bundle=ref_bundle, num_steps=STEPS,
+                                  log=lambda *_: None)
+
+    p = jax.tree.leaves(mean_params(state))
+    rp = jax.tree.leaves(mean_params(rstate))
+    rel = 0.0
+    for a, b in zip(p, rp, strict=True):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        rel = max(rel, float(np.max(np.abs(a - b))
+                             / (np.max(np.abs(b)) + 1e-12)))
+    loss_diff = max(abs(h["loss"] - r["loss"])
+                    for h, r in zip(hist, rhist, strict=True))
+    return {"optimizer": optimizer, "compression": compression,
+            "wire_pack": wire_pack,
+            "resident": bool(is_resident(state)),
+            "num_buckets": blay.num_buckets,
+            "num_sharded_buckets": n_sharded,
+            "bucket_classes": [list(blay.bucket_class(b))
+                               for b in range(blay.num_buckets)],
+            "max_rel_diff": rel,
+            "max_loss_diff": float(loss_diff),
+            "final_loss": float(hist[-1]["loss"]),
+            "cost_sources": summary["ledger"]["cost_sources"],
+            "ref_cost_sources": rsummary["ledger"]["cost_sources"]}
+
+
+def main():
+    kind = sys.argv[1]
+    variants = [("sgd", "sign", True), ("lars", "none", False)]
+    if kind == "tp":
+        variants.append(("sgd", "ef_sign", True))
+    out = {"kind": kind,
+           "variants": [run_variant(kind, *v) for v in variants]}
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

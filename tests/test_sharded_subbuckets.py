@@ -1,0 +1,356 @@
+"""Sharding-class sub-buckets (ISSUE 4): FSDP/TP layouts on the flat bus.
+
+Three layers of coverage:
+
+* meshless unit tests — shard-major packing round-trips, tiled per-row
+  metadata (segment totals accumulate across shards into GLOBAL
+  per-leaf quantities), per-shard kernel launch grids, bucket
+  PartitionSpecs, and resident trajectory equivalence vs the per-leaf
+  reference with sharded classes active (Pallas kernels with shards>1).
+* subprocess jaxpr census — the sharded resident path keeps the
+  zero-concatenate contract per step and sync.
+* subprocess HLO probes on a forced 8-device (4 workers x 2 shards)
+  platform — the resident sync issues exactly 2 worker-axis gathers per
+  sub-bucket with shard-local payload rows, and FSDP + TP layouts run
+  END TO END through ``fit`` on the resident path, trajectory-equal to
+  the per-leaf reference, with ledger costs priced from the compiled
+  HLO (cross-checked against the analytic ring model).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core import compression as comp
+from repro.core import flatbuf
+from repro.core.local_sgd import (_packed_mean_flat_local, make_local_sgd,
+                                  unpack_state)
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(_HERE, "..", "src")
+
+W = 4
+H = 2
+ROUNDS = 3
+
+CLS = {"w1": flatbuf.ShardClass(axes=("model",), dims=((1, 2),)),
+       "b1": flatbuf.REPLICATED,
+       "w2": flatbuf.ShardClass(axes=("model",), dims=((0, 2),))}
+WD_MASK = {"w1": False, "b1": True, "w2": False}
+
+
+def _params(key=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return {"w1": jax.random.normal(k1, (6, 4)) * 0.4,
+            "b1": jnp.zeros((4,)),
+            "w2": jax.random.normal(k2, (4, 2)) * 0.4}
+
+
+def _loss(params, batch):
+    pred = jnp.tanh(batch["x"] @ params["w1"] + params["b1"]) @ params["w2"]
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def _batch(t):
+    k = jax.random.fold_in(jax.random.PRNGKey(2), t)
+    x = jax.random.normal(k, (W, 4, 6))
+    y = jnp.tanh(x @ (jnp.ones((6, 4)) * 0.3)) @ (jnp.ones((4, 2)) * 0.3)
+    return {"x": x, "y": y}
+
+
+def _cfg(*, compression="none", wire_pack=False, optimizer="sgd", clip=0.0):
+    return RunConfig(
+        model=ModelConfig(name="q", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, sync_compression=compression,
+                                 wire_pack=wire_pack, local_momentum=0.9,
+                                 nesterov=True),
+        optim=OptimConfig(optimizer=optimizer, base_lr=0.05, base_batch=W * 4,
+                          weight_decay=1e-3, grad_clip=clip, lars_trust=0.02,
+                          lr_decay_steps=()))
+
+
+# ---------------------------------------------------------------------------
+# Layout: shard-major packing + tiled metadata
+# ---------------------------------------------------------------------------
+
+def test_sharded_layout_buckets_by_class():
+    lay = flatbuf.build_layout(_params(), wd_mask=WD_MASK, shard_classes=CLS)
+    assert lay.num_buckets == 2
+    classes = {lay.bucket_class(b) for b in range(2)}
+    assert classes == {(), ("model",)}
+    sb = [b for b in range(2) if lay.bucket_class(b)][0]
+    assert lay.bucket_shard_count(sb) == 2
+    assert lay.bucket_rows[sb] == 2 * lay.bucket_local_rows(sb)
+    # both sharded leaves share one sub-bucket despite sharding
+    # different dims
+    assert len(lay.bucket_slots(sb)) == 2
+
+
+def test_sharded_roundtrip_and_shard_major_rows():
+    """unflatten(flatten(x)) == x, and sharding the bucket's row dim
+    2-ways hands each shard exactly its own slice of every leaf."""
+    tree = _params()
+    lay = flatbuf.build_layout(tree, shard_classes=CLS)
+    bufs = flatbuf.flatten(lay, tree)
+    out = flatbuf.unflatten(lay, bufs)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(tree[k]), np.asarray(out[k]))
+    sb = [b for b in range(lay.num_buckets) if lay.bucket_class(b)][0]
+    flat = np.asarray(bufs[sb]).reshape(2, -1)        # (S, local_rows*128)
+    s1 = [s for s in lay.slots if s.shape == (6, 4)][0]
+    s2 = [s for s in lay.slots if s.shape == (4, 2)][0]
+    w1, w2 = np.asarray(tree["w1"]), np.asarray(tree["w2"])
+    for s_ in range(2):
+        np.testing.assert_array_equal(
+            flat[s_, s1.row_offset * 128: s1.row_offset * 128 + 12],
+            w1[:, s_ * 2:(s_ + 1) * 2].reshape(-1))   # dim1-sharded
+        np.testing.assert_array_equal(
+            flat[s_, s2.row_offset * 128: s2.row_offset * 128 + 4],
+            w2[s_ * 2:(s_ + 1) * 2].reshape(-1))      # dim0-sharded
+
+
+def test_tiled_metadata_yields_global_totals():
+    """Per-row metadata is the shard-local array tiled S times, so one
+    segmented reduction over ALL rows gives GLOBAL per-leaf totals —
+    the L1 compressor scale must equal mean|x| over the whole leaf."""
+    tree = _params()
+    lay = flatbuf.build_layout(tree, wd_mask=WD_MASK, shard_classes=CLS)
+    bufs = flatbuf.flatten(lay, tree)
+    for b in range(lay.num_buckets):
+        seg = flatbuf.row_segments(lay, b)
+        assert seg.shape == (lay.bucket_rows[b],)
+        y = comp.sign_compress_bucket(lay, b, bufs[b], kernel=True)
+        yr = comp.sign_compress_bucket(lay, b, bufs[b], kernel=False)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-7)
+    out = flatbuf.unflatten(lay, [comp.sign_compress_bucket(lay, b, x)
+                                  for b, x in enumerate(bufs)])
+    want = comp.sign_compress(tree, use_kernel=False)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+
+
+def test_packed_mean_local_sharded_matches_dense_signs():
+    """The meshless wire pack over a SHARDED sub-bucket reproduces
+    sign * global-L1-scale averaged over workers (padding re-zeroed)."""
+    tree = _params()
+    lay = flatbuf.build_layout(tree, shard_classes=CLS)
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x + i for i in range(W)]), tree)
+    bufs = flatbuf.flatten(lay, stacked, leading=1)
+    for b in range(lay.num_buckets):
+        got = _packed_mean_flat_local(bufs[b], lay, b)
+        got = flatbuf.mask_padding(lay, b, got)
+        # reference: per-worker sign*scale from the dense compressor
+        # (sign(0) packs as +1 on the wire), averaged over workers
+        ref = []
+        seg = jnp.asarray(flatbuf.row_segments(lay, b))
+        sizes = jnp.asarray(flatbuf.segment_sizes(lay, b))
+        for w in range(W):
+            x = bufs[b][w].astype(jnp.float32)
+            totals = jax.ops.segment_sum(jnp.sum(jnp.abs(x), -1), seg,
+                                         num_segments=sizes.shape[0])
+            signs = jnp.where(x >= 0, 1.0, -1.0)
+            ref.append(signs * (totals / sizes)[seg][:, None])
+        want = flatbuf.mask_padding(lay, b, sum(ref) / W)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_bucket_pspec():
+    from jax.sharding import PartitionSpec as P
+    lay = flatbuf.build_layout(_params(), shard_classes=CLS)
+    rb = [b for b in range(2) if not lay.bucket_class(b)][0]
+    sb = 1 - rb
+    assert flatbuf.bucket_pspec(lay, rb, worker="data") == P("data", None, None)
+    assert flatbuf.bucket_pspec(lay, sb, worker="data") == P("data", "model", None)
+    assert flatbuf.bucket_pspec(lay, sb) == P("model", None)
+
+
+def test_block_rows_never_straddles_shards():
+    from repro.kernels.fused_bucket import BLOCK_ROWS, _block_rows
+    assert _block_rows(512, 1) == BLOCK_ROWS
+    # replicated buckets keep the pre-sub-bucket grid: the partial
+    # final block is masked in-kernel, never shrunk
+    assert _block_rows(520, 1) == BLOCK_ROWS
+    assert _block_rows(512, 2) == BLOCK_ROWS        # 256 local rows
+    assert _block_rows(1040, 2) == 8                # 520 local: gcd fallback
+    assert _block_rows(16, 2) == 8
+    for rows, S in [(512, 2), (1040, 2), (48, 2), (96, 4)]:
+        br = _block_rows(rows, S)
+        assert (rows // S) % br == 0, (rows, S, br)
+
+
+def test_uneven_shard_factor_asserts():
+    """A class whose factor does not divide the leaf size cannot build
+    (the classifier never produces one — belt and braces)."""
+    bad = {"w": flatbuf.ShardClass(axes=("model",), dims=((0, 4),))}
+    with pytest.raises(AssertionError):
+        flatbuf.build_layout({"w": jnp.zeros((6, 3))}, shard_classes=bad)
+
+
+# ---------------------------------------------------------------------------
+# Meshless resident trajectory equivalence with sharded classes active
+# (Pallas kernels see shards=2 launch grids)
+# ---------------------------------------------------------------------------
+
+def _run(run, *, resident, rounds=ROUNDS):
+    init, local_step, sync = make_local_sgd(
+        run, _loss, num_workers=W, wd_mask=WD_MASK,
+        use_kernel=resident, bucket_sync=resident,
+        shard_classes=CLS if resident else None)
+    state = init(jax.random.PRNGKey(0), _params())
+    for _ in range(rounds):
+        for _ in range(H):
+            state, metrics = local_step(state, _batch(int(state.step)))
+        state = sync(state)
+    return state, metrics
+
+
+def _assert_match(res_state, ref_state, *, rtol=2e-4, atol=1e-6):
+    view = unpack_state(res_state)
+    for field in ("params", "momentum", "anchor", "global_u", "ef_memory"):
+        got, want = getattr(view, field), getattr(ref_state, field)
+        assert (got is None) == (want is None), field
+        if got is None:
+            continue
+        for k in want:
+            assert got[k].shape == want[k].shape, (field, k)
+            np.testing.assert_allclose(
+                np.asarray(got[k], np.float32), np.asarray(want[k], np.float32),
+                rtol=rtol, atol=atol, err_msg=f"{field}/{k}")
+
+
+@pytest.mark.parametrize("compression,wire_pack", [("none", False),
+                                                   ("sign", True),
+                                                   ("ef_sign", True)])
+def test_sharded_resident_sgd_matches_reference(compression, wire_pack):
+    run = _cfg(compression=compression, wire_pack=wire_pack, clip=0.5)
+    s_res, _ = _run(run, resident=True)
+    s_ref, _ = _run(run, resident=False)
+    assert s_res.params.layout.bucket_shards == (1, 2) or \
+        s_res.params.layout.bucket_shards == (2, 1)
+    _assert_match(s_res, s_ref)
+
+
+def test_sharded_resident_lars_matches_reference():
+    run = _cfg(optimizer="lars")
+    s_res, _ = _run(run, resident=True)
+    s_ref, _ = _run(run, resident=False)
+    _assert_match(s_res, s_ref)
+
+
+def test_sharded_unpack_pack_roundtrip_bit_exact():
+    """unpack_state -> pack_state(shard_classes=...) re-enters the SAME
+    sub-bucket geometry with bit-identical buffers (padding-is-zero
+    makes the relayout lossless)."""
+    from repro.core.local_sgd import pack_state
+    run = _cfg(compression="sign", wire_pack=True, clip=0.5)
+    s_res, _ = _run(run, resident=True)
+    back = pack_state(unpack_state(s_res), wd_mask=WD_MASK,
+                      shard_classes=CLS)
+    assert back.params.layout == s_res.params.layout
+    for a, b in zip(back.params.buckets, s_res.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(back.momentum.buckets, s_res.momentum.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_resident_checkpoint_roundtrip(tmp_path):
+    """save_flat straight from sharded resident buckets; restore into a
+    resident template bit-exactly."""
+    from repro.checkpoint import checkpoint as ckpt
+    run = _cfg(compression="sign", wire_pack=True, clip=0.5)
+    s_res, _ = _run(run, resident=True)
+    path = str(tmp_path / "flat")
+    ckpt.save_flat(path, s_res, step=ROUNDS * H)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        s_res)
+    out = ckpt.restore_flat(path, tmpl)
+    assert out.params.layout == s_res.params.layout
+    for a, b in zip(out.params.buckets, s_res.params.buckets):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.load_meta(path)["resident"] is True
+
+
+# ---------------------------------------------------------------------------
+# Subprocess probes: jaxpr census + HLO collectives + fit end-to-end
+# ---------------------------------------------------------------------------
+
+def _probe(script: str, mode: str, timeout: int = 600) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(_SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, os.path.join(_HERE, script), mode],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_resident_census_zero_pack():
+    """Sharded sub-buckets keep the resident zero-pack contract: no
+    concatenate per step, no concatenate/pad per sync, and optimizer
+    dispatch stays 2 launches per sub-bucket (sq-sum + fused update)."""
+    res = _probe("_bucket_sync_probe.py", "ops_resident_sharded")
+    assert res["num_buckets"] == 2
+    assert res["step"].get("concatenate", 0) == 0, res["step"]
+    assert res["sync"].get("concatenate", 0) == 0, res["sync"]
+    assert res["sync"].get("pad", 0) == 0, res["sync"]
+    assert res["step"]["pallas_call"] == 2 * res["num_buckets"]
+
+
+@pytest.mark.slow
+def test_sharded_resident_sync_collectives():
+    """ISSUE-4 acceptance (sync wire contract): one uint8 payload
+    gather + one scale gather per (dtype, sharding-class) sub-bucket,
+    every gather over the 4 WORKERS only, and the sharded bucket's
+    payload moves shard-LOCAL rows — never the gathered full leaf."""
+    res = _probe("_bucket_sync_probe.py", "resident_sharded")
+    assert res["num_buckets"] == 2
+    assert sorted(map(tuple, res["bucket_classes"])) == [(), ("model",)]
+    assert res["all_gather_count"] == 2 * res["num_buckets"]
+    assert set(res["gather_group_sizes"]) == {4}          # worker axis only
+    # largest gather = a bucket's packed payload: W * local_rows * 16
+    # uint8 bytes; a dense-f32 or full-rows gather would be far larger
+    max_payload = max(4 * res["bucket_local_rows"][b] * 16
+                      for b in range(res["num_buckets"]))
+    assert res["max_gather_result_bytes"] <= max_payload
+    # nothing moves dense f32 buckets: total gathered bytes stay under
+    # the smallest dense bucket (rows * 128 lanes * 4 bytes)
+    assert res["all_gather_bytes"] < min(r * 128 * 4
+                                         for r in res["bucket_rows"])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["tp", "fsdp"])
+def test_fit_sharded_layout_matches_reference(kind):
+    """ISSUE-4 acceptance (end to end): FSDP and TP layouts take the
+    resident sub-bucket path through ``fit`` and stay trajectory-
+    equivalent to the per-leaf reference, with mesh ledger costs priced
+    from the compiled HLO."""
+    res = _probe("_sharded_fit_probe.py", kind)
+    assert res["kind"] == kind
+    for v in res["variants"]:
+        label = (kind, v["optimizer"], v["compression"])
+        assert v["resident"], label
+        assert v["num_sharded_buckets"] >= 1, label
+        assert np.isfinite(v["final_loss"]), label
+        # mesh vs meshless f32 reassociation flips sign(x) for x near 0:
+        # plain sign has no error feedback so those O(scale) deviations
+        # persist in the params; EF-sign absorbs them into the memory;
+        # uncompressed syncs track to float tolerance.
+        tol = {"sign": 5e-2, "ef_sign": 5e-3}.get(v["compression"], 1e-4)
+        assert v["max_rel_diff"] < tol, (label, v["max_rel_diff"])
+        assert v["max_loss_diff"] < 1e-3, (label, v["max_loss_diff"])
+        assert v["cost_sources"] == ["hlo"], label
+        assert v["ref_cost_sources"] == ["analytic"], label

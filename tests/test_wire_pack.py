@@ -86,14 +86,29 @@ def test_pack_axes_tree_never_selects_sharded_dim():
             assert not sharded, (k, ax)
 
 
-def test_pack_axes_tree_fallback_when_all_sharded():
-    """Every dim sharded (divisible) -> falls back to -1 (last dim)."""
+def test_pack_axes_tree_uses_effective_rules():
+    """Both dims name 'model', but first-wins dedup means the spec only
+    shards dim0 — dim1 is ACTUALLY unsharded and is the right pack axis
+    (the old divisibility-only logic wrongly fell back to -1)."""
     lay = _layout({"data": 4, "model": 4})
+    specs = {"w": ParamSpec((512, 512), ("mlp", "vocab"))}
+    assert tuple(lay.spec("mlp", "vocab", dims=(512, 512))) == ("model", None)
+    assert pack_axes_tree(specs, lay)["w"] == 2   # +1 for the worker dim
+
+
+def test_pack_axes_tree_fallback_when_truly_all_sharded():
+    """A genuinely fully-sharded leaf (distinct mesh axes per dim, no
+    dedup relief) falls back to -1 (last dim)."""
+    lay = MeshLayout(mesh_axes=("data", "model"), worker_axes=(),
+                     rules={"mlp": "model", "vocab": "data"},
+                     sizes={"data": 4, "model": 4})
     specs = {"w": ParamSpec((512, 512), ("mlp", "vocab"))}
     assert pack_axes_tree(specs, lay)["w"] == -1
 
 
-def test_bucketable_tree_marks_sharded_leaves():
+def test_shard_classes_follow_effective_spec():
+    """Sub-bucket classification == the effective PartitionSpec rules
+    (replaces the retired bucketable_tree)."""
     from repro.core import flatbuf
     lay = _layout({"data": 4, "model": 4})
     specs = {
@@ -101,10 +116,40 @@ def test_bucketable_tree_marks_sharded_leaves():
         "norm": ParamSpec((256,), ("embed",)),
         "odd": ParamSpec((256, 510), ("embed", "mlp")),  # 510 % 4 != 0: dropped rule
     }
-    ok = flatbuf.bucketable_tree(specs, lay)
-    assert not ok["ffn"]       # mlp-sharded: must stay per-leaf
-    assert ok["norm"]
-    assert ok["odd"]           # shape-aware sharding drops the rule
+    cls = flatbuf.shard_classes(specs, lay)
+    assert cls["ffn"] == flatbuf.ShardClass(axes=("model",), dims=((1, 4),))
+    assert cls["norm"] == flatbuf.REPLICATED
+    assert cls["odd"] == flatbuf.REPLICATED  # shape-aware drop => replicated
+    rep = flatbuf.replicated_tree(cls)
+    assert rep == {"ffn": False, "norm": True, "odd": True}
+
+
+def test_shard_classes_uneven_tp_dim_matches_placement():
+    """Divisibility-leak regression (ISSUE 4): a leaf whose TP dim does
+    not divide the mesh axis must land in the class its PartitionSpec
+    actually gets — for EVERY dim, including later divisible ones the
+    old divisibility-only test conflated.  Classification and placement
+    must agree or the bus forces a GSPMD gather."""
+    from repro.core import flatbuf
+    lay = _layout({"data": 4, "model": 4})
+    # dim0 uneven over model (dropped by the spec), dim1 divisible: the
+    # spec shards dim1 — classification must say exactly that, not
+    # "replicated" (old leak: flattened into a replicated bucket while
+    # placed sharded) nor "sharded on dim0"
+    specs = {"w": ParamSpec((510, 512), ("mlp", "vocab"))}
+    eff = lay.spec("mlp", "vocab", dims=(510, 512))
+    assert tuple(eff) == (None, "model")
+    cls = flatbuf.shard_classes(specs, lay)
+    assert cls["w"] == flatbuf.ShardClass(axes=("model",), dims=((1, 4),))
+    # fully-uneven leaf: spec replicates every dim -> replicated class
+    specs2 = {"w": ParamSpec((510, 509), ("mlp", "vocab"))}
+    assert flatbuf.shard_classes(specs2, lay)["w"] == flatbuf.REPLICATED
+    # first-wins dedup: both dims name 'model'; the spec shards dim0
+    # only, so must the class
+    specs3 = {"w": ParamSpec((512, 512), ("mlp", "vocab"))}
+    cls3 = flatbuf.shard_classes(specs3, lay)
+    assert cls3["w"] == flatbuf.ShardClass(axes=("model",), dims=((0, 4),))
+    assert tuple(lay.spec("mlp", "vocab", dims=(512, 512))) == ("model", None)
 
 
 # ---------------------------------------------------------------------------
