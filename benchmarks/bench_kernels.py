@@ -269,3 +269,70 @@ def sharded_bench():
     us_s = time_fn(jax.jit(sync), state, iters=2, warmup=1)
     emit("bucket/sync_sharded", us_s,
          f"collectives={cost.collectives};wire_bytes={cost.bytes_on_wire:.0f}")
+
+
+def syncplan_bench():
+    """SyncPlan shapes on the paper_lm-like resident tree (ISSUE 5).
+
+    Emits per-SCOPE stage counts + per-device wire bytes for the flat,
+    hierarchical(W/2), overlap, and dtype-coalesced plans over the same
+    mixed-class sub-bucket layout, and times the plan-driven resident
+    sync — so the BENCH artifact tracks the plan SHAPE (stages,
+    collectives, bytes) across PRs, not just the end-to-end time.
+    """
+    from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+    from repro.core import syncplan as splan
+    from repro.core.local_sgd import make_local_sgd
+
+    W, S = 4, 2
+    params, wd_mask = _paper_lm_like_tree(layers=6)
+
+    def cls_of(x):
+        if x.ndim == 2 and all(d % S == 0 for d in x.shape):
+            return flatbuf.ShardClass(axes=("model",), dims=((1, S),))
+        return flatbuf.REPLICATED
+
+    classes = jax.tree.map(cls_of, params)
+
+    def loss(p, b):
+        l = sum(jnp.mean(jnp.square(x.astype(jnp.float32)))
+                for x in jax.tree.leaves(p))
+        return l, {"xent": l}
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, local_momentum=0.9,
+                                 sync_compression="sign", wire_pack=True),
+        optim=OptimConfig(base_lr=0.05, base_batch=W * 4, weight_decay=1e-4,
+                          grad_clip=0.5, lr_decay_steps=()))
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, wd_mask=wd_mask, use_kernel=True,
+        resident=True, shard_classes=classes)
+    state = init(jax.random.PRNGKey(0), params)
+    lay = state.params.layout
+
+    def plan_of(topology=None, coalesce=False):
+        return splan.make_sync_plan(lay, topology=topology or splan.flat(),
+                                    compression="sign", coalesce=coalesce,
+                                    num_workers=W, wire_pack=True,
+                                    anchored=True)
+
+    variants = [("flat", plan_of()),
+                ("hierarchical", plan_of(splan.hierarchical(W // 2))),
+                ("overlap", plan_of(splan.overlap())),
+                ("coalesced", plan_of(coalesce=True))]
+    for name, plan in variants:
+        gb, gc = plan.scope_cost("global")
+        scopes = {"global": len(plan.schedule("global"))}
+        extra = ""
+        if plan.topology.has_block:
+            bb, bc = plan.scope_cost("block")
+            scopes["block"] = len(plan.schedule("block"))
+            extra = (f";block_stages={scopes['block']}"
+                     f";block_wire_bytes={bb:.0f};block_collectives={bc}")
+        us = time_fn(jax.jit(lambda s, p=plan: sync(s, plan=p)), state,
+                     iters=2, warmup=1)
+        emit(f"syncplan/{name}", us,
+             f"stages={scopes['global']};collectives={gc};"
+             f"wire_bytes={gb:.0f};sub_buckets={lay.num_buckets}{extra}")

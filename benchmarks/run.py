@@ -32,7 +32,7 @@ def main() -> None:
                     help="skip the slower training benches")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke subset: kernel + bucket + resident-state "
-                         "microbenches only")
+                         "+ sharded + syncplan microbenches only")
     ap.add_argument("--json-out", default="",
                     help="write a BENCH_local_sgd.json artifact (structured "
                          "rows: step time, bytes/round, pack/unpack bytes, "
@@ -47,6 +47,7 @@ def main() -> None:
         "bucket": bench_kernels.bucket_bench,
         "resident": bench_kernels.resident_bench,
         "sharded": bench_kernels.sharded_bench,
+        "syncplan": bench_kernels.syncplan_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -65,7 +66,7 @@ def main() -> None:
     }
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
-    smoke = ("kernels", "bucket", "resident", "sharded")
+    smoke = ("kernels", "bucket", "resident", "sharded", "syncplan")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

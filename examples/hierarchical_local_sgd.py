@@ -1,8 +1,13 @@
-"""Hierarchical local SGD (paper Alg. 5 / Appendix D) demo.
+"""Hierarchical local SGD (paper Alg. 5 / Appendix D) demo — on the
+SyncPlan Topology API (ISSUE 5).
 
 Two blocks of workers; inner (block) syncs every H steps, outer (global)
-syncs every H*H^b. Shows the two-level communication accounting and that
-all workers converge to one model after the final global sync.
+syncs every H*H^b.  The sync topology is DECLARED, not implied by a
+``group=`` kwarg: ``make_sync_plan(bundle, topology=hierarchical(2))``
+compiles the per-sub-bucket sync into block-mean stages (fast intra-pod
+links) and global stages (slow inter-pod links), and the comms ledger
+prices each stage — so the Alg. 5 trade-off (cheap inner rounds vs
+expensive outer rounds) prints straight from ``summary['ledger']``.
 
     PYTHONPATH=src python examples/hierarchical_local_sgd.py
 """
@@ -15,6 +20,7 @@ import numpy as np
 
 from repro import configs
 from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
+from repro.core.syncplan import hierarchical, make_sync_plan
 from repro.data.partition import ShardedBatches
 from repro.data.synthetic import lm_examples, markov_lm
 from repro.launch.steps import build_train
@@ -22,6 +28,7 @@ from repro.launch.train import fit
 
 K, B_LOC, SEQ, STEPS = 4, 4, 64, 36
 H, HB = 2, 3                       # inner steps, block steps
+BLOCK = K // 2                     # workers per block (two blocks)
 
 cfg = configs.get_smoke("paper-lm")
 run = RunConfig(model=cfg,
@@ -32,14 +39,28 @@ run = RunConfig(model=cfg,
 
 data = lm_examples(markov_lm(vocab=cfg.vocab_size, num_seqs=512, seq_len=SEQ))
 bundle = build_train(run, num_workers=K)
+# Declare the Alg. 5 topology explicitly: block-mean stages over blocks
+# of BLOCK consecutive workers, then the global stages.  (build_train's
+# 'auto' topology compiles the same plan from block_steps > 1; spelling
+# it out here shows the API the controller's PlanDelta also rewrites.)
+bundle.sync_plan = make_sync_plan(bundle, topology=hierarchical(BLOCK))
+print(bundle.sync_plan.describe())
+print()
+
 state, hist, summary = fit(run, ShardedBatches(data, K, B_LOC), bundle=bundle,
                            num_steps=STEPS)
 
-print(f"H={H}, H^b={HB}, steps={STEPS}")
+print(f"H={H}, H^b={HB}, steps={STEPS}, topology={summary['topology']}")
 print(f"block syncs (fast intra-pod links):  {summary['comm_rounds']['block']}")
 print(f"global syncs (slow inter-pod links): {summary['comm_rounds']['global']}")
 print(f"mini-batch SGD would do {STEPS} global syncs")
 
+print("\nper-stage ledger (Alg. 5 trade-off, bytes per device per round):")
+for key, row in sorted(summary["ledger"]["topologies"].items()):
+    print(f"  {key:22s} rounds={row['rounds']:3d} "
+          f"bytes/round={row['bytes_per_round']:10.0f} "
+          f"collectives={row['collectives']}")
+
 w = jax.tree.leaves(state.params)[0]
 spread = float(np.abs(np.float32(w[0]) - np.float32(w[-1])).max())
-print(f"max param spread across workers after final sync: {spread:.2e}")
+print(f"\nmax param spread across workers after final sync: {spread:.2e}")

@@ -7,6 +7,7 @@ Public API tour:
     from repro.configs.base import RunConfig, LocalSGDConfig, OptimConfig
     from repro.core.local_sgd import make_local_sgd           # Alg. 1/2/5
     from repro.core import flatbuf                            # flat parameter bus
+    from repro.core.syncplan import make_sync_plan, hierarchical  # staged sync pipeline
     from repro.launch.steps import build_train, build_serve   # mesh-aware
     from repro.launch.train import fit                        # schedule driver
     from repro.launch.mesh import make_production_mesh        # 16x16 / 2x16x16

@@ -162,6 +162,14 @@ class LocalSGDConfig:
     # 1-bit wire packing of the compressed sync payload (TPU all-gather
     # of uint8 signs instead of an f32 all-reduce; see compression.py)
     wire_pack: bool = False
+    # declared sync topology (core/syncplan.py): auto = hierarchical
+    # blocks when block_steps > 1, else flat; overlap = flat semantics
+    # with the software-pipelined global stage ordering (bucket b's
+    # collective issued before bucket b-1's apply)
+    sync_topology: Literal["auto", "flat", "hierarchical", "overlap"] = "auto"
+    # coalesce same-dtype wire-packed sub-buckets of different sharding
+    # classes into one payload gather per dtype (SyncPlan coalesce)
+    sync_coalesce: bool = False
     # momentum placement (App. B.4.1)
     local_momentum: float = 0.9
     global_momentum: float = 0.0

@@ -114,6 +114,35 @@ def ef_compress_bucket(layout, b: int, d, e, *, leading: int = 0,
     return out, inp - out, inp
 
 
+def compress_stage(layout, stage, d, e=None, *, leading: int = 0,
+                   kernel: bool = True):
+    """Per-STAGE compressor entry point for the SyncPlan executors
+    (core/syncplan): apply a pack stage's declared mode to its
+    sub-bucket's delta buffer.
+
+    ``stage`` is a ``syncplan.SyncStage`` with ``kind='pack'`` (pack
+    stages carry exactly one sub-bucket id); ``d`` the (``*lead``,
+    rows, 128) delta bucket, ``e`` its EF memory bucket (``ef_sign``
+    only).  Returns ``(compressed, new_memory, input)`` uniformly:
+    ``input`` is the quantity the compressor consumed (``d`` for sign,
+    ``d + e`` for EF), so telemetry forms the compression-error
+    residual ``input - compressed`` mode-independently; for ``none``
+    the triple is ``(d, e, d)``.
+    """
+    assert stage.kind == "pack" and len(stage.buckets) == 1, stage
+    b = stage.buckets[0]
+    mode = stage.compression
+    if mode == "none":
+        return d, e, d
+    if mode == "sign":
+        return (sign_compress_bucket(layout, b, d, leading=leading,
+                                     kernel=kernel), e, d)
+    if mode == "ef_sign":
+        return ef_compress_bucket(layout, b, d, e, leading=leading,
+                                  kernel=kernel)
+    raise ValueError(f"unknown stage compression {mode!r}")
+
+
 def _sign_compress_bucketed(tree, bucketable=None):
     """Flat-bus compressor: per-leaf L1 scales from ONE segmented
     reduction per dtype bucket, sign applied in one launch per bucket

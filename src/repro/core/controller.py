@@ -34,6 +34,7 @@ from typing import Any, Protocol, runtime_checkable
 
 from repro.configs.base import ControllerConfig, RunConfig
 from repro.core.schedule import local_steps_at
+from repro.core.syncplan import PlanDelta, Topology
 
 
 @dataclass
@@ -55,9 +56,37 @@ class SyncController(Protocol):
     def compression(self) -> Any: ...           # None | str | per-bucket tuple
     def batch_scale(self) -> int: ...
     def update(self, report: RoundReport) -> None: ...
+    def plan_delta(self, step: int) -> PlanDelta: ...
 
 
-class StaticController:
+class _EmitsPlanDelta:
+    """Actuator surface (ISSUE 5): every policy emits ONE
+    :class:`~repro.core.syncplan.PlanDelta` per global round — the next
+    H, the per-stage compressor rewrite, an optional topology switch,
+    and the batch scale — and ``launch/train.fit`` drives the
+    :class:`~repro.core.syncplan.SyncPlan` from it
+    (``delta.apply(plan)``) instead of threading loose kwargs into
+    ``sync``.  Policies that decide nothing inherit the composition of
+    their (identity) decisions: the resulting delta rewrites nothing,
+    ``apply`` returns the SAME plan object, and the trajectory is
+    bitwise-identical by construction.
+
+    ``_topology_switch`` is the hook for topology-driving policies
+    (e.g. a straggler-aware controller collapsing hierarchical blocks):
+    set it to a :class:`Topology` and the next delta carries it once.
+    """
+
+    _topology_switch: Topology | None = None
+
+    def plan_delta(self, step: int) -> PlanDelta:
+        topo, self._topology_switch = self._topology_switch, None
+        return PlanDelta(h=int(self.h_at(step)),
+                         compression=self.compression(),
+                         topology=topo,
+                         batch_scale=int(self.batch_scale()))
+
+
+class StaticController(_EmitsPlanDelta):
     """Today's pre-scheduled H(t) — the identity policy.
 
     ``h_at`` delegates to ``local_steps_at`` so trajectories are
@@ -83,7 +112,7 @@ class StaticController:
         pass
 
 
-class DiversityHController:
+class DiversityHController(_EmitsPlanDelta):
     """Adapt H from the measured gradient-diversity ratio.
 
     EMA-smoothed ``diversity`` under ``low`` doubles H (up to
@@ -121,7 +150,7 @@ class DiversityHController:
             self.h = max(self.h // 2, self.cc.h_min)
 
 
-class AdaptiveBatchController:
+class AdaptiveBatchController(_EmitsPlanDelta):
     """Grow the per-worker batch on loss plateau (Lau et al. 2024).
 
     Keeps the configured H schedule; when the EMA loss improves by less
@@ -164,7 +193,7 @@ class AdaptiveBatchController:
             self.stall = 0
 
 
-class AutoCompressController:
+class AutoCompressController(_EmitsPlanDelta):
     """Escalate the sync compressor none -> sign -> ef_sign per bucket.
 
     Requires ``sync_compression='ef_sign'`` in the config so anchor +

@@ -7,10 +7,16 @@ emits *no* cross-worker collectives during the local phase (eq. 2, inner
 loop). Synchronization is a (possibly grouped) mean over the worker dim —
 one all-reduce over the worker axes, amortized ``1/H`` (Alg. 1 line 9/10).
 
-Hierarchical local SGD (Alg. 5): ``sync(state, group=block_size)``
-averages within blocks of consecutive workers; with ``worker_axes =
-('pod','data')`` a block = one pod, so inner syncs ride intra-pod ICI and
-outer syncs the inter-pod links — exactly the paper's Figure 17 mapping.
+Synchronization is driven by a :class:`~repro.core.syncplan.SyncPlan`
+(ISSUE 5): ``sync(state, plan=plan, scope=...)`` executes the plan's
+staged schedule (pack -> collective -> apply per sub-bucket), and the
+topology is a DECLARED property of the plan — ``hierarchical(block)``
+(Alg. 5) averages within blocks of consecutive workers at scope
+``"block"``; with ``worker_axes = ('pod','data')`` a block = one pod,
+so inner syncs ride intra-pod ICI and outer syncs the inter-pod links —
+exactly the paper's Figure 17 mapping.  The legacy
+``sync(state, group=block_size)`` kwargs survive as a shim that builds
+the equivalent plan per call (``group != W`` deprecates).
 
 Variants carried in state:
 * local momentum  — per-worker buffers inside the vmap (App. B.4.1)
@@ -34,6 +40,7 @@ and ``pack_state`` (re-entry after host-side surgery).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable
@@ -46,7 +53,9 @@ from repro.configs.base import LocalSGDConfig, OptimConfig, RunConfig
 from repro.core import compression as comp
 from repro.core import flatbuf
 from repro.core import noise as noise_mod
+from repro.core import syncplan as splan
 from repro.core.schedule import lr_at
+from repro.core.syncplan import resolve_comp_modes  # re-export (pre-plan API)
 from repro.optim.lars import apply_lars, apply_lars_buckets
 from repro.optim.sgd import apply_sgd, apply_sgd_buckets, init_momentum
 from repro.telemetry import stats as tstats
@@ -268,6 +277,14 @@ def make_packed_mean(mesh, worker_axes: tuple[str, ...]):
     return packed_mean
 
 
+def _cls_spec(cls: tuple[str, ...]):
+    """PartitionSpec row entry for a bucket's sharding class: None for
+    the replicated class, the bare axis name for a single-axis class,
+    the tuple otherwise (shared by the per-class and coalesced wire
+    packs so their sharding-spec mapping can never diverge)."""
+    return None if not cls else (cls[0] if len(cls) == 1 else cls)
+
+
 def make_packed_mean_flat(mesh, worker_axes: tuple[str, ...]):
     """Bucket-level 1-bit wire mean: ONE uint8 all_gather (+ one tiny
     f32 scale gather) per sub-bucket instead of one pair per leaf.
@@ -295,7 +312,7 @@ def make_packed_mean_flat(mesh, worker_axes: tuple[str, ...]):
         cls = layout.bucket_class(b)
         seg_ids_j = jnp.asarray(flatbuf.row_segments_local(layout, b))
         sizes_j = jnp.asarray(flatbuf.segment_sizes(layout, b))
-        cls_spec = None if not cls else (cls[0] if len(cls) == 1 else cls)
+        cls_spec = _cls_spec(cls)
 
         def f(local):                     # (1, local_rows, 128)
             x = local.astype(jnp.float32)[0]
@@ -333,6 +350,82 @@ def _packed_mean_flat_local(bucket, layout, b):
     packed, scales = jax.vmap(
         lambda xw: comp.pack_bucket_signs(xw, seg_ids_j, sizes_j))(x)
     return comp.unpack_bucket_signs(packed, scales, seg_ids_j).mean(axis=0)
+
+
+def make_packed_mean_coalesced(mesh, worker_axes: tuple[str, ...]):
+    """Coalesced 1-bit wire mean: ONE uint8 payload all_gather (+ one
+    f32 scale gather) per DTYPE, shared by sub-buckets of different
+    sharding classes (the multi-class wire-pack ROADMAP item; used by
+    ``SyncPlan`` stages with ``coalesced=True``).
+
+    Each device packs every sub-bucket's shard-local (local_rows, 128)
+    block exactly as :func:`make_packed_mean_flat` does (including the
+    per-class (num_segments,)-sized cross-shard scale psum), then
+    CONCATENATES the packed uint8 rows — already materialized,
+    shard-local, so the merge is a free copy of packed bytes, never a
+    dense gather — and gathers the combined payload over the WORKER
+    axes once.  Unpack splits the gathered rows back per bucket, so the
+    result is bitwise-identical to per-class gathers: concat/split move
+    no values.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axis = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def packed_mean_coalesced(bufs, layout, bids):
+        W = bufs[0].shape[0]
+        segs = [jnp.asarray(flatbuf.row_segments_local(layout, b))
+                for b in bids]
+        sizes = [jnp.asarray(flatbuf.segment_sizes(layout, b)) for b in bids]
+        classes = [layout.bucket_class(b) for b in bids]
+        lrows = [layout.bucket_local_rows(b) for b in bids]
+        nsegs = [len(layout.bucket_slots(b)) for b in bids]
+
+        def f(*locals_):                  # one (1, local_rows_b, 128) per b
+            packs, scs = [], []
+            for x, sg, sz, cls in zip(locals_, segs, sizes, classes):
+                pk, sc = comp.pack_bucket_signs(x.astype(jnp.float32)[0],
+                                                sg, sz, psum_axes=cls)
+                packs.append(pk)
+                scs.append(sc)
+            payload = (packs[0] if len(packs) == 1
+                       else jnp.concatenate(packs, axis=0))
+            scales = scs[0] if len(scs) == 1 else jnp.concatenate(scs, axis=0)
+            allp = jax.lax.all_gather(payload, axis)      # uint8 on wire
+            alls = jax.lax.all_gather(scales, axis)
+            allp = allp.reshape((W,) + payload.shape)
+            alls = alls.reshape(W, -1)
+            outs, ro, so = [], 0, 0
+            for sg, r, ns in zip(segs, lrows, nsegs):
+                db = comp.unpack_bucket_signs(allp[:, ro:ro + r],
+                                              alls[:, so:so + ns], sg)
+                outs.append(db.mean(axis=0))
+                ro += r
+                so += ns
+            return tuple(outs)
+
+        from repro.utils import shard_map_compat
+        # fully manual over ALL mesh axes, as make_packed_mean_flat:
+        # each class's row sharding rides its own in/out spec, the
+        # payload gather runs over the worker axes only
+        g = shard_map_compat(f, mesh=mesh,
+                             in_specs=tuple(P(axis, _cls_spec(c))
+                                            for c in classes),
+                             out_specs=tuple(P(_cls_spec(c))
+                                             for c in classes),
+                             manual_axes=None)
+        return list(g(*bufs))
+
+    return packed_mean_coalesced
+
+
+def _packed_mean_coalesced_local(bufs, layout, bids):
+    """Meshless fallback of :func:`make_packed_mean_coalesced`: the same
+    per-bucket pack/unpack math bucket by bucket (there is no wire to
+    coalesce on CPU) — values identical to the mesh form, which only
+    concatenates the already-packed payloads."""
+    return [_packed_mean_flat_local(x, layout, b)
+            for x, b in zip(bufs, bids, strict=True)]
 
 
 def bucket_packed_mean(delta, bucketable=None, *, flat_fn=None,
@@ -384,31 +477,43 @@ def pack_axes_tree(specs, layout):
     return jax.tree.map(pick, specs, is_leaf=mbase.is_spec)
 
 
-_COMP_MODES = ("none", "sign", "ef_sign")
+def _plan_for_call(state, *, group, compression, plan, scope, W: int,
+                   ls: LocalSGDConfig, anchored: bool):
+    """Resolve one ``sync`` call to a (:class:`~repro.core.syncplan.
+    SyncPlan`, scope) pair.
 
-
-def resolve_comp_modes(compression, num_buckets: int, default: str):
-    """Per-bucket compression modes for one sync call.
-
-    ``compression`` is the runtime override the adaptive controller
-    passes through ``sync(..., compression=...)`` (a static argument —
-    each distinct mode tuple compiles once): ``None`` keeps the config
-    default, a single string applies to every bucket, a tuple gives one
-    mode per dtype bucket (resident path).
+    The modern call passes ``plan=`` (built once by
+    ``syncplan.make_sync_plan`` / ``launch.steps.build_train``) and a
+    ``scope``.  The legacy kwargs survive as a back-compat shim: a bare
+    ``sync(state)`` or ``sync(state, compression=...)`` silently builds
+    a flat plan per call (same modes, same collectives — trajectories
+    stay bitwise-identical), while ``sync(state, group=g)`` with
+    ``g != W`` is DEPRECATED and builds a ``hierarchical(g)`` plan whose
+    block stages reproduce the old grouped mean exactly.
     """
-    if compression is None:
-        modes = (default,) * num_buckets
-    elif isinstance(compression, str):
-        modes = (compression,) * num_buckets
-    else:
-        modes = tuple(compression)
-        if len(modes) != num_buckets:
-            raise ValueError(f"compression tuple has {len(modes)} entries "
-                             f"for {num_buckets} buckets")
-    bad = set(modes) - set(_COMP_MODES)
-    if bad:
-        raise ValueError(f"unknown compression mode(s) {sorted(bad)}")
-    return modes
+    if plan is not None:
+        if group is not None or compression is not None:
+            raise ValueError("pass either plan= or the legacy group=/"
+                             "compression= kwargs, not both; rewrite modes "
+                             "via plan.with_modes / PlanDelta")
+        return plan, (scope or "global")
+    g = group or W
+    if group is not None and g != W:
+        warnings.warn(
+            "sync(state, group=...) is deprecated; declare the topology "
+            "once via make_sync_plan(..., topology=hierarchical(group)) and "
+            "call sync(state, plan=plan, scope='block')",
+            DeprecationWarning, stacklevel=3)
+    layout = (state.params.layout if flatbuf.is_bucket_state(state.params)
+              else flatbuf.build_layout(state.params, leading=1))
+    topo = splan.hierarchical(g) if g != W else splan.flat()
+    p = splan.make_sync_plan(
+        layout, topology=topo,
+        compression=(compression if compression is not None
+                     else ls.sync_compression),
+        num_workers=W, wire_pack=ls.wire_pack, coalesce=ls.sync_coalesce,
+        anchored=anchored)
+    return p, ("block" if g != W else (scope or "global"))
 
 
 def _sumsq(x, *, from_axis: int = 0):
@@ -426,6 +531,7 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
                    wd_mask=None, use_kernel: bool = False,
                    packed_mean_fn: Callable | None = None,
                    packed_mean_flat_fn: Callable | None = None,
+                   packed_mean_coalesced_fn: Callable | None = None,
                    bucket_sync: bool = True, bucketable=None,
                    shard_classes=None,
                    resident: bool | None = None,
@@ -495,6 +601,7 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         return _make_resident_local_sgd(
             run, loss_fn, num_workers=W, wd_mask=wd_mask,
             packed_mean_flat_fn=packed_mean_flat_fn,
+            packed_mean_coalesced_fn=packed_mean_coalesced_fn,
             shard_classes=shard_classes,
             sharded=(packed_mean_flat_fn is not None if sharded is None
                      else sharded),
@@ -572,18 +679,35 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
         return new, metrics
 
     def sync(state: LocalSGDState, *, group: int | None = None,
-             compression=None) -> LocalSGDState:
-        """Average within worker groups; group=None => all W workers.
+             compression=None, plan=None, scope=None) -> LocalSGDState:
+        """Thin executor of a :class:`~repro.core.syncplan.SyncPlan`.
 
-        ``compression`` (static) overrides the config compressor for
-        this call — the controller's runtime escalation hook.  On the
-        tree path a single mode applies to the whole state (per-bucket
-        tuples are a resident-path feature); overrides require the
-        config to have allocated anchor/EF state.
+        The modern call is ``sync(state, plan=plan, scope=...)``; the
+        legacy ``group=`` / ``compression=`` kwargs build an equivalent
+        per-call plan (see :func:`_plan_for_call` — ``group != W`` is
+        deprecated).  The tree path dispatches whole-tree primitives —
+        its collectives are still one-per-sub-bucket under GSPMD via
+        the flat bus — so it honors the plan's topology/group/modes but
+        requires a UNIFORM compressor mode (per-bucket mode tuples are
+        a resident-path feature); overrides require the config to have
+        allocated anchor/EF state.
         """
-        g = group or W
-        mode = resolve_comp_modes(compression, 1, ls.sync_compression)[0]
-        record = telemetry and g == W
+        plan, scope_ = _plan_for_call(state, group=group,
+                                      compression=compression, plan=plan,
+                                      scope=scope, W=W, ls=ls,
+                                      anchored=needs_anchor(ls))
+        stages = plan.schedule(scope_)
+        g = next(s.group for s in stages if s.kind == "collective")
+        if scope_ == "global":
+            if len(set(plan.modes)) != 1:
+                raise ValueError(
+                    "the tree sync path supports a single compression mode "
+                    "for the whole state (per-bucket tuples are a "
+                    "resident-path feature)")
+            mode = plan.modes[0]
+        else:
+            mode = "none"
+        record = telemetry and scope_ == "global"
         if not needs_anchor(ls):
             if mode != "none":
                 raise ValueError(
@@ -734,6 +858,7 @@ def _bucket_noise(layout, gbs, rng, *, step, eta: float, gamma: float):
 def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                              num_workers: int, wd_mask=None,
                              packed_mean_flat_fn: Callable | None = None,
+                             packed_mean_coalesced_fn: Callable | None = None,
                              shard_classes=None,
                              sharded: bool = False, telemetry: bool = False,
                              speculate_compression: bool = False):
@@ -847,28 +972,46 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
         return new, metrics
 
     def sync(state: LocalSGDState, *, group: int | None = None,
-             compression=None) -> LocalSGDState:
-        """Average within worker groups, entirely in bucket form.
+             compression=None, plan=None, scope=None) -> LocalSGDState:
+        """Staged executor of a :class:`~repro.core.syncplan.SyncPlan`,
+        entirely in bucket form.
 
-        ``compression`` (static) overrides the config compressor — a
-        single mode or a PER-BUCKET tuple (see
-        :func:`resolve_comp_modes`): the ``auto_compress`` controller
-        escalates none -> sign -> ef_sign bucket by bucket as the
-        measured compression error allows.
+        The modern call is ``sync(state, plan=plan, scope=...)``; the
+        legacy ``group=`` / ``compression=`` kwargs build an equivalent
+        per-call plan (:func:`_plan_for_call` — ``group != W`` is
+        deprecated).  Stages run in the plan's declared order —
+        ``pack -> collective -> apply`` per sub-bucket, pipelined under
+        the ``overlap`` topology, with ``coalesced=True`` collective
+        stages sharing one payload gather per dtype — and every
+        ordering is a topological order of the same pure per-bucket
+        dataflow, so the trajectory is bitwise-identical across
+        topologies.  Per-bucket mode tuples (the ``auto_compress``
+        controller's none -> sign -> ef_sign escalation) arrive either
+        as the legacy ``compression=`` tuple or rewritten into the plan
+        via ``plan.with_modes`` / ``PlanDelta``.
         """
-        g = group or W
+        plan, scope_ = _plan_for_call(state, group=group,
+                                      compression=compression, plan=plan,
+                                      scope=scope, W=W, ls=ls,
+                                      anchored=needs_anchor(ls))
         layout = state.params.layout
         nb = layout.num_buckets
         pb = list(state.params.buckets)
-        record = telemetry and g == W
+        stages = plan.schedule(scope_)
+        record = telemetry and scope_ == "global"
+        modes = plan.modes if scope_ == "global" else ("none",) * nb
         if not needs_anchor(ls):
-            if any(m != "none"
-                   for m in resolve_comp_modes(compression, nb, "none")):
+            if any(m != "none" for m in modes):
                 raise ValueError(
                     "compression override needs an anchor: configure "
                     "sync_compression/global_momentum so the state "
                     "allocates one (needs_anchor)")
-            p = [group_mean(b, g) for b in pb]
+            p: list = [None] * nb
+            for st in stages:
+                if st.kind != "collective":
+                    continue
+                for b in st.buckets:
+                    p[b] = group_mean(pb[b], st.group)
             new_stats = state.stats
             if record:
                 # centered pre-/post-mean pair (see the tree-path sync):
@@ -886,8 +1029,8 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                                  step=state.step, rng=state.rng,
                                  stats=new_stats)
 
-        assert g == W, "compression / global momentum require flat local SGD"
-        modes = resolve_comp_modes(compression, nb, ls.sync_compression)
+        assert scope_ == "global", \
+            "compression / global momentum require flat local SGD"
         if "ef_sign" in modes and state.ef_memory is None:
             raise ValueError("ef_sign override requires the config to "
                              "allocate EF memory (sync_compression='ef_sign')")
@@ -898,50 +1041,74 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
         ef = state.ef_memory
         efb = list(ef.buckets) if ef is not None else None
         flat_fn = packed_mean_flat_fn or _packed_mean_flat_local
-        dbar = []
-        pre_w = jnp.zeros((W,), jnp.float32)
+        coal_fn = packed_mean_coalesced_fn or _packed_mean_coalesced_local
+        x = list(delta)                 # the synced quantity per bucket
+        dbar: list = [None] * nb
+        gub: list = [None] * nb
+        anchor_b: list = [None] * nb
         err = [jnp.float32(0.0)] * nb
         ref = [jnp.float32(0.0)] * nb
-        for b in range(nb):
-            d = delta[b]
-            x = d                                     # the synced quantity
-            if modes[b] == "sign":
-                x = comp.sign_compress_bucket(layout, b, d, leading=1,
-                                              kernel=comp_kernel)
-                if record:
-                    err[b] = _sumsq(d.astype(jnp.float32) - x)
+        for st in stages:
+            if st.kind == "pack":
+                b = st.buckets[0]       # pack stages carry one sub-bucket
+                d = delta[b]
+                if modes[b] != "none":
+                    x[b], e_new, inp = comp.compress_stage(
+                        layout, st, d, efb[b] if efb is not None else None,
+                        leading=1, kernel=comp_kernel)
+                    if modes[b] == "ef_sign":
+                        efb[b] = e_new
+                    if record:
+                        # the compressor residual input - output (for EF
+                        # this IS the new memory e')
+                        err[b] = _sumsq(inp.astype(jnp.float32) - x[b])
+                        ref[b] = _sumsq(inp)
+                elif record and speculate_compression:
+                    # measure the WOULD-BE sign error so auto_compress
+                    # can decide when to start compressing this bucket
+                    cs = comp.sign_compress_bucket(layout, b, d, leading=1,
+                                                   kernel=comp_kernel)
+                    err[b] = _sumsq(d.astype(jnp.float32) - cs)
                     ref[b] = _sumsq(d)
-            elif modes[b] == "ef_sign":
-                x, e_new, inp = comp.ef_compress_bucket(layout, b, d, efb[b],
-                                                        leading=1,
-                                                        kernel=comp_kernel)
-                efb[b] = e_new
-                if record:
-                    # EF residual e' = input - output IS the error
-                    err[b] = _sumsq(e_new)
-                    ref[b] = _sumsq(inp)
-            elif record and speculate_compression:
-                # measure the WOULD-BE sign error so auto_compress can
-                # decide when to start compressing this bucket
-                cs = comp.sign_compress_bucket(layout, b, d, leading=1,
-                                               kernel=comp_kernel)
-                err[b] = _sumsq(d.astype(jnp.float32) - cs)
-                ref[b] = _sumsq(d)
-            if modes[b] != "none" and ls.wire_pack:
-                db = flat_fn(x, layout, b)
-                # the 1-bit unpack emits sign(+1)*scale in padding
-                # slots; re-mask so padding-is-zero survives the round
-                db = flatbuf.mask_padding(layout, b, db)
-            else:
-                db = x.mean(axis=0)
-            if record:
-                pre_w = pre_w + _sumsq(x, from_axis=1)
-            dbar.append(db)
+            elif st.kind == "collective":
+                wire = [b for b in st.buckets
+                        if modes[b] != "none" and ls.wire_pack]
+                if st.coalesced and len(wire) == len(st.buckets) > 1:
+                    outs = coal_fn([x[b] for b in st.buckets], layout,
+                                   st.buckets)
+                    for b, db in zip(st.buckets, outs, strict=True):
+                        # the 1-bit unpack emits sign(+1)*scale in padding
+                        # slots; re-mask so padding-is-zero survives
+                        dbar[b] = flatbuf.mask_padding(layout, b, db)
+                    continue
+                for b in st.buckets:
+                    if modes[b] != "none" and ls.wire_pack:
+                        db = flat_fn(x[b], layout, b)
+                        dbar[b] = flatbuf.mask_padding(layout, b, db)
+                    else:
+                        dbar[b] = x[b].mean(axis=0)
+            elif st.kind == "apply":
+                for b in st.buckets:
+                    if ls.global_momentum > 0:
+                        gub[b] = (ls.global_momentum * state.global_u.buckets[b]
+                                  + dbar[b])
+                        step_b = gub[b]
+                    else:
+                        step_b = dbar[b]
+                    anchor_b[b] = (ab[b].astype(jnp.float32)
+                                   - step_b.astype(jnp.float32)
+                                   ).astype(ab[b].dtype)
         if ef is not None:
             ef = ef.with_buckets(efb)
 
         new_stats = state.stats
         if record:
+            # accumulated in bucket order AFTER the stage loop, so the
+            # float summation order is topology-invariant (and equals
+            # the pre-plan executor's in-loop accumulation)
+            pre_w = jnp.zeros((W,), jnp.float32)
+            for b in range(nb):
+                pre_w = pre_w + _sumsq(x[b], from_axis=1)
             pre = pre_w.mean()
             post = sum(_sumsq(d) for d in dbar)
             kw = {}
@@ -953,14 +1120,7 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
 
         gu = state.global_u
         if ls.global_momentum > 0:
-            gub = [ls.global_momentum * ug + d
-                   for ug, d in zip(gu.buckets, dbar, strict=True)]
             gu = gu.with_buckets(gub)
-            step_b = gub
-        else:
-            step_b = dbar
-        anchor_b = [(a.astype(jnp.float32) - s.astype(jnp.float32)).astype(a.dtype)
-                    for a, s in zip(ab, step_b, strict=True)]
         p = [jnp.broadcast_to(a[None], (W,) + a.shape) for a in anchor_b]
         return LocalSGDState(params=state.params.with_buckets(p),
                              momentum=state.momentum,

@@ -1,0 +1,497 @@
+"""SyncPlan: the staged, topology-aware sync-pipeline API (ISSUE 5).
+
+The paper's whole subject is the communication/performance trade-off of
+local SGD, and its hierarchical variant (Alg. 5) makes the sync
+*topology* — block-level vs global averaging — a first-class design
+axis.  Until this module, sync was one opaque closure
+(``sync(state, group=, compression=)``) and the round loop in
+``launch/train.fit`` was hardcoded around it.  A :class:`SyncPlan` makes
+the communication schedule an explicit, inspectable object:
+
+* :func:`make_sync_plan` compiles the per-(dtype, sharding-class)
+  sub-bucket sync (``core/flatbuf``) into an ordered tuple of
+  :class:`SyncStage` s — ``pack -> collective(s) -> unpack/apply`` —
+  each carrying its sub-bucket ids, compressor mode, per-device
+  wire-byte estimate (the same ring model as
+  ``telemetry.analytic_sync_cost``), and the mesh axes its collective
+  reduces over.
+* :class:`Topology` declares WHERE the averages run: ``flat()`` is one
+  global mean over all W workers; ``hierarchical(block_size)``
+  reproduces Alg. 5 as block-mean (scope ``"block"``) then global-mean
+  (scope ``"global"``) stage sets — with ``worker_axes = ('pod',
+  'data')`` the block stages ride intra-pod ICI and the global stages
+  the inter-pod links; ``overlap()`` keeps flat semantics but orders
+  the global stages software-pipelined, issuing bucket b's collective
+  BEFORE bucket b-1's apply so XLA's latency-hiding scheduler can run
+  the gather of one bucket under the optimizer/anchor math of the
+  previous one (the ROADMAP sync/compute-overlap item).
+* ``coalesce=True`` merges the wire-packed payloads of same-dtype
+  sub-buckets of DIFFERENT sharding classes into one collective stage:
+  their packed uint8 rows concatenate shard-locally, so the plan does
+  one payload gather (+ one scale gather) per dtype, not per class
+  (the multi-class wire-pack ROADMAP item).  Dense (uncompressed)
+  stages are never coalesced — a dense merge would be a real copy, not
+  a free concat of already-materialized packed payloads.
+* :class:`PlanDelta` is the controller actuator surface
+  (``core/controller``): policies emit one delta per round — next H,
+  per-stage compressor modes, a topology switch, the batch scale —
+  and ``delta.apply(plan)`` derives the next round's plan.  An empty
+  delta returns the SAME plan object, so the ``static`` policy stays
+  bitwise-identical through ``fit`` by construction.
+
+Both sync paths in ``core/local_sgd`` (tree and resident) are thin
+executors of a plan; the legacy ``sync(state, group=g, compression=c)``
+kwargs survive as a deprecation shim that builds a ``hierarchical(g)``
+(or ``flat``) plan per call, so every pre-plan trajectory is reproduced
+bitwise.  Ordering is semantics-free by construction: every stage
+ordering a topology may emit is a topological order of the same pure
+dataflow (pack_b -> collective_b -> apply_b per bucket), so flat and
+overlap plans produce bit-identical states and differ only in the
+declared issue order handed to the XLA scheduler.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import numpy as np
+
+from repro.core.flatbuf import LANE
+from repro.roofline.hlo import _ring_bytes
+
+_COMP_MODES = ("none", "sign", "ef_sign")
+
+
+def resolve_comp_modes(compression, num_buckets: int, default: str):
+    """Per-bucket compression modes for one plan / one sync call.
+
+    ``compression`` is ``None`` (keep the config default), a single
+    mode string (applies to every sub-bucket), or a per-bucket tuple —
+    a length-1 tuple broadcasts (the tree path's single logical mode).
+    """
+    if compression is None:
+        modes = (default,) * num_buckets
+    elif isinstance(compression, str):
+        modes = (compression,) * num_buckets
+    else:
+        modes = tuple(compression)
+        if len(modes) == 1:
+            modes = modes * num_buckets
+        if len(modes) != num_buckets:
+            raise ValueError(f"compression tuple has {len(modes)} entries "
+                             f"for {num_buckets} buckets")
+    bad = set(modes) - set(_COMP_MODES)
+    if bad:
+        raise ValueError(f"unknown compression mode(s) {sorted(bad)}")
+    return modes
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Topology:
+    """Where the sync averages run (static, hashable).
+
+    ``kind``       — ``"flat"`` | ``"hierarchical"`` | ``"overlap"``
+    ``block_size`` — workers per block for the hierarchical inner mean
+                     (Alg. 5); 0 = no block level.
+    """
+    kind: str = "flat"
+    block_size: int = 0
+
+    @property
+    def has_block(self) -> bool:
+        return self.block_size > 0 and self.kind in ("hierarchical", "overlap")
+
+    def describe(self) -> str:
+        if self.has_block:
+            return f"{self.kind}(block_size={self.block_size})"
+        return self.kind
+
+
+def flat() -> Topology:
+    """One global mean over all W workers (Alg. 1)."""
+    return Topology("flat")
+
+
+def hierarchical(block_size: int) -> Topology:
+    """Alg. 5: block-mean stages (scope ``"block"``) + global stages."""
+    if block_size < 1:
+        raise ValueError(f"hierarchical block_size must be >= 1, "
+                         f"got {block_size}")
+    return Topology("hierarchical", int(block_size))
+
+
+def overlap(block_size: int = 0) -> Topology:
+    """Flat semantics, software-pipelined global ordering: bucket b's
+    collective is issued before bucket b-1's apply, so the collective of
+    one bucket can run under the optimizer/anchor math of the previous
+    one (and the last collective under the first local forward)."""
+    return Topology("overlap", int(block_size))
+
+
+def default_block_size(num_workers: int, worker_axes=()) -> int:
+    """The trainer's default Alg. 5 blocking: pods if the layout spans a
+    ``pod`` worker axis, else two blocks of consecutive workers (the
+    paper's two-pod Figure 17 mapping)."""
+    blocks = 2 if num_workers >= 2 else 1
+    del worker_axes  # pod-count introspection rides num_workers today
+    return max(num_workers // blocks, 1)
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SyncStage:
+    """One step of the sync pipeline (static, hashable).
+
+    ``kind``        — ``"pack"`` (form + compress the per-worker delta),
+                      ``"collective"`` (move it over the wire),
+                      ``"apply"`` (unpack/average consume: global
+                      momentum, anchor update, broadcast).
+    ``scope``       — ``"block"`` (Alg. 5 inner mean) | ``"global"``.
+    ``buckets``     — flatbuf sub-bucket ids this stage touches.
+    ``compression`` — compressor mode of the payload (pack/collective).
+    ``group``       — workers averaged together (block_size or W).
+    ``reduce_axes`` — mesh axes the collective reduces/gathers over
+                      (the layout's worker axes; () when meshless).
+    ``wire_bytes``  — per-device ring-model estimate of the collective.
+    ``collectives`` — collectives this stage launches (0 for pack/apply).
+    ``coalesced``   — True when several same-dtype sub-buckets share
+                      this stage's payload gather.
+    """
+    kind: str
+    scope: str
+    buckets: tuple[int, ...]
+    compression: str = "none"
+    group: int = 0
+    reduce_axes: tuple[str, ...] = ()
+    wire_bytes: float = 0.0
+    collectives: int = 0
+    coalesced: bool = False
+
+
+def _bucket_gather_bytes(layout, b: int, group: int) -> tuple[float, float]:
+    """(payload, scales) result bytes of one wire-packed bucket gather —
+    shard-local rows per device, matching ``make_packed_mean_flat``."""
+    rows = layout.bucket_local_rows(b)
+    payload = group * rows * (LANE // 8)                 # uint8, 8 signs/byte
+    scales = group * len(layout.bucket_slots(b)) * 4     # one f32 scale/leaf
+    return float(payload), float(scales)
+
+
+def _collective_stage(layout, buckets: tuple[int, ...], *, scope: str,
+                      group: int, mode: str, wire_pack: bool,
+                      reduce_axes) -> SyncStage:
+    """Price one collective stage with the same ring formulas as
+    ``telemetry.analytic_sync_cost`` (tested to agree)."""
+    n = max(int(group), 1)
+    if mode != "none" and wire_pack:
+        payload = scales = 0.0
+        for b in buckets:
+            p, s = _bucket_gather_bytes(layout, b, n)
+            payload += p
+            scales += s
+        total = (_ring_bytes("all-gather", payload, n)
+                 + _ring_bytes("all-gather", scales, n))
+        return SyncStage(kind="collective", scope=scope, buckets=buckets,
+                         compression=mode, group=n, reduce_axes=reduce_axes,
+                         wire_bytes=total, collectives=2,
+                         coalesced=len(buckets) > 1)
+    assert len(buckets) == 1, "dense stages are never coalesced"
+    b = buckets[0]
+    itemsize = (4 if mode != "none"
+                else np.dtype(layout.bucket_dtypes[b]).itemsize)
+    bytes_ = _ring_bytes("all-reduce",
+                         layout.bucket_local_rows(b) * LANE * itemsize, n)
+    return SyncStage(kind="collective", scope=scope, buckets=buckets,
+                     compression=mode, group=n, reduce_axes=reduce_axes,
+                     wire_bytes=bytes_, collectives=1)
+
+
+def _global_groups(layout, modes, wire_pack: bool, coalesce: bool):
+    """Partition bucket ids into collective groups.  With ``coalesce``,
+    wire-packed buckets sharing a dtype share one group (one payload
+    gather per dtype, not per sharding class); dense buckets always ride
+    alone.  Groups keep first-appearance bucket order."""
+    nb = layout.num_buckets
+    if not coalesce:
+        return [(b,) for b in range(nb)]
+    groups: list[list[int]] = []
+    by_dtype: dict[str, list[int]] = {}
+    for b in range(nb):
+        if modes[b] != "none" and wire_pack:
+            key = layout.bucket_dtypes[b]
+            if key in by_dtype:
+                by_dtype[key].append(b)
+                continue
+            by_dtype[key] = grp = [b]
+            groups.append(grp)
+        else:
+            groups.append([b])
+    return [tuple(g) for g in groups]
+
+
+def _compile_stages(layout, topology: Topology, modes, *, num_workers: int,
+                    wire_pack: bool, coalesce: bool, anchored: bool,
+                    worker_axes) -> tuple[SyncStage, ...]:
+    stages: list[SyncStage] = []
+    nb = layout.num_buckets
+    wa = tuple(worker_axes or ())
+
+    if topology.has_block:
+        # Alg. 5 inner mean: one dense block mean per sub-bucket (the
+        # block level never compresses — compression needs the global
+        # anchor), then one trivial apply covering the whole state.
+        for b in range(nb):
+            stages.append(_collective_stage(layout, (b,), scope="block",
+                                            group=topology.block_size,
+                                            mode="none", wire_pack=False,
+                                            reduce_axes=wa))
+        stages.append(SyncStage(kind="apply", scope="block",
+                                buckets=tuple(range(nb)),
+                                group=topology.block_size))
+
+    groups = _global_groups(layout, modes, wire_pack, coalesce)
+
+    def triple(grp):
+        packs = [SyncStage(kind="pack", scope="global", buckets=(b,),
+                           compression=modes[b], group=num_workers)
+                 for b in grp] if anchored else []
+        mode = modes[grp[0]]
+        coll = _collective_stage(layout, grp, scope="global",
+                                 group=num_workers, mode=mode,
+                                 wire_pack=wire_pack, reduce_axes=wa)
+        applies = [SyncStage(kind="apply", scope="global", buckets=(b,),
+                             group=num_workers) for b in grp]
+        return packs, coll, applies
+
+    triples = [triple(g) for g in groups]
+    if topology.kind == "overlap":
+        # software pipeline: issue group i's collective, THEN apply
+        # group i-1 — the collective is in flight while the previous
+        # group's apply math runs.
+        pending: list[SyncStage] = []
+        for packs, coll, applies in triples:
+            stages.extend(packs)
+            stages.append(coll)
+            stages.extend(pending)
+            pending = applies
+        stages.extend(pending)
+    else:
+        for packs, coll, applies in triples:
+            stages.extend(packs)
+            stages.append(coll)
+            stages.extend(applies)
+    return tuple(stages)
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SyncPlan:
+    """A compiled, static (hashable — jit-static-arg-safe) sync schedule.
+
+    ``layout`` is the per-worker ``flatbuf.FlatLayout`` of the synced
+    state; ``modes`` the current per-sub-bucket compressor (the
+    controller's :class:`PlanDelta` rewrites it between rounds);
+    ``stages`` the compiled schedule for BOTH scopes — executors run
+    ``schedule(scope)`` in order.
+    """
+    layout: Any
+    topology: Topology
+    modes: tuple[str, ...]
+    num_workers: int
+    wire_pack: bool = False
+    coalesce: bool = False
+    anchored: bool = False
+    worker_axes: tuple[str, ...] = ()
+    stages: tuple[SyncStage, ...] = ()
+
+    @property
+    def num_buckets(self) -> int:
+        return self.layout.num_buckets
+
+    def schedule(self, scope: str = "global") -> tuple[SyncStage, ...]:
+        out = tuple(s for s in self.stages if s.scope == scope)
+        if not out:
+            raise ValueError(f"plan has no {scope!r} stages "
+                             f"(topology={self.topology.describe()})")
+        return out
+
+    def scope_cost(self, scope: str = "global"):
+        """(per-device wire bytes, collective count) of one ``scope``
+        round — the sum of the stage estimates the ledger prices from."""
+        st = self.schedule(scope)
+        return (sum(s.wire_bytes for s in st),
+                sum(s.collectives for s in st))
+
+    # -- controller actuators -------------------------------------------
+    def with_modes(self, compression) -> "SyncPlan":
+        """Recompile with new per-stage compressor modes.  ``None``
+        returns ``self`` unchanged (the static policy's no-op)."""
+        if compression is None:
+            return self
+        modes = resolve_comp_modes(compression, self.num_buckets,
+                                   self.modes[0] if self.modes else "none")
+        if modes == self.modes:
+            return self
+        return _recompile(self, modes=modes)
+
+    def with_topology(self, topology: Topology | None) -> "SyncPlan":
+        if topology is None or topology == self.topology:
+            return self
+        return _recompile(self, topology=topology)
+
+    def describe(self, scope: str | None = None) -> str:
+        """Human-readable stage table (the examples print this)."""
+        rows = [f"SyncPlan topology={self.topology.describe()} "
+                f"buckets={self.num_buckets} modes={'|'.join(self.modes)} "
+                f"coalesce={self.coalesce} wire_pack={self.wire_pack}"]
+        stages = self.stages if scope is None else self.schedule(scope)
+        for i, s in enumerate(stages):
+            extra = ""
+            if s.kind == "collective":
+                extra = (f" wire_bytes={s.wire_bytes:.0f} "
+                         f"collectives={s.collectives}"
+                         + (" coalesced" if s.coalesced else ""))
+            rows.append(f"  [{i:2d}] {s.scope:6s} {s.kind:10s} "
+                        f"buckets={list(s.buckets)} mode={s.compression} "
+                        f"group={s.group}{extra}")
+        return "\n".join(rows)
+
+
+def _recompile(plan: SyncPlan, **changes) -> SyncPlan:
+    plan = replace(plan, **changes)
+    stages = _compile_stages(plan.layout, plan.topology, plan.modes,
+                             num_workers=plan.num_workers,
+                             wire_pack=plan.wire_pack,
+                             coalesce=plan.coalesce, anchored=plan.anchored,
+                             worker_axes=plan.worker_axes)
+    return replace(plan, stages=stages)
+
+
+def make_sync_plan(source, *, topology: Topology | None = None,
+                   compression=None, coalesce: bool | None = None,
+                   num_workers: int | None = None,
+                   wire_pack: bool | None = None, worker_axes=None,
+                   anchored: bool | None = None) -> SyncPlan:
+    """Compile a :class:`SyncPlan`.
+
+    ``source`` is either a ``flatbuf.FlatLayout`` of the synced state
+    (plus explicit kwargs) or a ``launch.steps.TrainBundle`` — then the
+    run config, param specs, and mesh layout fill every default, and
+    per-kwarg overrides still apply:
+
+        plan = make_sync_plan(bundle, topology=hierarchical(4))
+
+    ``topology=None`` resolves the config's ``sync_topology`` (``auto``:
+    ``hierarchical(W / 2)`` when ``block_steps > 1``, else ``flat``).
+    ``compression`` follows :func:`resolve_comp_modes` (None = the
+    config's ``sync_compression``).  ``anchored`` marks whether the sync
+    consumes a model-difference delta against the global anchor
+    (``local_sgd.needs_anchor``) and therefore has pack stages.
+    """
+    run = getattr(source, "run", None)
+    if run is not None:                       # TrainBundle (duck-typed)
+        import jax.numpy as jnp
+
+        from repro.core import flatbuf
+        from repro.core.local_sgd import needs_anchor
+        from repro.models import base as mbase
+
+        ls = run.local_sgd
+        mesh_layout = source.layout
+        shard_cls = (flatbuf.shard_classes(source.specs, mesh_layout)
+                     if mesh_layout is not None else None)
+        layout = flatbuf.build_layout(
+            mbase.abstract(source.specs, jnp.dtype(run.model.param_dtype)),
+            wd_mask=mbase.norm_param_mask(source.specs),
+            shard_classes=shard_cls)
+        num_workers = source.num_workers if num_workers is None else num_workers
+        wire_pack = ls.wire_pack if wire_pack is None else wire_pack
+        coalesce = (getattr(ls, "sync_coalesce", False) if coalesce is None
+                    else coalesce)
+        if compression is None:
+            compression = ls.sync_compression
+        if worker_axes is None and mesh_layout is not None:
+            worker_axes = mesh_layout.worker_axes
+        if anchored is None:
+            anchored = needs_anchor(ls)
+        if topology is None:
+            topology = resolve_topology(ls, num_workers,
+                                        worker_axes=worker_axes or ())
+    else:
+        layout = source
+        if num_workers is None:
+            raise ValueError("make_sync_plan(layout, ...) requires "
+                             "num_workers")
+        topology = topology or flat()
+        wire_pack = bool(wire_pack)
+        coalesce = bool(coalesce)
+
+    modes = resolve_comp_modes(compression, layout.num_buckets, "none")
+    if anchored is None:
+        anchored = any(m != "none" for m in modes)
+    plan = SyncPlan(layout=layout, topology=topology, modes=modes,
+                    num_workers=int(num_workers), wire_pack=bool(wire_pack),
+                    coalesce=bool(coalesce), anchored=bool(anchored),
+                    worker_axes=tuple(worker_axes or ()))
+    return _recompile(plan)
+
+
+def resolve_topology(ls, num_workers: int, *, worker_axes=()) -> Topology:
+    """Map a ``LocalSGDConfig`` to its declared :class:`Topology`.
+
+    ``sync_topology='auto'``: ``hierarchical(default_block_size)`` when
+    ``block_steps > 1`` (the Alg. 5 trainer needs block stages), else
+    ``flat``.  An explicit ``'flat'`` with ``block_steps > 1`` is a
+    config contradiction and raises.
+    """
+    kind = getattr(ls, "sync_topology", "auto")
+    bs = default_block_size(num_workers, worker_axes)
+    if kind == "auto":
+        return hierarchical(bs) if ls.block_steps > 1 else flat()
+    if kind == "flat":
+        if ls.block_steps > 1:
+            raise ValueError("sync_topology='flat' cannot serve "
+                             "block_steps > 1 (Alg. 5 needs block stages); "
+                             "use 'auto', 'hierarchical', or 'overlap'")
+        return flat()
+    if kind == "hierarchical":
+        return hierarchical(bs)
+    if kind == "overlap":
+        return overlap(bs if ls.block_steps > 1 else 0)
+    raise ValueError(f"unknown sync_topology {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Controller actuator surface
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlanDelta:
+    """One round's controller decision (core/controller policies emit
+    one per global sync round; ``launch/train.fit`` applies it).
+
+    ``h``           — local steps H for the NEXT round (None = keep).
+    ``compression`` — per-stage compressor rewrite for the plan
+                      (None = keep; str broadcasts; tuple per bucket).
+    ``topology``    — switch the plan's :class:`Topology` (None = keep).
+    ``batch_scale`` — per-worker batch multiplier (None = keep).
+    """
+    h: int | None = None
+    compression: Any = None
+    topology: Topology | None = None
+    batch_scale: int | None = None
+
+    def apply(self, plan: SyncPlan) -> SyncPlan:
+        """Derive the next round's plan.  An empty delta returns the
+        SAME object — the static policy cannot perturb the schedule."""
+        return plan.with_modes(self.compression).with_topology(self.topology)

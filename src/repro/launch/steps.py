@@ -46,6 +46,7 @@ class TrainBundle:
     telemetry: bool = False     # state carries a StatsAccumulator
     n_comp: int = 1             # compression-error slots (sub-buckets)
     sync_lower: Any = None      # mesh only: lower sync for HLO ledger costs
+    sync_plan: Any = None       # compiled syncplan.SyncPlan (fit's default)
 
 
 def _stats_partition_specs(layout: MeshLayout):
@@ -143,12 +144,15 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
     # non-resident tree path still routes sharded leaves per-leaf
     # (its on-the-fly layouts are replicated).
     from repro.core import flatbuf
-    from repro.core.local_sgd import (make_packed_mean, make_packed_mean_flat,
-                                      pack_axes_tree)
+    from repro.core import syncplan as splan
+    from repro.core.local_sgd import (make_packed_mean,
+                                      make_packed_mean_coalesced,
+                                      make_packed_mean_flat, pack_axes_tree)
     bucketable = None
     shard_cls = None
     pm = None
     pm_flat = None
+    pm_coal = None
     if mesh is not None and layout is not None:
         lay_m = layout
         shard_cls = flatbuf.shard_classes(specs, lay_m)
@@ -162,6 +166,10 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                 pm = (make_packed_mean(mesh, layout.worker_axes),
                       pack_axes_tree(specs, lay_m))
             pm_flat = make_packed_mean_flat(mesh, layout.worker_axes)
+            if run.local_sgd.sync_coalesce:
+                # one payload gather per dtype, not per sharding class
+                # (executed by the plan's coalesced collective stages)
+                pm_coal = make_packed_mean_coalesced(mesh, layout.worker_axes)
 
     # Resident bucket state rides the kernel flag for EVERY layout:
     # within-worker-sharded leaves live in their own sharded sub-bucket
@@ -178,6 +186,7 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                                             wd_mask=wd_mask, use_kernel=use_kernel,
                                             packed_mean_fn=pm,
                                             packed_mean_flat_fn=pm_flat,
+                                            packed_mean_coalesced_fn=pm_coal,
                                             bucketable=bucketable,
                                             shard_classes=shard_cls,
                                             resident=resident,
@@ -196,6 +205,13 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
                          specs=specs, init=init, local_step=local_step, sync=sync,
                          telemetry=telemetry, n_comp=n_comp)
+    # the bundle's compiled SyncPlan: topology from the config
+    # (auto = hierarchical blocks iff block_steps > 1), per-sub-bucket
+    # modes from sync_compression, coalesce from sync_coalesce.  fit
+    # executes this plan (and lets the controller rewrite it via
+    # PlanDelta); the legacy group=/compression= kwargs remain as a
+    # per-call shim in core/local_sgd.
+    bundle.sync_plan = splan.make_sync_plan(bundle)
 
     if mesh is not None and jit:
         sspec = state_partition_specs(specs, layout, run, resident=resident,
@@ -208,18 +224,22 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         bundle.local_step = jax.jit(local_step, in_shardings=(ssh, bsh),
                                     out_shardings=(ssh, None))
         # pjit rejects kwargs once in_shardings is given (jax 0.4.x), so
-        # jit a positional adapter for the static (group, compression)
-        # args and keep the kwarg interface fit expects; the raw jitted
-        # object rides along so fit can .lower() the sync for the
-        # HLO-measured ledger costs.
+        # jit a positional adapter for the static (group, compression,
+        # plan, scope) args — SyncPlan is frozen/hashable, so each
+        # distinct plan compiles once — and keep the kwarg interface
+        # fit expects; the raw jitted object rides along so fit can
+        # .lower() the sync for the HLO-measured ledger costs.
         jsync = jax.jit(
-            lambda s, group, compression: sync(s, group=group,
-                                               compression=compression),
-            static_argnums=(1, 2), in_shardings=(ssh,), out_shardings=ssh)
-        bundle.sync = (lambda s, *, group=None, compression=None:
-                       jsync(s, group, compression))
-        bundle.sync_lower = (lambda s, *, group=None, compression=None:
-                             jsync.lower(s, group, compression))
+            lambda s, group, compression, plan, scope: sync(
+                s, group=group, compression=compression, plan=plan,
+                scope=scope),
+            static_argnums=(1, 2, 3, 4), in_shardings=(ssh,),
+            out_shardings=ssh)
+        bundle.sync = (lambda s, *, group=None, compression=None, plan=None,
+                       scope=None: jsync(s, group, compression, plan, scope))
+        bundle.sync_lower = (lambda s, *, group=None, compression=None,
+                             plan=None, scope=None:
+                             jsync.lower(s, group, compression, plan, scope))
     return bundle
 
 

@@ -28,6 +28,7 @@ import numpy as np
 from repro import configs
 from repro import telemetry as tele
 from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
+from repro.core import syncplan as splan
 from repro.core.controller import RoundReport, make_controller
 from repro.core.schedule import DynamicSchedule
 from repro.data.partition import ShardedBatches
@@ -77,46 +78,62 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     sched = DynamicSchedule(ls, controller.h_at)
     ledger = tele.CommsLedger()
     cost_cache: dict = {}
-    slayout = _sync_layout(state)
+    # the round plan: built once by build_train (bundle.sync_plan) or —
+    # for hand-made bundles — compiled here from the state's own bucket
+    # layout with the config's declared topology.  The controller
+    # rewrites it between rounds via PlanDelta.
+    plan = bundle.sync_plan
+    if plan is None:
+        from repro.core.local_sgd import needs_anchor
+        plan = splan.make_sync_plan(
+            _sync_layout(state),
+            topology=splan.resolve_topology(
+                ls, bundle.num_workers,
+                worker_axes=(bundle.layout.worker_axes
+                             if bundle.layout is not None else ())),
+            compression=ls.sync_compression, num_workers=bundle.num_workers,
+            wire_pack=ls.wire_pack, coalesce=ls.sync_coalesce,
+            worker_axes=(bundle.layout.worker_axes
+                         if bundle.layout is not None else ()),
+            anchored=needs_anchor(ls))
     # abstract avals of the state, for lowering sync in the ledger cost
     # path — holding the concrete init state alive here would pin a
     # second full optimizer state in device memory for the whole run
     state_avals = jax.eval_shape(lambda s: s, state)
 
-    def sync_cost(group, modes):
-        """Per-round ledger cost: the analytic ring model everywhere,
-        upgraded to the MEASURED (HLO-parsed) cost of the compiled sync
-        when a mesh is present — and cross-checked against the analytic
-        model, since a large deviation means the lowering moved bytes
-        the ring model didn't predict (e.g. a stray dense gather)."""
-        key = (group, modes)
+    def measured_cost(p, scope):
+        """Ledger pricing: stage rows come from the plan's ring-model
+        estimates; on a mesh the compiled sync's HLO supplies the
+        MEASURED round total (tele.hlo_sync_cost) — cross-checked
+        against the plan estimate, since a large deviation means the
+        lowering moved bytes the plan didn't predict (e.g. a stray
+        dense gather).  Returns the HLO SyncCost or None (analytic)."""
+        key = (p, scope)
         if key not in cost_cache:
-            cost = analytic = tele.analytic_sync_cost(
-                slayout, group=group or bundle.num_workers, modes=modes,
-                wire_pack=ls.wire_pack)
+            cost = None
             if mesh is not None and bundle.sync_lower is not None:
+                est_bytes, _ = p.scope_cost(scope)
                 try:
-                    # one extra sync compile per (group, modes) key
+                    # one extra sync compile per (plan, scope) key
                     # (cached); executing this AOT object instead of the
                     # jitted sync would drop jit's auto-resharding of
                     # host-resident init arrays, so the dispatch path
                     # keeps its own compile
                     with mesh:
-                        txt = (bundle.sync_lower(state_avals, group=group,
-                                                 compression=modes)
+                        txt = (bundle.sync_lower(state_avals, plan=p,
+                                                 scope=scope)
                                .compile().as_text())
                     cost = tele.hlo_sync_cost(txt)
                 except Exception as e:       # lowering quirks: keep analytic
                     log(f"ledger: hlo sync cost unavailable ({e!r}); "
-                        "using analytic ring model")
+                        "using the plan's ring-model estimates")
                 else:
-                    ratio = (cost.bytes_on_wire
-                             / max(analytic.bytes_on_wire, 1.0))
-                    if not 1 / 3 <= ratio <= 3 and analytic.bytes_on_wire:
+                    ratio = cost.bytes_on_wire / max(est_bytes, 1.0)
+                    if not 1 / 3 <= ratio <= 3 and est_bytes:
                         log(f"ledger: measured sync bytes "
                             f"{cost.bytes_on_wire:.3g} deviate from the "
-                            f"analytic ring model "
-                            f"{analytic.bytes_on_wire:.3g} (x{ratio:.2f})")
+                            f"plan's ring-model estimate "
+                            f"{est_bytes:.3g} (x{ratio:.2f})")
             cost_cache[key] = cost
         return cost_cache[key]
 
@@ -133,27 +150,20 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
             level = sched.advance(t)
             synced = ""
             if level == 1:
-                group = bundle.num_workers // max(1, _num_blocks(bundle))
-                state = bundle.sync(state, group=group)
-                ledger.record(step=t, level=1, h=h_now,
-                              cost=sync_cost(group, None))
+                state = bundle.sync(state, plan=plan, scope="block")
+                ledger.record_plan(step=t, level=1, h=h_now, plan=plan,
+                                   scope="block",
+                                   measured=measured_cost(plan, "block"))
                 comm_rounds["block"] += 1
                 synced = "block"
             elif level == 2:
-                modes = controller.compression()
-                if modes is None:
-                    state = bundle.sync(state)
-                else:
-                    state = bundle.sync(state, compression=modes)
+                # the plan already carries last round's PlanDelta
+                # (compressor modes / topology) — no loose kwargs
+                state = bundle.sync(state, plan=plan, scope="global")
                 global_rounds += 1
-                # modes=None means the sync ran the CONFIG compressor —
-                # price the wire accordingly, not as a dense mean
-                cost_modes = modes if modes is not None \
-                    else ls.sync_compression
-                entry = ledger.record(
-                    step=t, level=2, h=h_now,
-                    cost=sync_cost(None, cost_modes),
-                    compression=cost_modes,
+                entry = ledger.record_plan(
+                    step=t, level=2, h=h_now, plan=plan, scope="global",
+                    measured=measured_cost(plan, "global"),
                     batch_scale=controller.batch_scale())
                 comm_rounds["global"] += 1
                 synced = "global"
@@ -165,16 +175,24 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                     wire_bytes=entry["bytes_on_wire"],
                     collectives=entry["collectives"])
                 controller.update(report)
+                delta = controller.plan_delta(t + 1)
+                plan = delta.apply(plan)
                 if tlog is not None:
+                    # None delta fields mean "keep": log the effective
+                    # next decision, not the literal None
                     rec = {"round": report.round, "step": t, "h": h_now,
                            "loss": report.loss, **report.stats,
                            "wire_bytes": report.wire_bytes,
                            "collectives": report.collectives,
                            "cum_wire_bytes": ledger.total_bytes(),
-                           "next_h": int(controller.h_at(t + 1)),
-                           "next_compression": _mode_str(
-                               controller.compression()),
-                           "next_batch_scale": controller.batch_scale()}
+                           "next_h": int(delta.h if delta.h is not None
+                                         else controller.h_at(t + 1)),
+                           "next_compression": _mode_str(delta.compression),
+                           "next_batch_scale": int(
+                               delta.batch_scale
+                               if delta.batch_scale is not None
+                               else controller.batch_scale()),
+                           "topology": plan.topology.describe()}
                     tlog.write(json.dumps(rec) + "\n")
                     tlog.flush()
             rec = {k: float(v) for k, v in metrics.items()}
@@ -191,6 +209,7 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
             tlog.close()
     wall = time.time() - t_start
     summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps,
+               "topology": plan.topology.describe(),
                "ledger": ledger.summary(),
                "controller": {"kind": getattr(controller, "kind", "custom"),
                               "h_final": int(controller.h_at(num_steps)),
@@ -206,13 +225,6 @@ def _mode_str(modes) -> str:
     if isinstance(modes, str):
         return modes
     return "|".join(modes)
-
-
-def _num_blocks(bundle) -> int:
-    """Hierarchical blocks: pods if the layout spans a pod axis, else 2."""
-    if bundle.layout is not None and "pod" in bundle.layout.worker_axes:
-        return 2
-    return 2 if bundle.num_workers >= 2 else 1
 
 
 def eval_lm(bundle, data: dict, batch: int = 8):

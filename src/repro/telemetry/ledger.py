@@ -89,7 +89,25 @@ def hlo_sync_cost(hlo_text: str, *, pod_size: int = 0) -> SyncCost:
 
 @dataclass
 class CommsLedger:
-    """Accumulates one entry per sync round (host-side, plain floats)."""
+    """Accumulates cost rows per sync round (host-side, plain floats).
+
+    Two row granularities share one entry list:
+
+    * :meth:`record` — one row per ROUND (the pre-SyncPlan API, kept
+      for direct callers and tests).
+    * :meth:`record_plan` — one row per COLLECTIVE STAGE of a
+      :class:`~repro.core.syncplan.SyncPlan` scope, carrying the
+      stage's sub-bucket ids, compressor, topology and coalescing
+      flag, so the examples can print the Alg. 5 per-stage trade-off
+      directly.  When a compiled-HLO measurement is supplied, the
+      stage estimates are scaled to sum to the measured bytes and the
+      rows carry ``cost_source='hlo'`` (the per-stage SPLIT stays the
+      ring model's; only the total is measured — fit logs when the two
+      deviate).
+
+    Totals aggregate over whatever rows were recorded; a "round" is a
+    distinct (step, level) pair.
+    """
     entries: list = field(default_factory=list)
 
     def record(self, *, step: int, level: int, h: int, cost: SyncCost,
@@ -105,6 +123,38 @@ class CommsLedger:
         self.entries.append(e)
         return e
 
+    def record_plan(self, *, step: int, level: int, h: int, plan,
+                    scope: str = "global", measured: SyncCost | None = None,
+                    batch_scale: int = 1) -> dict:
+        """Append one row per collective stage of ``plan.schedule(scope)``;
+        returns the round totals (``record``-shaped dict)."""
+        stages = [s for s in plan.schedule(scope) if s.kind == "collective"]
+        est = sum(s.wire_bytes for s in stages)
+        scale = (measured.bytes_on_wire / est
+                 if measured is not None and est > 0 else 1.0)
+        source = measured.source if measured is not None else "analytic"
+        total_b, total_c = 0.0, 0
+        for i, s in enumerate(stages):
+            e = {"step": int(step), "level": int(level), "h": int(h),
+                 "stage": i, "scope": scope, "kind": s.kind,
+                 "topology": plan.topology.kind,
+                 "buckets": list(s.buckets),
+                 "group": int(s.group),
+                 "coalesced": bool(s.coalesced),
+                 "bytes_on_wire": float(s.wire_bytes * scale),
+                 "collectives": int(s.collectives),
+                 "cost_source": source,
+                 "compression": s.compression,
+                 "batch_scale": int(batch_scale)}
+            self.entries.append(e)
+            total_b += e["bytes_on_wire"]
+            total_c += e["collectives"]
+        return {"step": int(step), "level": int(level), "h": int(h),
+                "bytes_on_wire": total_b, "collectives": total_c,
+                "cost_source": source,
+                "compression": "|".join(plan.modes),
+                "batch_scale": int(batch_scale)}
+
     def total_bytes(self, *, level: int | None = None) -> float:
         return float(sum(e["bytes_on_wire"] for e in self.entries
                          if level is None or e["level"] == level))
@@ -113,11 +163,33 @@ class CommsLedger:
         return int(sum(e["collectives"] for e in self.entries))
 
     def num_rounds(self) -> int:
-        return len(self.entries)
+        return len({(e["step"], e["level"]) for e in self.entries})
+
+    def by_topology(self) -> dict:
+        """Per-(topology, scope) round costs — the Alg. 5 trade-off view:
+        hierarchical runs report their cheap intra-block stages and the
+        expensive global stages as separate rows."""
+        out: dict = {}
+        for e in self.entries:
+            scope = e.get("scope") or ("block" if e["level"] == 1
+                                       else "global")
+            key = f"{e.get('topology', 'round')}/{scope}"
+            d = out.setdefault(key, {"rounds": set(), "wire_bytes": 0.0,
+                                     "collectives": 0})
+            d["rounds"].add((e["step"], e["level"]))
+            d["wire_bytes"] += e["bytes_on_wire"]
+            d["collectives"] += e["collectives"]
+        return {k: {"rounds": len(v["rounds"]),
+                    "wire_bytes": float(v["wire_bytes"]),
+                    "collectives": int(v["collectives"]),
+                    "bytes_per_round": float(v["wire_bytes"])
+                    / max(len(v["rounds"]), 1)}
+                for k, v in out.items()}
 
     def summary(self) -> dict:
         return {"sync_rounds": self.num_rounds(),
                 "wire_bytes": self.total_bytes(),
                 "collectives": self.total_collectives(),
                 "cost_sources": sorted({e["cost_source"]
-                                        for e in self.entries})}
+                                        for e in self.entries}),
+                "topologies": self.by_topology()}

@@ -1,0 +1,140 @@
+"""Subprocess helper for test_syncplan: the COALESCED-plan collective
+census on a forced 8-device host platform (ISSUE 5).
+
+A (data=4, model=2) mesh with mixed sharding classes puts the probe
+tree's f32 leaves into TWO sub-buckets — replicated and
+('model',)-sharded.  The per-class wire pack (PR 4) issues one uint8
+payload gather + one f32 scale gather PER CLASS (4 worker-axis
+all-gathers); a ``coalesce=True`` SyncPlan concatenates the packed rows
+shard-locally and issues ONE payload gather + ONE scale gather per
+DTYPE (2 all-gathers) — with bitwise-identical results, since
+concat/split of already-packed payloads moves no values.
+
+Usage: python _syncplan_probe.py coalesced
+Prints one JSON line with both censuses and the max |difference| of the
+synced states.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core import flatbuf
+from repro.core import syncplan as splan
+from repro.core.local_sgd import (LocalSGDState, make_local_sgd,
+                                  make_packed_mean_coalesced,
+                                  make_packed_mean_flat)
+from repro.roofline.hlo import parse_collectives
+
+Wd, S = 4, 2
+SHAPES = {"w1": (64, 32), "b1": (7,), "w2": (16, 128), "w3": (130,)}
+CLS = {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+       "b1": flatbuf.REPLICATED,
+       "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 2),)),
+       "w3": flatbuf.REPLICATED}
+
+
+def _setup(mesh, coalesce: bool):
+    run = RunConfig(
+        model=ModelConfig(name="probe", family="dense", citation=""),
+        shape=InputShape("t", 8, Wd, "train"),
+        local_sgd=LocalSGDConfig(local_steps=8, sync_compression="sign",
+                                 wire_pack=True, sync_coalesce=coalesce),
+        optim=OptimConfig(lr_decay_steps=()))
+
+    def loss(p, b):   # sync never traces the loss
+        raise NotImplementedError
+
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=Wd,
+        packed_mean_flat_fn=make_packed_mean_flat(mesh, ("data",)),
+        packed_mean_coalesced_fn=(make_packed_mean_coalesced(mesh, ("data",))
+                                  if coalesce else None),
+        use_kernel=True, resident=True, shard_classes=CLS)
+    single = {k: jax.ShapeDtypeStruct(s, jnp.float32)
+              for k, s in SHAPES.items()}
+    state = jax.eval_shape(init, jax.random.PRNGKey(0), single)
+    plan = splan.make_sync_plan(
+        state.params.layout, topology=splan.flat(), compression="sign",
+        coalesce=coalesce, num_workers=Wd, wire_pack=True,
+        worker_axes=("data",), anchored=True)
+    return init, sync, state, plan
+
+
+def _shardings(mesh, state):
+    def bucket_sh(bs, worker=None):
+        lay = bs.layout
+        return flatbuf.BucketState(lay, tuple(
+            NamedSharding(mesh, flatbuf.bucket_pspec(lay, b, worker=worker))
+            for b in range(lay.num_buckets)), leading=bs.leading)
+
+    return LocalSGDState(params=bucket_sh(state.params, "data"),
+                         momentum=bucket_sh(state.momentum, "data"),
+                         anchor=bucket_sh(state.anchor),
+                         global_u=None, ef_memory=None,
+                         step=NamedSharding(mesh, P()),
+                         rng=NamedSharding(mesh, P()))
+
+
+def census(coalesce: bool) -> dict:
+    mesh = Mesh(np.array(jax.devices()[:Wd * S]).reshape(Wd, S),
+                ("data", "model"))
+    init, sync, state, plan = _setup(mesh, coalesce)
+    ssh = _shardings(mesh, state)
+    jsync = jax.jit(lambda s: sync(s, plan=plan, scope="global"),
+                    in_shardings=(ssh,), out_shardings=ssh)
+    with mesh:
+        compiled = jsync.lower(state).compile()
+    s = parse_collectives(compiled.as_text())
+    gathers = [o for o in s.ops if o.op == "all-gather"]
+    lay = state.params.layout
+
+    # concrete run for the equivalence half
+    single = {k: jax.random.normal(jax.random.fold_in(
+        jax.random.PRNGKey(7), i), shape, jnp.float32) * 0.1
+        for i, (k, shape) in enumerate(SHAPES.items())}
+    st = init(jax.random.PRNGKey(0), single)
+    # give workers distinct params so the sync actually averages
+    st = LocalSGDState(
+        params=st.params.with_buckets([
+            b * (1.0 + 0.01 * jnp.arange(Wd, dtype=jnp.float32)
+                 .reshape((Wd,) + (1,) * (b.ndim - 1)))
+            for b in st.params.buckets]),
+        momentum=st.momentum, anchor=st.anchor, global_u=st.global_u,
+        ef_memory=st.ef_memory, step=st.step, rng=st.rng, stats=st.stats)
+    with mesh:
+        out = jsync(st)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(
+        flatbuf.unflatten(lay, [b.mean(axis=0) for b in out.params.buckets]))]
+    return {"coalesce": coalesce,
+            "num_buckets": lay.num_buckets,
+            "bucket_classes": [list(c) for c in lay.bucket_classes],
+            "all_gather_count": len(gathers),
+            "gather_group_sizes": sorted(o.group_size for o in gathers),
+            "by_op": s.by_op(),
+            "count": s.count(),
+            "plan_collectives": plan.scope_cost("global")[1],
+            "leaves": [l.tolist() for l in leaves]}
+
+
+def main():
+    assert sys.argv[1] == "coalesced"
+    per_class = census(False)
+    coal = census(True)
+    diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(per_class.pop("leaves"), coal.pop("leaves"),
+                               strict=True))
+    print(json.dumps({"per_class": per_class, "coalesced": coal,
+                      "max_diff": diff}))
+
+
+if __name__ == "__main__":
+    main()

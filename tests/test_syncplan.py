@@ -1,0 +1,465 @@
+"""SyncPlan acceptance tests (ISSUE 5).
+
+* Plan-vs-legacy trajectory equivalence: the kwarg shim and an explicit
+  ``sync(state, plan=...)`` produce BITWISE-identical states on the
+  tree and resident paths (flat + hierarchical, mean/sign/EF-sign,
+  SGD/LARS, replicated + TP/FSDP-style sub-buckets), and the plan
+  trajectories still match the per-leaf oracle.
+* Topology orderings are semantics-free: overlap == flat bitwise, and
+  a coalesced plan == per-class bitwise (meshless executor).
+* Stage-ordering unit tests: pack -> collective -> apply per bucket,
+  overlap software-pipelining, coalesce grouping by dtype, hierarchical
+  block/global scopes, and stage cost agreement with the ledger's
+  analytic ring model.
+* Back-compat: ``sync(state, group=g)`` warns DeprecationWarning and
+  routes through a hierarchical(g) plan.
+* PlanDelta: the static policy's delta is a no-op returning the SAME
+  plan object; compressor rewrites recompile the stage modes.
+* Ledger: per-stage rows + per-topology summary.
+* Coalesced census (subprocess, 8 virtual devices): ONE payload gather
+  per dtype across sharding classes, bitwise-equal results.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (InputShape, LocalSGDConfig, ModelConfig,
+                                OptimConfig, RunConfig)
+from repro.core import flatbuf
+from repro.core import syncplan as splan
+from repro.core.local_sgd import make_local_sgd, needs_anchor, unpack_state
+from repro.core.syncplan import (PlanDelta, SyncPlan, flat, hierarchical,
+                                 make_sync_plan, overlap)
+from repro.telemetry.ledger import CommsLedger, analytic_sync_cost
+
+_HERE = os.path.dirname(__file__)
+_SRC = os.path.join(_HERE, "..", "src")
+
+W = 4
+SHAPES = {"w1": (8, 6), "b1": (6,), "w2": (6, 4), "w3": (130,)}
+SHARD_CLS = {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+             "b1": flatbuf.REPLICATED,
+             "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 2),)),
+             "w3": flatbuf.REPLICATED}
+
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+    pred = h @ params["w2"] + 1e-3 * jnp.sum(params["w3"])
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def make_run(optimizer="sgd", compression="none", H=2, block_steps=1,
+             wire_pack=True, **ls_kw):
+    return RunConfig(
+        model=ModelConfig(name="t", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, block_steps=block_steps,
+                                 sync_compression=compression,
+                                 wire_pack=wire_pack, local_momentum=0.9,
+                                 nesterov=True, **ls_kw),
+        optim=OptimConfig(optimizer=optimizer, base_lr=0.05,
+                          base_batch=W * 4, weight_decay=1e-3,
+                          grad_clip=0.5 if optimizer == "sgd" else 0.0,
+                          lars_trust=0.02, lr_decay_steps=()))
+
+
+def init_params(seed=0):
+    return {k: jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                    i), s, jnp.float32) * 0.3
+            for i, (k, s) in enumerate(SHAPES.items())}
+
+
+def batches(seed=3):
+    i = 0
+    while True:
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        yield {"x": jax.random.normal(k, (W, 4, 8)),
+               "y": jax.random.normal(jax.random.fold_in(k, 1), (W, 4, 4))}
+        i += 1
+
+
+def run_traj(run, *, steps=6, resident=True, shard_classes=None,
+             sync_with=None, oracle=False):
+    """Run ``steps`` local steps with a sync at every H-th; ``sync_with``
+    maps (sync, state, level) -> state (level 1 = block, 2 = global) so
+    callers choose the plan API or the legacy kwargs.  ``oracle`` runs
+    the per-leaf reference path instead."""
+    kw = dict(use_kernel=not oracle and resident,
+              resident=False if oracle else resident,
+              bucket_sync=not oracle)
+    init, local_step, sync = make_local_sgd(
+        run, loss_fn, num_workers=W, shard_classes=shard_classes, **kw)
+    state = init(jax.random.PRNGKey(1), init_params())
+    data = batches()
+    ls = run.local_sgd
+    rounds = 0
+    for t in range(steps):
+        state, _ = local_step(state, next(data))
+        if (t + 1) % ls.local_steps == 0:
+            rounds += 1
+            level = (1 if ls.block_steps > 1 and rounds % ls.block_steps
+                     else 2)
+            state = sync_with(sync, state, level)
+    return unpack_state(state)
+
+
+def legacy_sync(sync, state, level):
+    if level == 1:
+        with pytest.deprecated_call():
+            return sync(state, group=W // 2)
+    return sync(state)
+
+
+def plan_sync_with(plan):
+    def f(sync, state, level):
+        return sync(state, plan=plan,
+                    scope="block" if level == 1 else "global")
+    return f
+
+
+def bundle_plan(run, *, shard_classes=None, topology=None, coalesce=False):
+    layout = flatbuf.build_layout(
+        {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, s in SHAPES.items()},
+        shard_classes=shard_classes)
+    return make_sync_plan(layout, topology=topology or flat(),
+                          compression=run.local_sgd.sync_compression,
+                          coalesce=coalesce, num_workers=W,
+                          wire_pack=run.local_sgd.wire_pack,
+                          anchored=needs_anchor(run.local_sgd))
+
+
+def assert_states_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params),
+                    strict=True):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Trajectory equivalence: plan API vs legacy kwargs vs per-leaf oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimizer", ["sgd", "lars"])
+@pytest.mark.parametrize("compression", ["none", "sign", "ef_sign"])
+@pytest.mark.parametrize("classes", [None, SHARD_CLS],
+                         ids=["replicated", "sharded"])
+def test_plan_vs_legacy_flat(optimizer, compression, classes):
+    """Explicit flat plan == legacy kwargs, bitwise, on the resident
+    path (replicated and TP/FSDP-style sub-buckets), and both match the
+    per-leaf oracle to fp tolerance."""
+    run = make_run(optimizer, compression)
+    legacy = run_traj(run, shard_classes=classes, sync_with=legacy_sync)
+    plan = bundle_plan(run, shard_classes=classes)
+    planned = run_traj(run, shard_classes=classes,
+                       sync_with=plan_sync_with(plan))
+    assert_states_equal(legacy, planned)
+    ref = run_traj(run, oracle=True, sync_with=legacy_sync)
+    for x, y in zip(jax.tree.leaves(planned.params),
+                    jax.tree.leaves(ref.params), strict=True):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "lars"])
+@pytest.mark.parametrize("resident", [True, False], ids=["resident", "tree"])
+def test_plan_vs_legacy_hierarchical(optimizer, resident):
+    """hierarchical(W/2) plan (block + global scopes) == the deprecated
+    group= path, bitwise, on tree AND resident paths."""
+    run = make_run(optimizer, "none", H=1, block_steps=2)
+    legacy = run_traj(run, resident=resident, sync_with=legacy_sync)
+    plan = bundle_plan(run, topology=hierarchical(W // 2))
+    planned = run_traj(run, resident=resident,
+                       sync_with=plan_sync_with(plan))
+    assert_states_equal(legacy, planned)
+
+
+@pytest.mark.parametrize("classes", [None, SHARD_CLS],
+                         ids=["replicated", "sharded"])
+def test_overlap_ordering_is_bitwise_identical(classes):
+    """The overlap topology only reorders stage ISSUE order — the
+    trajectory is bitwise-identical to the flat plan."""
+    run = make_run("sgd", "sign")
+    a = run_traj(run, shard_classes=classes,
+                 sync_with=plan_sync_with(bundle_plan(
+                     run, shard_classes=classes)))
+    b = run_traj(run, shard_classes=classes,
+                 sync_with=plan_sync_with(bundle_plan(
+                     run, shard_classes=classes, topology=overlap())))
+    assert_states_equal(a, b)
+
+
+def test_coalesced_plan_is_bitwise_identical_meshless():
+    """coalesce=True merges the two f32 sub-buckets' payload gathers
+    into one stage; meshless execution (per-bucket pack/unpack under the
+    shared stage) stays bitwise-identical to the per-class plan."""
+    run = make_run("sgd", "sign")
+    a = run_traj(run, shard_classes=SHARD_CLS,
+                 sync_with=plan_sync_with(bundle_plan(
+                     run, shard_classes=SHARD_CLS)))
+    plan = bundle_plan(run, shard_classes=SHARD_CLS, coalesce=True)
+    colls = [s for s in plan.schedule("global") if s.kind == "collective"]
+    assert any(s.coalesced for s in colls), plan.describe()
+    b = run_traj(run, shard_classes=SHARD_CLS, sync_with=plan_sync_with(plan))
+    assert_states_equal(a, b)
+
+
+def test_legacy_group_kwarg_deprecated():
+    run = make_run("sgd", "none", H=1)
+    init, _, sync = make_local_sgd(run, loss_fn, num_workers=W,
+                                   use_kernel=True)
+    state = init(jax.random.PRNGKey(0), init_params())
+    with pytest.deprecated_call():
+        synced = sync(state, group=2)
+    # and it really is the hierarchical(2) block mean
+    plan = bundle_plan(run, topology=hierarchical(2))
+    via_plan = sync(state, plan=plan, scope="block")
+    assert_states_equal(unpack_state(synced), unpack_state(via_plan))
+
+
+# ---------------------------------------------------------------------------
+# Stage anatomy / ordering
+# ---------------------------------------------------------------------------
+
+def _layout_2dtypes():
+    return flatbuf.build_layout(
+        {"a": jax.ShapeDtypeStruct((40, 7), jnp.float32),
+         "b": jax.ShapeDtypeStruct((130,), jnp.float32),
+         "c": jax.ShapeDtypeStruct((16, 16), jnp.bfloat16)})
+
+
+def test_flat_stage_anatomy():
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, topology=flat(), compression="sign",
+                          num_workers=8, wire_pack=True, anchored=True)
+    st = plan.schedule("global")
+    kinds = [(s.kind, s.buckets) for s in st]
+    assert kinds == [("pack", (0,)), ("collective", (0,)), ("apply", (0,)),
+                     ("pack", (1,)), ("collective", (1,)), ("apply", (1,))]
+    assert all(s.group == 8 for s in st)
+    assert all(s.compression == "sign" for s in st if s.kind != "apply")
+    with pytest.raises(ValueError, match="no 'block' stages"):
+        plan.schedule("block")
+
+
+def test_overlap_stage_pipelining():
+    """Bucket b's collective is ISSUED before bucket b-1's apply."""
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, topology=overlap(), compression="sign",
+                          num_workers=8, wire_pack=True, anchored=True)
+    st = plan.schedule("global")
+    pos = {(s.kind, s.buckets[0]): i for i, s in enumerate(st)}
+    nb = lay.num_buckets
+    for b in range(nb):
+        assert pos[("pack", b)] < pos[("collective", b)] < pos[("apply", b)]
+    for b in range(1, nb):
+        assert pos[("collective", b)] < pos[("apply", b - 1)], st
+
+
+def test_hierarchical_scopes_and_groups():
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, topology=hierarchical(4), compression="none",
+                          num_workers=8, wire_pack=False, anchored=False)
+    blk = plan.schedule("block")
+    glb = plan.schedule("global")
+    assert all(s.group == 4 for s in blk if s.kind == "collective")
+    assert all(s.group == 8 for s in glb if s.kind == "collective")
+    # block stages never compress; unanchored global plans have no packs
+    assert all(s.compression == "none" for s in blk)
+    assert not [s for s in glb if s.kind == "pack"]
+
+
+def test_coalesce_groups_by_dtype():
+    """Same-dtype sub-buckets of different sharding classes share ONE
+    collective stage; different dtypes never merge."""
+    lay = flatbuf.build_layout(
+        {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, s in SHAPES.items()},
+        shard_classes=SHARD_CLS)
+    assert lay.num_buckets == 2          # f32 sharded + f32 replicated
+    plan = make_sync_plan(lay, compression="sign", coalesce=True,
+                          num_workers=W, wire_pack=True, anchored=True)
+    colls = [s for s in plan.schedule("global") if s.kind == "collective"]
+    assert len(colls) == 1 and colls[0].coalesced
+    assert colls[0].buckets == (0, 1)
+    assert colls[0].collectives == 2     # one payload + one scale gather
+    # mixed dtypes stay separate
+    lay2 = _layout_2dtypes()
+    plan2 = make_sync_plan(lay2, compression="sign", coalesce=True,
+                           num_workers=W, wire_pack=True, anchored=True)
+    colls2 = [s for s in plan2.schedule("global") if s.kind == "collective"]
+    assert len(colls2) == 2 and not any(s.coalesced for s in colls2)
+    # dense plans never coalesce
+    plan3 = make_sync_plan(lay, compression="none", coalesce=True,
+                           num_workers=W, wire_pack=False, anchored=True)
+    colls3 = [s for s in plan3.schedule("global") if s.kind == "collective"]
+    assert len(colls3) == 2
+
+
+@pytest.mark.parametrize("mode,wire", [("none", False), ("sign", True),
+                                       ("ef_sign", True), ("sign", False)])
+def test_stage_costs_match_analytic_model(mode, wire):
+    """Per-stage wire estimates sum to exactly the ledger's analytic
+    ring model — the plan and the ledger can never disagree."""
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, compression=mode, num_workers=8,
+                          wire_pack=wire, anchored=(mode != "none"))
+    got_bytes, got_colls = plan.scope_cost("global")
+    ref = analytic_sync_cost(lay, group=8, modes=mode, wire_pack=wire)
+    np.testing.assert_allclose(got_bytes, ref.bytes_on_wire)
+    assert got_colls == ref.collectives
+    # hierarchical block stages price as the dense mean at block size
+    planb = make_sync_plan(lay, topology=hierarchical(4), compression=mode,
+                           num_workers=8, wire_pack=wire,
+                           anchored=(mode != "none"))
+    blk_bytes, blk_colls = planb.scope_cost("block")
+    refb = analytic_sync_cost(lay, group=4)
+    np.testing.assert_allclose(blk_bytes, refb.bytes_on_wire)
+    assert blk_colls == refb.collectives
+
+
+# ---------------------------------------------------------------------------
+# PlanDelta / controller actuation
+# ---------------------------------------------------------------------------
+
+def test_plan_delta_static_is_noop():
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, compression="none", num_workers=W,
+                          anchored=True)
+    assert PlanDelta().apply(plan) is plan
+    assert PlanDelta(h=7, batch_scale=2).apply(plan) is plan
+
+
+def test_plan_delta_rewrites_modes_and_topology():
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, compression="none", num_workers=W,
+                          wire_pack=True, anchored=True)
+    p2 = PlanDelta(compression=("sign", "ef_sign")).apply(plan)
+    assert p2.modes == ("sign", "ef_sign")
+    packs = [s for s in p2.schedule("global") if s.kind == "pack"]
+    assert [s.compression for s in packs] == ["sign", "ef_sign"]
+    p3 = PlanDelta(topology=hierarchical(2)).apply(p2)
+    assert p3.topology == hierarchical(2)
+    assert p3.modes == p2.modes
+    assert p3.schedule("block")          # block stages now exist
+    # a length-1 tuple broadcasts (tree-path controllers emit n_comp=1)
+    assert plan.with_modes(("sign",)).modes == ("sign", "sign")
+
+
+def test_controllers_emit_plan_deltas():
+    from repro.configs.base import ControllerConfig
+    from repro.core.controller import make_controller
+    run = make_run("sgd", "none")
+    ctrl = make_controller(run)
+    d = ctrl.plan_delta(5)
+    assert d.compression is None and d.topology is None
+    assert d.h == run.local_sgd.local_steps and d.batch_scale == 1
+    run2 = RunConfig(model=run.model, shape=run.shape,
+                     local_sgd=LocalSGDConfig(
+                         local_steps=2, sync_compression="ef_sign"),
+                     optim=run.optim,
+                     controller=ControllerConfig(kind="auto_compress",
+                                                 patience=1, err_budget=10.0))
+    ac = make_controller(run2, n_comp=2)
+    from repro.core.controller import RoundReport
+    ac.update(RoundReport(round=1, step=1, h=2, loss=1.0,
+                          stats={"comp_measured": True,
+                                 "comp_rel_err": [0.0, 0.0]}))
+    d2 = ac.plan_delta(2)
+    assert d2.compression == ("sign", "sign")
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, compression="none", num_workers=W,
+                          wire_pack=True, anchored=True)
+    assert d2.apply(plan).modes == ("sign", "sign")
+
+
+# ---------------------------------------------------------------------------
+# Ledger per-stage rows
+# ---------------------------------------------------------------------------
+
+def test_ledger_record_plan_stage_rows():
+    lay = _layout_2dtypes()
+    plan = make_sync_plan(lay, topology=hierarchical(2), compression="sign",
+                          num_workers=W, wire_pack=True, anchored=True)
+    led = CommsLedger()
+    led.record_plan(step=1, level=1, h=2, plan=plan, scope="block")
+    tot = led.record_plan(step=3, level=2, h=2, plan=plan, scope="global")
+    # one row per collective stage, grouped into 2 rounds
+    assert led.num_rounds() == 2
+    exp_bytes, exp_colls = plan.scope_cost("global")
+    np.testing.assert_allclose(tot["bytes_on_wire"], exp_bytes)
+    assert tot["collectives"] == exp_colls
+    np.testing.assert_allclose(led.total_bytes(level=2), exp_bytes)
+    topo = led.summary()["topologies"]
+    assert set(topo) == {"hierarchical/block", "hierarchical/global"}
+    assert topo["hierarchical/block"]["rounds"] == 1
+    # block (dense mean over 2 workers) and global (packed over 4) both
+    # priced; stage rows carry buckets + compression
+    stage_rows = [e for e in led.entries if e.get("scope") == "global"]
+    assert [e["compression"] for e in stage_rows] == ["sign", "sign"]
+    assert all(e["cost_source"] == "analytic" for e in led.entries)
+
+
+# ---------------------------------------------------------------------------
+# fit consumes bundle.sync_plan (hierarchical, end to end)
+# ---------------------------------------------------------------------------
+
+def test_fit_hierarchical_topology_summary():
+    from repro import configs
+    from repro.data.partition import ShardedBatches
+    from repro.data.synthetic import lm_examples, markov_lm
+    from repro.launch import steps as steps_mod
+    from repro.launch.train import fit
+    cfg = configs.get_smoke("paper-lm").replace(
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=128, max_seq_len=8, act_dtype="float32")
+    base = make_run("sgd", "none", H=1, block_steps=2, wire_pack=False)
+    run = RunConfig(model=cfg, shape=InputShape("t", 8, W * 2, "train"),
+                    local_sgd=base.local_sgd, optim=base.optim, steps=8)
+    bundle = steps_mod.build_train(run, num_workers=W)
+    assert bundle.sync_plan is not None
+    assert bundle.sync_plan.topology.kind == "hierarchical"
+    data = ShardedBatches(lm_examples(markov_lm(vocab=128, num_seqs=64,
+                                                seq_len=8)), W, 2)
+    state, hist, summary = fit(run, data, bundle=bundle, num_steps=8,
+                               log=lambda *_: None)
+    assert summary["topology"].startswith("hierarchical")
+    topo = summary["ledger"]["topologies"]
+    assert "hierarchical/block" in topo and "hierarchical/global" in topo
+    assert summary["comm_rounds"]["block"] == 4
+    assert summary["comm_rounds"]["global"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Coalesced census on a real 8-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_coalesced_census_one_gather_per_dtype():
+    """ISSUE-5 acceptance: on a (data=4, model=2) mesh with replicated +
+    TP/FSDP f32 sub-buckets, the coalesced plan lowers to ONE uint8
+    payload gather + ONE scale gather for the dtype (2 worker-axis
+    all-gathers total) where the per-class plan needs 2 per sub-bucket —
+    with bitwise-identical synced states."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath(_SRC) + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, os.path.join(_HERE, "_syncplan_probe.py"),
+         "coalesced"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    per_class, coal = res["per_class"], res["coalesced"]
+    assert per_class["num_buckets"] == coal["num_buckets"] == 2
+    assert per_class["all_gather_count"] == 4      # 2 per sub-bucket
+    assert coal["all_gather_count"] == 2           # 2 per DTYPE
+    assert coal["plan_collectives"] == 2
+    # gathers run over the 4 workers only, never over the model axis
+    assert set(coal["gather_group_sizes"]) == {4}
+    assert res["max_diff"] == 0.0
