@@ -336,3 +336,79 @@ def syncplan_bench():
         emit(f"syncplan/{name}", us,
              f"stages={scopes['global']};collectives={gc};"
              f"wire_bytes={gb:.0f};sub_buckets={lay.num_buckets}{extra}")
+
+
+def noise_adaptive_bench():
+    """Composite noise-adaptive controller smoke (ISSUE 7).
+
+    Drives the full telemetry -> NoiseAdaptiveController -> PlanDelta
+    loop through ``launch.train.fit`` on a tiny resident quad model and
+    emits the priced wire bytes per round + the final training loss, so
+    the BENCH artifact tracks the composite policy's comm/performance
+    point across PRs (a frozen decision stack shows up as a bytes or
+    loss jump here before any paper table moves).
+    """
+    import time
+
+    from repro.configs.base import (ControllerConfig, InputShape,
+                                    LocalSGDConfig, ModelConfig, OptimConfig,
+                                    RunConfig)
+    from repro.core.local_sgd import make_local_sgd
+    from repro.launch.steps import TrainBundle
+    from repro.launch.train import fit
+    from repro.models.base import ParamSpec
+
+    W, D, C, steps = 4, 6, 3, 32
+
+    def loss(p, b):
+        l = jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+        return l, {"xent": l}
+
+    def batches(seed=1, b=8):
+        i = 0
+        while True:
+            k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+            x = jax.random.normal(k, (W, b, D))
+            y = x @ (jnp.ones((D, C)) * 0.5) + 0.01 * jax.random.normal(
+                jax.random.fold_in(k, 1), (W, b, C))
+            yield {"x": x, "y": y}
+            i += 1
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", family="dense", citation=""),
+        shape=InputShape("t", D, W * 8, "train"),
+        local_sgd=LocalSGDConfig(local_steps=2, local_momentum=0.9,
+                                 nesterov=True, sync_compression="ef_sign",
+                                 wire_pack=True),
+        optim=OptimConfig(base_lr=0.03, base_batch=W * 8, weight_decay=0.0,
+                          lr_warmup_steps=0, lr_decay_steps=()),
+        controller=ControllerConfig(kind="noise_adaptive", patience=1,
+                                    h_max=8, max_batch_scale=2,
+                                    err_budget=0.95),
+        steps=steps)
+    cc = run.controller
+    init, local_step, sync = make_local_sgd(
+        run, loss, num_workers=W, use_kernel=True,
+        telemetry=cc.wants_telemetry,
+        speculate_compression=cc.wants_speculation)
+    nb = flatbuf.build_layout(
+        {"w": jax.ShapeDtypeStruct((D, C), jnp.float32),
+         "b": jax.ShapeDtypeStruct((C,), jnp.float32)}).num_buckets
+    specs = {"w": ParamSpec((D, C), (None, None)),
+             "b": ParamSpec((C,), (None,), init="zeros")}
+    bundle = TrainBundle(cfg=run.model, run=run, layout=None, num_workers=W,
+                         specs=specs, init=init, local_step=local_step,
+                         sync=sync, telemetry=True, n_comp=nb)
+    t0 = time.perf_counter()
+    _, hist, summary = fit(run, batches(), bundle=bundle, num_steps=steps,
+                           log=lambda *a, **k: None)
+    us = (time.perf_counter() - t0) / steps * 1e6
+    led = summary["ledger"]
+    rounds = max(led["sync_rounds"], 1)
+    ctl = summary["controller"]
+    emit("controller/noise_adaptive_smoke", us,
+         f"wire_bytes_per_round={led['wire_bytes'] / rounds:.0f};"
+         f"rounds={rounds};final_loss={hist[-1]['loss']:.4f};"
+         f"h_final={ctl['h_final']};batch_scale={ctl['batch_scale']};"
+         f"lr_scale={ctl['lr_scale']:.3f};"
+         f"compression={ctl.get('compression', 'none')}")

@@ -16,6 +16,7 @@ Mapping to the paper (see DESIGN.md §6):
   sec5   K*Sigma noise-scale verification (Section 5, eq. 4)
   kernels Pallas kernel microbenches
   roofline dry-run derived roofline rows (deliverable g quick view)
+  noise_adaptive composite controller smoke: wire bytes/round + loss
 """
 from __future__ import annotations
 
@@ -48,6 +49,7 @@ def main() -> None:
         "resident": bench_kernels.resident_bench,
         "sharded": bench_kernels.sharded_bench,
         "syncplan": bench_kernels.syncplan_bench,
+        "noise_adaptive": bench_kernels.noise_adaptive_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -66,7 +68,8 @@ def main() -> None:
     }
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
-    smoke = ("kernels", "bucket", "resident", "sharded", "syncplan")
+    smoke = ("kernels", "bucket", "resident", "sharded", "syncplan",
+             "noise_adaptive")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

@@ -60,7 +60,7 @@ def make_bundle(run: RunConfig) -> TrainBundle:
     cc = run.controller
     init, local_step, sync = make_local_sgd(
         run, mlp_loss, num_workers=K, telemetry=cc.wants_telemetry,
-        speculate_compression=cc.kind == "auto_compress")
+        speculate_compression=cc.wants_speculation)
     return TrainBundle(
         cfg=run.model, run=run, layout=None, num_workers=K,
         specs=mlp_specs(), init=init,

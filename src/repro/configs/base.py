@@ -211,6 +211,15 @@ class ControllerConfig:
                          compression error stays under ``err_budget``
                          (requires ``sync_compression='ef_sign'`` so the
                          state allocates anchor + EF memory up front).
+      * noise_adaptive — the composite policy: one RoundReport stream
+                         drives gradient-noise-scaled batch growth
+                         (McCandlish et al. 2018 simple noise scale,
+                         estimated adadamp-style from the per-worker
+                         telemetry already on the bus), diversity-driven
+                         H adaptation, error-budgeted per-bucket
+                         compression escalation, and an LR-decay handoff
+                         (``lr_scale`` on PlanDelta) once the batch hits
+                         ``max_batch_scale``.
 
     ``telemetry=None`` enables stats collection exactly when the kind
     needs it (any non-static kind); set True to collect round telemetry
@@ -219,7 +228,7 @@ class ControllerConfig:
     """
 
     kind: Literal["static", "diversity_h", "adaptive_batch",
-                  "auto_compress"] = "static"
+                  "auto_compress", "noise_adaptive"] = "static"
     telemetry: bool | None = None     # None => kind != "static"
     # H adaptation bounds / start (diversity_h)
     h_min: int = 1
@@ -235,12 +244,25 @@ class ControllerConfig:
     max_batch_scale: int = 8
     # compression escalation (auto_compress)
     err_budget: float = 0.7           # relative L2 error budget per bucket
+    # noise_adaptive: grow the batch while the EMA critical batch
+    # B_noise exceeds noise_grow x the current total batch; once the
+    # batch is capped, each further trip decays lr_scale by
+    # lr_cap_decay down to lr_scale_min (the Lau et al. 2024 handoff)
+    noise_grow: float = 1.0
+    lr_cap_decay: float = 0.5
+    lr_scale_min: float = 0.1
 
     @property
     def wants_telemetry(self) -> bool:
         if self.telemetry is None:
             return self.kind != "static"
         return self.telemetry
+
+    @property
+    def wants_speculation(self) -> bool:
+        """Measure the would-be sign error on uncompressed rounds —
+        the turn-on signal for the compression-escalating policies."""
+        return self.kind in ("auto_compress", "noise_adaptive")
 
 
 @dataclass(frozen=True)

@@ -19,13 +19,24 @@ Control signals (see telemetry.stats.round_summary):
 * ``comp_rel_err`` — measured (or speculative) per-bucket relative L2
   compression error: escalate none -> sign -> ef_sign per bucket while
   it stays under ``err_budget``.
+* ``signal_sq`` / ``noise_sq`` — the update-energy split from
+  core/noise.py ``noise_decomposition``: the critical batch B_noise
+  (McCandlish et al. 2018) falls out as batch_per_worker x
+  noise_sq/signal_sq and drives principled batch growth — grow while
+  the total batch is noise-dominated, hand off to LR decay
+  (``lr_scale``) once the batch hits its cap (Lau et al. 2024).
 
 Protocol: ``h_at(step)`` is consulted EVERY local step (so the static
 policy is bitwise-identical to the legacy scheduler, including
 mid-round warmup H changes); ``update(report)`` is called once per
 GLOBAL sync round with the host-side telemetry summary; the
-``compression()`` / ``batch_scale()`` decisions apply from the next
-round on.
+``compression()`` / ``batch_scale()`` / ``lr_scale()`` decisions apply
+from the next round on.
+
+``NoiseAdaptiveController`` composes all four axes behind the same
+protocol: one RoundReport stream in, one PlanDelta out per round, with
+a ``decisions`` provenance dict naming which sensor drove each change
+(serialized into the fit JSONL).
 """
 from __future__ import annotations
 
@@ -33,6 +44,7 @@ from dataclasses import dataclass, field
 from typing import Any, Protocol, runtime_checkable
 
 from repro.configs.base import ControllerConfig, RunConfig
+from repro.core import noise as noise_mod
 from repro.core.schedule import local_steps_at
 from repro.core.syncplan import PlanDelta, Topology
 
@@ -57,6 +69,8 @@ class SyncController(Protocol):
     def batch_scale(self) -> int: ...
     def update(self, report: RoundReport) -> None: ...
     def plan_delta(self, step: int) -> PlanDelta: ...
+    # lr_scale() -> float is optional (fit falls back to 1.0); the
+    # _EmitsPlanDelta mixin provides the identity default.
 
 
 class _EmitsPlanDelta:
@@ -78,12 +92,18 @@ class _EmitsPlanDelta:
 
     _topology_switch: Topology | None = None
 
+    def lr_scale(self) -> float:
+        """Runtime LR multiplier for the next round (identity unless a
+        policy overrides it — the batch-cap decay handoff)."""
+        return 1.0
+
     def plan_delta(self, step: int) -> PlanDelta:
         topo, self._topology_switch = self._topology_switch, None
         return PlanDelta(h=int(self.h_at(step)),
                          compression=self.compression(),
                          topology=topo,
-                         batch_scale=int(self.batch_scale()))
+                         batch_scale=int(self.batch_scale()),
+                         lr_scale=float(self.lr_scale()))
 
 
 class StaticController(_EmitsPlanDelta):
@@ -157,6 +177,14 @@ class AdaptiveBatchController(_EmitsPlanDelta):
     than ``tol`` (relative) for ``patience`` consecutive rounds, the
     batch scale doubles (up to ``max_batch_scale``) — communication per
     EXAMPLE drops because each round consumes ``scale`` x the data.
+
+    Each doubling RE-BASELINES the plateau detector (``ema``/``best``
+    reset): the decision of whether the larger batch helps must be made
+    against losses measured AT that batch, not against the stale
+    pre-doubling EMA — without the reset, the slowly-decaying old EMA
+    keeps tripping the detector and the scale ratchets to
+    ``max_batch_scale`` every ``patience`` rounds regardless of actual
+    progress (regression-pinned in tests/test_noise_controller.py).
     """
 
     kind = "adaptive_batch"
@@ -191,6 +219,60 @@ class AdaptiveBatchController(_EmitsPlanDelta):
                 self.scale < self.cc.max_batch_scale:
             self.scale *= 2
             self.stall = 0
+            # re-baseline: judge the new batch size on its own losses
+            self.ema = None
+            self.best = None
+
+
+class _CompressionLadder:
+    """Per-bucket none -> sign -> ef_sign escalation state machine with
+    SYMMETRIC streak hysteresis (shared by ``auto_compress`` and
+    ``noise_adaptive``).
+
+    Both edges require ``patience`` CONSECUTIVE qualifying rounds:
+    none -> sign on rounds whose (speculative) sign error stays under
+    ``err_budget``, sign -> ef_sign on rounds whose measured error
+    exceeds it.  A single noisy round over budget no longer escalates a
+    signed bucket permanently — escalation is monotone, so the old
+    one-round edge turned transient spikes into irreversible decisions
+    (regression-pinned in tests/test_noise_controller.py).  One streak
+    counter per bucket suffices: the counted predicate flips with the
+    mode, and every transition resets it.
+    """
+
+    def __init__(self, n_comp: int, *, err_budget: float, patience: int):
+        self.err_budget = err_budget
+        self.patience = max(int(patience), 1)
+        self.modes = ["none"] * n_comp
+        self.streak = [0] * n_comp
+
+    def step(self, stats: dict) -> list:
+        """Advance on one round's telemetry; returns bucket ids that
+        changed mode this round.
+
+        ``comp_measured`` gates the whole round (no compressor ran AND
+        no speculation: the zero-filled slots carry no signal); a
+        per-slot relative error of exactly 0.0 means THAT slot had zero
+        reference energy this round (unmeasured or a degenerate all-zero
+        delta — a real sign pass on a nonzero input always leaves
+        residual), so it neither advances nor resets its streak.
+        """
+        errs = stats.get("comp_rel_err") or []
+        if not stats.get("comp_measured"):
+            return []
+        changed = []
+        for b, e in enumerate(errs[:len(self.modes)]):
+            if self.modes[b] == "ef_sign" or e <= 0.0:
+                continue
+            under = e <= self.err_budget
+            hit = under if self.modes[b] == "none" else not under
+            self.streak[b] = self.streak[b] + 1 if hit else 0
+            if self.streak[b] >= self.patience:
+                self.modes[b] = ("sign" if self.modes[b] == "none"
+                                 else "ef_sign")
+                self.streak[b] = 0
+                changed.append(b)
+        return changed
 
 
 class AutoCompressController(_EmitsPlanDelta):
@@ -201,9 +283,10 @@ class AutoCompressController(_EmitsPlanDelta):
     uncompressed and watches the measured relative compression error
     (speculative sign error while uncompressed — see
     ``speculate_compression``): ``patience`` consecutive rounds under
-    ``err_budget`` switch a bucket to ``sign``; once signed, a round
-    OVER budget escalates to ``ef_sign`` (keep the 1-bit wire but let
-    error feedback absorb the residual).  Escalation is monotone.
+    ``err_budget`` switch a bucket to ``sign``; ``patience`` consecutive
+    rounds OVER budget once signed escalate to ``ef_sign`` (keep the
+    1-bit wire but let error feedback absorb the residual).  Escalation
+    is monotone; see :class:`_CompressionLadder` for the hysteresis.
     """
 
     kind = "auto_compress"
@@ -215,33 +298,153 @@ class AutoCompressController(_EmitsPlanDelta):
                 "state allocates anchor + EF memory for runtime escalation")
         self.cc = run.controller
         self.ls = run.local_sgd
-        self.modes = ["none"] * n_comp
-        self.streak = [0] * n_comp
+        self.ladder = _CompressionLadder(n_comp,
+                                         err_budget=run.controller.err_budget,
+                                         patience=run.controller.patience)
+
+    @property
+    def modes(self):
+        return self.ladder.modes
 
     def h_at(self, step: int) -> int:
         return local_steps_at(self.ls, step)
 
     def compression(self):
-        return tuple(self.modes)
+        return tuple(self.ladder.modes)
 
     def batch_scale(self) -> int:
         return 1
 
     def update(self, report: RoundReport) -> None:
-        errs = report.stats.get("comp_rel_err") or []
-        if not report.stats.get("comp_measured"):
+        self.ladder.step(report.stats)
+
+
+class NoiseAdaptiveController(_EmitsPlanDelta):
+    """The composite policy: one RoundReport stream, one PlanDelta.
+
+    Composes the four actuation axes from the same telemetry round
+    summary, traversing the paper's comm-reduction frontier in a single
+    run (small-batch/H=1/uncompressed -> large-batch/H>=8/EF-sign):
+
+    1. **Noise-scaled batch growth** — the per-round
+       ``signal_sq``/``noise_sq`` split (core/noise.py, estimated
+       adadamp-style from the per-worker update norms already on the
+       bus) yields the critical batch B_noise ~= tr(Sigma)/||G||^2
+       (McCandlish et al. 2018).  While the EMA of B_noise exceeds
+       ``noise_grow`` x the current TOTAL batch for ``patience``
+       consecutive rounds, gradient error is noise-dominated and the
+       per-worker batch doubles (re-baselining the EMA — the
+       AdaptiveBatch lesson).
+    2. **LR-decay handoff** — once the batch hits ``max_batch_scale``,
+       further noise trips decay ``lr_scale`` by ``lr_cap_decay``
+       (floored at ``lr_scale_min``) instead: batch growth and LR decay
+       damp the same noise term, and the batch axis saturating hands
+       the job to the LR axis (Lau et al. 2024).  Bounding the growth
+       keeps us on the right side of the compute-efficiency ceiling
+       that makes unbounded batch growth wasteful (Golmant et al.
+       2018).
+    3. **Diversity-driven H** — same EMA thresholds as ``diversity_h``:
+       diversity collapse doubles H (sync redundant), growth halves it.
+    4. **Compression escalation** — the :class:`_CompressionLadder`
+       per-bucket none -> sign -> ef_sign machine, enabled when the
+       config allocated EF memory (``sync_compression='ef_sign'``);
+       with a weaker config the axis stays inactive and the other three
+       still run.
+
+    ``decisions`` holds the last round's provenance — which sensor
+    drove which actuation — and is serialized into the fit JSONL.
+    """
+
+    kind = "noise_adaptive"
+
+    def __init__(self, run: RunConfig, *, n_comp: int = 1):
+        cc = run.controller
+        self.cc = cc
+        self.ls = run.local_sgd
+        self.global_batch = run.shape.global_batch
+        self.h = int(cc.h0 or run.local_sgd.local_steps)
+        self.h = min(max(self.h, cc.h_min), cc.h_max)
+        self.scale = 1
+        self.lr = 1.0
+        self.div_ema = None
+        self.noise_ema = None
+        self.grow_streak = 0
+        self.ladder = (_CompressionLadder(n_comp, err_budget=cc.err_budget,
+                                          patience=cc.patience)
+                       if run.local_sgd.sync_compression == "ef_sign"
+                       else None)
+        self.decisions: dict = {}
+
+    def h_at(self, step: int) -> int:
+        return self.h
+
+    def compression(self):
+        return tuple(self.ladder.modes) if self.ladder is not None else None
+
+    def batch_scale(self) -> int:
+        return self.scale
+
+    def lr_scale(self) -> float:
+        return self.lr
+
+    def update(self, report: RoundReport) -> None:
+        st = report.stats
+        self.decisions = {}
+        # (1) per-bucket compression ladder
+        if self.ladder is not None:
+            changed = self.ladder.step(st)
+            if changed:
+                self.decisions["compression"] = {
+                    "buckets": changed,
+                    "modes": list(self.ladder.modes),
+                    "comp_rel_err": st.get("comp_rel_err")}
+        # (2) diversity-driven H
+        d = st.get("diversity")
+        if d is not None:
+            self.div_ema = d if self.div_ema is None else \
+                self.cc.ema * self.div_ema + (1 - self.cc.ema) * d
+            h0 = self.h
+            if self.div_ema < self.cc.low:
+                self.h = min(self.h * 2, self.cc.h_max)
+            elif self.div_ema > self.cc.high:
+                self.h = max(self.h // 2, self.cc.h_min)
+            if self.h != h0:
+                self.decisions["h"] = {"from": h0, "to": self.h,
+                                       "diversity_ema": self.div_ema}
+        # (3) noise-scaled batch growth with the LR-decay cap handoff
+        sig = st.get("signal_sq")
+        noi = st.get("noise_sq")
+        w = st.get("num_workers") or 0
+        if sig is None or noi is None or w <= 0:
             return
-        for b, e in enumerate(errs[:len(self.modes)]):
-            if self.modes[b] == "none":
-                if e <= self.cc.err_budget:
-                    self.streak[b] += 1
-                    if self.streak[b] >= self.cc.patience:
-                        self.modes[b] = "sign"
-                        self.streak[b] = 0
-                else:
-                    self.streak[b] = 0
-            elif self.modes[b] == "sign" and e > self.cc.err_budget:
-                self.modes[b] = "ef_sign"
+        b_loc = self.global_batch / w * self.scale   # measurement batch
+        b_noise = noise_mod.critical_batch(sig, noi, b_loc)
+        self.noise_ema = b_noise if self.noise_ema is None else \
+            self.cc.ema * self.noise_ema + (1 - self.cc.ema) * b_noise
+        self.decisions["b_noise"] = {"raw": b_noise, "ema": self.noise_ema}
+        total = self.global_batch * self.scale
+        if self.noise_ema > self.cc.noise_grow * total:
+            self.grow_streak += 1
+        else:
+            self.grow_streak = 0
+            return
+        if self.grow_streak < self.cc.patience:
+            return
+        self.grow_streak = 0
+        if self.scale < self.cc.max_batch_scale:
+            self.scale *= 2
+            # re-baseline: the estimate's variance changes with the
+            # measurement batch (the AdaptiveBatch bugfix, same lesson)
+            self.noise_ema = None
+            self.decisions["batch"] = {"scale": self.scale,
+                                       "b_noise_ema": None,
+                                       "total_batch": total * 2}
+        elif self.lr > self.cc.lr_scale_min:
+            self.lr = max(self.lr * self.cc.lr_cap_decay,
+                          self.cc.lr_scale_min)
+            self.decisions["lr"] = {"lr_scale": self.lr,
+                                    "reason": "batch at cap, "
+                                              "noise still dominant"}
 
 
 _KINDS = {
@@ -249,6 +452,7 @@ _KINDS = {
     "diversity_h": DiversityHController,
     "adaptive_batch": AdaptiveBatchController,
     "auto_compress": AutoCompressController,
+    "noise_adaptive": NoiseAdaptiveController,
 }
 
 
@@ -257,12 +461,13 @@ def make_controller(run: RunConfig, *, n_comp: int = 1) -> SyncController:
 
     ``n_comp`` is the number of compression-error slots the telemetry
     reports (dtype buckets on the resident path, 1 on the tree path) —
-    the granularity at which ``auto_compress`` escalates.
+    the granularity at which ``auto_compress`` / ``noise_adaptive``
+    escalate.
     """
     kind = run.controller.kind
     if kind not in _KINDS:
         raise ValueError(f"unknown controller kind {kind!r}; "
                          f"one of {sorted(_KINDS)}")
-    if kind == "auto_compress":
-        return AutoCompressController(run, n_comp=n_comp)
+    if kind in ("auto_compress", "noise_adaptive"):
+        return _KINDS[kind](run, n_comp=n_comp)
     return _KINDS[kind](run)

@@ -657,9 +657,16 @@ def make_local_sgd(run: RunConfig, loss_fn: Callable, *, num_workers: int,
             return p, u, loss, metrics, gsq, usq
         return p, u, loss, metrics
 
-    def local_step(state: LocalSGDState, batch):
-        """batch: pytree with leading (W, B_loc, ...) dims."""
+    def local_step(state: LocalSGDState, batch, lr_scale=None):
+        """batch: pytree with leading (W, B_loc, ...) dims.
+
+        ``lr_scale`` is the controller's runtime LR multiplier
+        (PlanDelta.lr_scale — the noise_adaptive batch-cap handoff);
+        ``None`` leaves the scheduled lr_at untouched, keeping the
+        static trajectory bitwise-identical."""
         lr = lr_at(opt, state.step, global_batch=global_batch)
+        if lr_scale is not None:
+            lr = lr * jnp.float32(lr_scale)
         rngs = jax.random.split(jax.random.fold_in(state.rng, state.step), W)
         out = jax.vmap(
             lambda pw, uw, bw, rw: _worker_step(pw, uw, bw, rw, lr, state.step)
@@ -916,9 +923,14 @@ def _make_resident_local_sgd(run: RunConfig, loss_fn: Callable, *,
                    else None),
         )
 
-    def local_step(state: LocalSGDState, batch):
-        """batch: pytree with leading (W, B_loc, ...) dims."""
+    def local_step(state: LocalSGDState, batch, lr_scale=None):
+        """batch: pytree with leading (W, B_loc, ...) dims.
+
+        ``lr_scale``: runtime LR multiplier (see the tree-path
+        ``local_step``); ``None`` keeps the scheduled lr bitwise."""
         lr = lr_at(opt, state.step, global_batch=global_batch)
+        if lr_scale is not None:
+            lr = lr * jnp.float32(lr_scale)
         rngs = jax.random.split(jax.random.fold_in(state.rng, state.step), W)
         layout = state.params.layout
         step_no = state.step

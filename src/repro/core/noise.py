@@ -24,6 +24,50 @@ def isotropic_noise(grads, rng, *, step, eta: float, gamma: float):
     return jax.tree.unflatten(treedef, noisy)
 
 
+def noise_decomposition(update_sq: float, dispersion: float,
+                        num_workers: int, *, eps: float = 1e-12) -> dict:
+    """Split the per-round update energy into signal and noise
+    (host-side floats; the noise_adaptive controller's sensor).
+
+    Inputs come straight from ``telemetry.stats.round_summary`` — the
+    per-worker accumulated update norm^2 (mean over workers) and the
+    between-worker dispersion at sync — both free aux outputs of the
+    fused bucket kernels, so the estimate costs zero extra HBM passes.
+
+    With W workers on disjoint data accumulating x_k = sum_t eta_t
+    (G + xi_{k,t}) over a round (xi i.i.d. per worker/step, covariance
+    trace tr(Sigma)/B_loc), the coherent drift G survives the
+    between-worker difference while the noise does not:
+
+        E update_sq  = S + N              S = sum_t eta_t^2 ||G_t||^2
+        E dispersion = (1 - 1/W) N        N = sum_t eta_t^2 tr(Sigma)/B_loc
+
+    so ``noise_sq = dispersion * W/(W-1)`` and ``signal_sq =
+    max(update_sq - noise_sq, 0)``.  Both are batch-DEpendent (N scales
+    as 1/B_loc); their ratio times the measurement batch is the
+    batch-INvariant critical batch (:func:`critical_batch`).
+    """
+    w = max(int(num_workers), 1)
+    noise_sq = float(dispersion) * (w / (w - 1) if w > 1 else 0.0)
+    noise_sq = min(max(noise_sq, 0.0), float(update_sq))
+    signal_sq = max(float(update_sq) - noise_sq, 0.0)
+    return {"signal_sq": signal_sq, "noise_sq": noise_sq,
+            "noise_ratio": noise_sq / (signal_sq + eps)}
+
+
+def critical_batch(signal_sq: float, noise_sq: float,
+                   batch_per_worker: float, *, eps: float = 1e-12) -> float:
+    """McCandlish et al. (2018) simple noise scale B_noise ~=
+    tr(Sigma)/||G||^2 from the :func:`noise_decomposition` split.
+
+    ``noise_sq/signal_sq = tr(Sigma)/(B_loc ||G||^2)``, so multiplying
+    by the per-worker batch the round was measured at recovers the
+    batch-invariant B_noise: the total batch below which gradient error
+    is noise-dominated and batch growth buys near-linear progress.
+    """
+    return float(batch_per_worker) * float(noise_sq) / (float(signal_sq) + eps)
+
+
 def gradient_noise_trace(per_worker_grads):
     """Estimate tr(Sigma) from stacked per-worker grads (W, ...).
 

@@ -485,11 +485,17 @@ class PlanDelta:
                       (None = keep; str broadcasts; tuple per bucket).
     ``topology``    — switch the plan's :class:`Topology` (None = keep).
     ``batch_scale`` — per-worker batch multiplier (None = keep).
+    ``lr_scale``    — runtime LR multiplier applied by launch/train.fit
+                      to the scheduled lr_at (None = keep; the
+                      noise_adaptive controller's decay handoff once
+                      the batch hits its cap).  Consumed by the fit
+                      loop, not the plan: ``apply`` ignores it.
     """
     h: int | None = None
     compression: Any = None
     topology: Topology | None = None
     batch_scale: int | None = None
+    lr_scale: float | None = None
 
     def apply(self, plan: SyncPlan) -> SyncPlan:
         """Derive the next round's plan.  An empty delta returns the

@@ -178,7 +178,7 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
     resident = resident_eligible(use_kernel, True)
     # Telemetry + controller (ISSUE 3): collect round stats whenever the
     # configured controller needs them; speculative compression-error
-    # measurement only for the auto_compress policy (it decides when to
+    # measurement only for the escalating policies (they decide when to
     # START compressing from the would-be sign error).
     cc = run.controller
     telemetry = cc.wants_telemetry
@@ -193,7 +193,7 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                                             sharded=mesh is not None,
                                             telemetry=telemetry,
                                             speculate_compression=(
-                                                cc.kind == "auto_compress"))
+                                                cc.wants_speculation))
 
     n_comp = 1
     blay = None
@@ -221,8 +221,14 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
         bsh = _named(mesh, bspec)
         bundle.state_shardings = ssh
         bundle.batch_shardings = bsh
-        bundle.local_step = jax.jit(local_step, in_shardings=(ssh, bsh),
-                                    out_shardings=(ssh, None))
+        # positional adapter for the optional lr_scale arg (pjit with
+        # in_shardings rejects kwargs): passing None keeps the original
+        # two-arg program; a scalar traces once and serves every value
+        jstep = jax.jit(
+            lambda s, b, lr_scale: local_step(s, b, lr_scale=lr_scale),
+            in_shardings=(ssh, bsh, None), out_shardings=(ssh, None))
+        bundle.local_step = (lambda s, b, lr_scale=None:
+                             jstep(s, b, lr_scale))
         # pjit rejects kwargs once in_shardings is given (jax 0.4.x), so
         # jit a positional adapter for the static (group, compression,
         # plan, scope) args — SyncPlan is frozen/hashable, so each

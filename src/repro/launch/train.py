@@ -96,6 +96,13 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
             worker_axes=(bundle.layout.worker_axes
                          if bundle.layout is not None else ()),
             anchored=needs_anchor(ls))
+    # align round 1 with the controller's INITIAL decision: the
+    # error-driven compressor policies (auto_compress, noise_adaptive)
+    # start uncompressed and escalate from measured error, so the
+    # config's declared wire format must not leak into the first sync.
+    # Identity policies emit an empty rewrite and the config plan
+    # passes through as the SAME object (static stays bitwise).
+    plan = controller.plan_delta(0).apply(plan)
     # abstract avals of the state, for lowering sync in the ledger cost
     # path — holding the concrete init state alive here would pin a
     # second full optimizer state in device memory for the whole run
@@ -141,11 +148,20 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     history = []
     comm_rounds = {"block": 0, "global": 0}
     global_rounds = 0
+    # the controller's runtime LR multiplier (PlanDelta.lr_scale — the
+    # noise_adaptive batch-cap handoff).  1.0 keeps the exact two-arg
+    # local_step call so static trajectories stay bitwise-identical
+    # (and custom bundles without the lr_scale arg keep working).
+    lr_scale_now = 1.0
     t_start = time.time()
     try:
         for t in range(num_steps):
             batch = _scaled_batch(data_iter, controller.batch_scale())
-            state, metrics = bundle.local_step(state, batch)
+            if lr_scale_now == 1.0:
+                state, metrics = bundle.local_step(state, batch)
+            else:
+                state, metrics = bundle.local_step(state, batch,
+                                                   lr_scale_now)
             h_now = max(int(controller.h_at(t)), 1)
             level = sched.advance(t)
             synced = ""
@@ -164,7 +180,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                 entry = ledger.record_plan(
                     step=t, level=2, h=h_now, plan=plan, scope="global",
                     measured=measured_cost(plan, "global"),
-                    batch_scale=controller.batch_scale())
+                    batch_scale=controller.batch_scale(),
+                    lr_scale=lr_scale_now)
                 comm_rounds["global"] += 1
                 synced = "global"
                 report = RoundReport(
@@ -177,6 +194,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                 controller.update(report)
                 delta = controller.plan_delta(t + 1)
                 plan = delta.apply(plan)
+                if getattr(delta, "lr_scale", None) is not None:
+                    lr_scale_now = float(delta.lr_scale)
                 if tlog is not None:
                     # None delta fields mean "keep": log the effective
                     # next decision, not the literal None
@@ -192,7 +211,13 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                                delta.batch_scale
                                if delta.batch_scale is not None
                                else controller.batch_scale()),
+                           "next_lr_scale": lr_scale_now,
                            "topology": plan.topology.describe()}
+                    # decision provenance (noise_adaptive): which sensor
+                    # drove which actuation this round
+                    prov = getattr(controller, "decisions", None)
+                    if prov:
+                        rec["decisions"] = prov
                     tlog.write(json.dumps(rec) + "\n")
                     tlog.flush()
             rec = {k: float(v) for k, v in metrics.items()}
@@ -215,7 +240,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                               "h_final": int(controller.h_at(num_steps)),
                               "compression": _mode_str(
                                   controller.compression()),
-                              "batch_scale": controller.batch_scale()}}
+                              "batch_scale": controller.batch_scale(),
+                              "lr_scale": lr_scale_now}}
     return state, history, summary
 
 

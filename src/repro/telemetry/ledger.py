@@ -111,7 +111,8 @@ class CommsLedger:
     entries: list = field(default_factory=list)
 
     def record(self, *, step: int, level: int, h: int, cost: SyncCost,
-               compression="none", batch_scale: int = 1) -> dict:
+               compression="none", batch_scale: int = 1,
+               lr_scale: float = 1.0) -> dict:
         e = {"step": int(step), "level": int(level), "h": int(h),
              "bytes_on_wire": float(cost.bytes_on_wire),
              "collectives": int(cost.collectives),
@@ -119,13 +120,14 @@ class CommsLedger:
              "compression": (list(compression)
                              if isinstance(compression, (tuple, list))
                              else str(compression)),
-             "batch_scale": int(batch_scale)}
+             "batch_scale": int(batch_scale),
+             "lr_scale": float(lr_scale)}
         self.entries.append(e)
         return e
 
     def record_plan(self, *, step: int, level: int, h: int, plan,
                     scope: str = "global", measured: SyncCost | None = None,
-                    batch_scale: int = 1) -> dict:
+                    batch_scale: int = 1, lr_scale: float = 1.0) -> dict:
         """Append one row per collective stage of ``plan.schedule(scope)``;
         returns the round totals (``record``-shaped dict)."""
         stages = [s for s in plan.schedule(scope) if s.kind == "collective"]
@@ -145,7 +147,8 @@ class CommsLedger:
                  "collectives": int(s.collectives),
                  "cost_source": source,
                  "compression": s.compression,
-                 "batch_scale": int(batch_scale)}
+                 "batch_scale": int(batch_scale),
+                 "lr_scale": float(lr_scale)}
             self.entries.append(e)
             total_b += e["bytes_on_wire"]
             total_c += e["collectives"]
@@ -153,7 +156,8 @@ class CommsLedger:
                 "bytes_on_wire": total_b, "collectives": total_c,
                 "cost_source": source,
                 "compression": "|".join(plan.modes),
-                "batch_scale": int(batch_scale)}
+                "batch_scale": int(batch_scale),
+                "lr_scale": float(lr_scale)}
 
     def total_bytes(self, *, level: int | None = None) -> float:
         return float(sum(e["bytes_on_wire"] for e in self.entries
@@ -186,10 +190,34 @@ class CommsLedger:
                     / max(len(v["rounds"]), 1)}
                 for k, v in out.items()}
 
+    def scaling(self) -> dict:
+        """Trajectory of the batch/LR actuators over the recorded rounds
+        — the noise_adaptive controller's priced decisions.  Per-example
+        wire cost divides total bytes by the examples consumed
+        (batch_scale rounds eat scale x the data for the same bytes)."""
+        rounds: dict = {}
+        for e in self.entries:
+            key = (e["step"], e["level"])
+            r = rounds.setdefault(key, {"bytes": 0.0,
+                                        "batch_scale": e.get("batch_scale", 1),
+                                        "lr_scale": e.get("lr_scale", 1.0)})
+            r["bytes"] += e["bytes_on_wire"]
+        if not rounds:
+            return {}
+        bs = [r["batch_scale"] for r in rounds.values()]
+        lr = [r["lr_scale"] for r in rounds.values()]
+        rel_examples = sum(r["batch_scale"] for r in rounds.values())
+        return {"batch_scale_range": [int(min(bs)), int(max(bs))],
+                "lr_scale_range": [float(min(lr)), float(max(lr))],
+                "bytes_per_round_example": float(
+                    sum(r["bytes"] for r in rounds.values())
+                    / max(rel_examples, 1))}
+
     def summary(self) -> dict:
         return {"sync_rounds": self.num_rounds(),
                 "wire_bytes": self.total_bytes(),
                 "collectives": self.total_collectives(),
                 "cost_sources": sorted({e["cost_source"]
                                         for e in self.entries}),
+                "scaling": self.scaling(),
                 "topologies": self.by_topology()}

@@ -121,8 +121,15 @@ def round_summary(stats: StatsAccumulator, *, eps: float = 1e-12) -> dict:
     when per-worker movement is mostly noise (sync pays -> H down).
     ``comp_rel_err`` is the per-bucket relative L2 compression error
     (actual when a compressor ran, speculative sign error otherwise).
+    ``signal_sq``/``noise_sq``/``noise_ratio`` split the update energy
+    into coherent drift vs gradient noise (core/noise.py
+    ``noise_decomposition`` — the between-worker dispersion isolates
+    the noise term), the noise_adaptive controller's batch sensor;
+    derived from the SAME per-worker aux outputs, no new device work.
     """
+    from repro.core.noise import noise_decomposition
     s = jax.device_get(stats)
+    num_workers = int(np.asarray(s.round_grad_sq).shape[0])
     grad_sq = float(np.mean(s.round_grad_sq))
     update_sq = float(np.mean(s.round_update_sq))
     pre = float(s.pre_sync_sq)
@@ -133,12 +140,14 @@ def round_summary(stats: StatsAccumulator, *, eps: float = 1e-12) -> dict:
     return {
         "rounds": int(s.rounds),
         "round_steps": int(s.round_steps),
+        "num_workers": num_workers,
         "grad_sq": grad_sq,
         "update_sq": update_sq,
         "pre_sync_sq": pre,
         "post_sync_sq": post,
         "dispersion": dispersion,
         "diversity": dispersion / (update_sq + eps),
+        **noise_decomposition(update_sq, dispersion, num_workers, eps=eps),
         "comp_rel_err": [float(e / (r + eps)) for e, r in zip(err, ref)],
         "comp_measured": bool(ref.sum() > 0),
     }

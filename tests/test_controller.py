@@ -73,7 +73,7 @@ def make_bundle(run, *, use_kernel=False):
     init, local_step, sync = make_local_sgd(
         run, quad_loss, num_workers=W, use_kernel=use_kernel,
         telemetry=cc.wants_telemetry,
-        speculate_compression=cc.kind == "auto_compress")
+        speculate_compression=cc.wants_speculation)
     nb = 1
     if use_kernel:
         from repro.core import flatbuf
@@ -191,10 +191,14 @@ def test_adaptive_batch_controller_unit():
     run = make_run(controller=ControllerConfig(kind="adaptive_batch",
                                                tol=0.01, patience=2, ema=0.0))
     c = AdaptiveBatchController(run)
-    losses = [1.0, 0.5, 0.499, 0.499, 0.499, 0.499]
+    # two plateaus: each doubling re-baselines the detector, so the
+    # second needs one baseline round + ``patience`` stalled rounds
+    losses = [1.0, 0.5, 0.499, 0.499, 0.499, 0.499, 0.499]
+    scales = []
     for i, l in enumerate(losses):
         c.update(RoundReport(round=i, step=i, h=1, loss=l))
-    assert c.batch_scale() == 4                  # two plateaus of 2 rounds
+        scales.append(c.batch_scale())
+    assert scales == [1, 1, 1, 2, 2, 2, 4]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,545 @@
+"""Composite noise-adaptive controller tests (ISSUE 7).
+
+* ``noise_decomposition`` / ``critical_batch`` recover a known
+  signal/noise split, analytically and from sampled per-worker updates;
+  ``round_summary`` carries the new noise fields.
+* Satellite regressions (each fails on the pre-fix code):
+  - AdaptiveBatchController re-baselines ``ema``/``best`` on each
+    doubling — golden scale trace with steadily-improving post-doubling
+    losses, where the old stale-EMA detector kept ratcheting.
+  - AutoCompressController sign -> ef_sign needs ``patience``
+    CONSECUTIVE over-budget rounds (symmetric hysteresis) — golden
+    per-round mode trace with a single noisy spike.
+  - n_comp slot mapping under coalescing: with >= 2 sharding classes
+    the measured ``comp_rel_err`` slot k corresponds to plan bucket k
+    (no index skew), controller escalation of slot k rewrites plan
+    bucket k, and mixed per-bucket modes are bitwise-identical
+    coalesce on/off.
+* Speculative sign error is consumed on the FIRST uncompressed anchored
+  round (``comp_measured`` gating) and advances the ladder streak.
+* NoiseAdaptiveController golden decision traces: H sequence, per-bucket
+  modes, batch/LR scales — including the EMA-crossing and batch-cap
+  LR-handoff edges — plus the ``decisions`` provenance dict.
+* fit-level: noise_adaptive drives a real run end to end; the JSONL
+  records carry the extended schema (noise scale, next_lr_scale,
+  decisions) and the ledger rows price batch/lr scales.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ControllerConfig, InputShape, LocalSGDConfig,
+                                ModelConfig, OptimConfig, RunConfig)
+from repro.core import flatbuf
+from repro.core.controller import (AdaptiveBatchController,
+                                   AutoCompressController,
+                                   NoiseAdaptiveController, RoundReport,
+                                   _CompressionLadder, make_controller)
+from repro.core.local_sgd import make_local_sgd, needs_anchor, unpack_state
+from repro.core.noise import critical_batch, noise_decomposition
+from repro.core.syncplan import flat, make_sync_plan
+from repro.launch.steps import TrainBundle
+from repro.launch.train import fit
+from repro.models.base import ParamSpec
+from repro.telemetry.stats import round_summary
+
+W = 4
+
+
+# ---------------------------------------------------------------------------
+# noise estimator
+# ---------------------------------------------------------------------------
+
+def test_noise_decomposition_analytic():
+    # E update_sq = S + N, E dispersion = (1 - 1/W) N
+    S, N, w = 2.0, 8.0, 4
+    d = noise_decomposition(S + N, (1 - 1 / w) * N, w)
+    assert d["noise_sq"] == pytest.approx(N)
+    assert d["signal_sq"] == pytest.approx(S)
+    assert d["noise_ratio"] == pytest.approx(N / S, rel=1e-6)
+    # B_noise = B_loc * N/S, batch-invariant by construction
+    assert critical_batch(d["signal_sq"], d["noise_sq"], 4) == \
+        pytest.approx(16.0, rel=1e-6)
+    # degenerate: one worker carries no between-worker information
+    d1 = noise_decomposition(1.0, 0.5, 1)
+    assert d1["noise_sq"] == 0.0 and d1["signal_sq"] == 1.0
+    # dispersion can never claim more energy than the updates carry
+    dc = noise_decomposition(1.0, 5.0, 4)
+    assert dc["noise_sq"] == 1.0 and dc["signal_sq"] == 0.0
+
+
+def test_noise_decomposition_recovers_sampled_split():
+    """x_k = g + sigma z_k: the dispersion-based split recovers
+    ||g||^2 and sigma^2 D from per-worker samples."""
+    D, w, sigma = 4096, 16, 0.5
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (D,)) * 0.05
+    z = jax.random.normal(jax.random.fold_in(key, 1), (w, D))
+    x = g[None] + sigma * z
+    update_sq = float(jnp.mean(jnp.sum(x * x, axis=1)))
+    xbar = x.mean(axis=0)
+    dispersion = float(jnp.mean(jnp.sum((x - xbar) ** 2, axis=1)))
+    d = noise_decomposition(update_sq, dispersion, w)
+    assert d["noise_sq"] == pytest.approx(sigma ** 2 * D, rel=0.15)
+    assert d["signal_sq"] == pytest.approx(float(jnp.sum(g * g)), rel=0.3)
+
+
+def test_round_summary_carries_noise_fields():
+    from repro.telemetry.stats import (accumulate_step, init_stats,
+                                       record_sync)
+    st = init_stats(W, 2)
+    st = accumulate_step(st, jnp.full((W,), 2.0), jnp.full((W,), 3.0))
+    st = record_sync(st, pre_sync_sq=1.5, post_sync_sq=0.0)
+    s = round_summary(st)
+    assert s["num_workers"] == W
+    assert s["noise_sq"] == pytest.approx(1.5 * W / (W - 1))
+    assert s["signal_sq"] == pytest.approx(3.0 - 1.5 * W / (W - 1))
+    assert s["noise_ratio"] > 0
+
+
+# ---------------------------------------------------------------------------
+# synthetic RoundReport streams
+# ---------------------------------------------------------------------------
+
+def report(i, *, loss=1.0, diversity=None, signal=None, noise=None,
+           workers=W, errs=None, measured=None):
+    st = {}
+    if diversity is not None:
+        st["diversity"] = diversity
+    if signal is not None:
+        st.update(signal_sq=signal, noise_sq=noise, num_workers=workers)
+    if errs is not None:
+        st.update(comp_rel_err=list(errs),
+                  comp_measured=(True if measured is None else measured))
+    return RoundReport(round=i, step=i, h=1, loss=loss, stats=st)
+
+
+def make_run(H=1, controller=None, *, lr=0.03, steps=48, **ls_kw):
+    return RunConfig(
+        model=ModelConfig(name="quad", family="dense", citation=""),
+        shape=InputShape("t", 8, W * 4, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, local_momentum=0.9,
+                                 nesterov=True, **ls_kw),
+        optim=OptimConfig(base_lr=lr, base_batch=W * 4, weight_decay=0.0,
+                          lr_warmup_steps=0, lr_decay_steps=()),
+        controller=controller or ControllerConfig(),
+        steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: adaptive_batch re-baselines on actuation
+# ---------------------------------------------------------------------------
+
+def test_adaptive_batch_rebaselines_after_doubling():
+    """Regression (pre-fix: FAILS): after the first doubling the loss
+    improves by ~10% every round, yet the stale pre-doubling EMA kept
+    tripping the plateau detector and the scale ratcheted again."""
+    run = make_run(controller=ControllerConfig(kind="adaptive_batch",
+                                               ema=0.9, tol=0.01, patience=1,
+                                               max_batch_scale=8))
+    c = AdaptiveBatchController(run)
+    losses = [1.0, 1.0, 0.9, 0.8, 0.7, 0.6]
+    scales = []
+    for i, l in enumerate(losses):
+        c.update(RoundReport(round=i, step=i, h=1, loss=l))
+        scales.append(c.batch_scale())
+    # one genuine plateau -> one doubling; the post-doubling improvement
+    # streak must NOT double again (pre-fix trace: [1, 2, 4, 4, 4, 4])
+    assert scales == [1, 2, 2, 2, 2, 2]
+    # the detector restarted from post-doubling losses
+    assert c.best is not None and c.best < 0.95
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: auto_compress symmetric streak hysteresis
+# ---------------------------------------------------------------------------
+
+def test_auto_compress_single_spike_does_not_escalate():
+    """Regression (pre-fix: FAILS): one noisy over-budget round flipped
+    a signed bucket to ef_sign permanently; both edges now need
+    ``patience`` consecutive qualifying rounds."""
+    run = make_run(sync_compression="ef_sign",
+                   controller=ControllerConfig(kind="auto_compress",
+                                               err_budget=0.5, patience=2))
+    c = AutoCompressController(run, n_comp=2)
+    stream = [
+        ([0.4, 0.9], ("none", "none")),      # b0 streak 1
+        ([0.4, 0.9], ("sign", "none")),      # b0 -> sign
+        ([0.9, 0.4], ("sign", "none")),      # SPIKE: b0 must stay sign
+        ([0.4, 0.4], ("sign", "sign")),      # spike reset; b1 -> sign
+        ([0.9, 0.4], ("sign", "sign")),      # b0 over, streak 1
+        ([0.9, 0.4], ("ef_sign", "sign")),   # 2 consecutive -> ef_sign
+    ]
+    for i, (errs, want) in enumerate(stream):
+        c.update(report(i, errs=errs))
+        assert c.compression() == want, (i, c.compression(), want)
+
+
+def test_ladder_ignores_unmeasured_slots():
+    lad = _CompressionLadder(2, err_budget=0.5, patience=2)
+    # slot 1 reads exactly 0.0 (zero reference energy: unmeasured)
+    for i in range(4):
+        lad.step({"comp_rel_err": [0.4, 0.0], "comp_measured": True})
+    assert lad.modes == ["sign", "none"]
+    # an unmeasured ROUND (comp_measured False) advances nothing
+    lad2 = _CompressionLadder(1, err_budget=0.5, patience=1)
+    lad2.step({"comp_rel_err": [0.4], "comp_measured": False})
+    assert lad2.modes == ["none"]
+
+
+def test_speculative_error_consumed_on_first_uncompressed_round():
+    """The none -> sign turn-on signal: speculation measures the
+    would-be sign error on the FIRST anchored sync while every bucket is
+    still uncompressed, and the ladder streak advances on it."""
+    D, C = 6, 3
+    def loss(p, b):
+        l = jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+        return l, {"xent": l}
+    run = make_run(H=2, sync_compression="ef_sign", wire_pack=True,
+                   controller=ControllerConfig(kind="auto_compress",
+                                               err_budget=0.95, patience=2))
+    init, step, sync = make_local_sgd(run, loss, num_workers=W,
+                                      use_kernel=True, telemetry=True,
+                                      speculate_compression=True)
+    k = jax.random.PRNGKey(0)
+    state = init(k, {"w": jax.random.normal(k, (D, C)) * 0.3,
+                     "b": jnp.zeros((C,))})
+    n_comp = state.params.layout.num_buckets
+    batch = {"x": jax.random.normal(k, (W, 8, D)),
+             "y": jax.random.normal(jax.random.fold_in(k, 1), (W, 8, C))}
+    for _ in range(2):
+        state, _ = step(state, batch)
+    state = sync(state, compression=("none",) * n_comp)
+    s = round_summary(state.stats)
+    assert s["comp_measured"], "speculation must measure round 1"
+    assert all(e > 0 for e in s["comp_rel_err"]), s["comp_rel_err"]
+    c = AutoCompressController(run, n_comp=n_comp)
+    c.update(RoundReport(round=1, step=2, h=2, loss=1.0, stats=s))
+    assert all(st == 1 for st in c.ladder.streak), c.ladder.streak
+    assert c.compression() == ("none",) * n_comp
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: n_comp slot mapping under coalescing (>= 2 sharding classes)
+# ---------------------------------------------------------------------------
+
+# three sub-buckets: replicated, model x2, model x4 (buckets key on
+# (dtype, axes, total shard factor) — distinct factors keep the two TP
+# classes in distinct buckets)
+SHAPES = {"w1": (8, 6), "b1": (6,), "w2": (6, 4), "w3": (130,)}
+SHARD_CLS = {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+             "b1": flatbuf.REPLICATED,
+             "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 4),)),
+             "w3": flatbuf.REPLICATED}
+
+
+def _sc_loss(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+    pred = h @ params["w2"] + 1e-3 * jnp.sum(params["w3"])
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"xent": l}
+
+
+def _sc_params(seed=0):
+    return {k: jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                    i), s, jnp.float32) * 0.3
+            for i, (k, s) in enumerate(SHAPES.items())}
+
+
+def _sc_batches(seed=3):
+    i = 0
+    while True:
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        yield {"x": jax.random.normal(k, (W, 4, 8)),
+               "y": jax.random.normal(jax.random.fold_in(k, 1), (W, 4, 4))}
+        i += 1
+
+
+def _sc_plan(run, *, coalesce):
+    layout = flatbuf.build_layout(
+        {k: jax.ShapeDtypeStruct(s, jnp.float32) for k, s in SHAPES.items()},
+        shard_classes=SHARD_CLS)
+    return layout, make_sync_plan(layout, topology=flat(), compression="none",
+                                  coalesce=coalesce, num_workers=W,
+                                  wire_pack=run.local_sgd.wire_pack,
+                                  anchored=needs_anchor(run.local_sgd))
+
+
+def _sc_traj(run, plan, modes, *, steps=4, speculate=False):
+    init, step, sync = make_local_sgd(
+        run, _sc_loss, num_workers=W, use_kernel=True,
+        shard_classes=SHARD_CLS, telemetry=True,
+        speculate_compression=speculate)
+    state = init(jax.random.PRNGKey(1), _sc_params())
+    data = _sc_batches()
+    p = plan.with_modes(modes)
+    for t in range(steps):
+        state, _ = step(state, next(data))
+        if (t + 1) % run.local_sgd.local_steps == 0:
+            state = sync(state, plan=p, scope="global")
+    return state
+
+
+@pytest.mark.parametrize("coalesce", [False, True])
+def test_comp_err_slot_matches_plan_bucket(coalesce):
+    """Escalating slot k compresses exactly plan bucket k: the measured
+    error lands in ``comp_rel_err[k]`` and nowhere else (no index skew
+    between the telemetry order and the stage bucket ids)."""
+    run = make_run(H=2, sync_compression="ef_sign", wire_pack=True,
+                   sync_coalesce=coalesce)
+    layout, plan = _sc_plan(run, coalesce=coalesce)
+    nb = layout.num_buckets
+    assert nb >= 3, "the fixture must span >= 2 sharding classes"
+    assert plan.num_buckets == nb
+    for k in range(nb):
+        modes = tuple("sign" if b == k else "none" for b in range(nb))
+        state = _sc_traj(run, plan, modes, speculate=False)
+        s = round_summary(state.stats)
+        assert s["comp_measured"]
+        hot = [b for b, e in enumerate(s["comp_rel_err"]) if e > 0]
+        assert hot == [k], (k, s["comp_rel_err"])
+
+
+def test_controller_escalation_maps_to_plan_stages():
+    """make_controller(n_comp=plan buckets) -> per-slot escalation ->
+    PlanDelta.apply rewrites exactly that bucket's stage mode, and the
+    coalesced wire group only forms when every member compresses."""
+    run = make_run(H=2, sync_compression="ef_sign", wire_pack=True,
+                   sync_coalesce=True,
+                   controller=ControllerConfig(kind="auto_compress",
+                                               err_budget=0.5, patience=1))
+    layout, plan = _sc_plan(run, coalesce=True)
+    nb = layout.num_buckets
+    c = make_controller(run, n_comp=nb)
+    target = nb - 1
+    errs = [0.9] * nb
+    errs[target] = 0.3                       # only the last slot qualifies
+    c.update(report(0, errs=errs))
+    p2 = c.plan_delta(1).apply(plan)
+    assert p2.modes == tuple("sign" if b == target else "none"
+                             for b in range(nb))
+    # the compressed bucket's collective stage carries bucket id
+    # ``target`` (the telemetry slot), not a coalesced-group index
+    coll = [st for st in p2.schedule("global") if st.kind == "collective"]
+    comp_stages = [st for st in coll if st.compression != "none"]
+    assert [list(st.buckets) for st in comp_stages] == [[target]]
+
+
+def test_mixed_modes_bitwise_identical_coalesce_on_off():
+    run = make_run(H=2, sync_compression="ef_sign", wire_pack=True)
+    _, plan_c = _sc_plan(run, coalesce=True)
+    _, plan_n = _sc_plan(run, coalesce=False)
+    nb = plan_c.num_buckets
+    modes = tuple("sign" if b % 2 == 0 else "none" for b in range(nb))
+    sa = unpack_state(_sc_traj(run, plan_c, modes))
+    sb = unpack_state(_sc_traj(run, plan_n, modes))
+    for x, y in zip(jax.tree.leaves(sa.params), jax.tree.leaves(sb.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: composite golden decision traces
+# ---------------------------------------------------------------------------
+
+def na_run(**cc_kw):
+    kw = dict(kind="noise_adaptive", ema=0.0, patience=1, low=0.1, high=0.5,
+              h_max=8, max_batch_scale=2, noise_grow=1.0, lr_cap_decay=0.5,
+              lr_scale_min=0.2, err_budget=0.5)
+    kw.update(cc_kw)
+    return make_run(H=1, sync_compression="ef_sign", wire_pack=True,
+                    controller=ControllerConfig(**kw))
+
+
+def test_noise_adaptive_golden_trace():
+    """One synthetic stream drives all four axes; golden (h, scale,
+    lr_scale, modes) after every round.  global_batch=16, W=4."""
+    c = NoiseAdaptiveController(na_run(), n_comp=2)
+    stream = [
+        # (stats...), expected (h, scale, lr, modes) AFTER the update
+        (dict(diversity=0.05, signal=1.0, noise=8.0, errs=[0.4, 0.4]),
+         (2, 2, 1.0, ("sign", "sign"))),
+        # b_noise = 8 * 8 = 64 > 32: batch at cap -> LR handoff;
+        # b0 spikes over budget -> ef_sign (patience=1)
+        (dict(diversity=0.05, signal=1.0, noise=8.0, errs=[0.9, 0.4]),
+         (4, 2, 0.5, ("ef_sign", "sign"))),
+        # diversity grows -> H halves; noise collapses -> no LR change
+        (dict(diversity=0.6, signal=8.0, noise=0.1, errs=[0.4, 0.9]),
+         (2, 2, 0.5, ("ef_sign", "ef_sign"))),
+    ]
+    for i, (st, want) in enumerate(stream):
+        c.update(report(i, **st))
+        got = (c.h_at(i), c.batch_scale(), c.lr_scale(), c.compression())
+        assert got == want, (i, got, want)
+    d = c.plan_delta(3)
+    assert d.h == 2 and d.batch_scale == 2 and d.lr_scale == 0.5
+    assert d.compression == ("ef_sign", "ef_sign")
+
+
+def test_noise_adaptive_batch_growth_and_provenance():
+    c = NoiseAdaptiveController(na_run(max_batch_scale=4), n_comp=1)
+    # round 1: B_noise(ema) = 4 * 8 = 32 > 16 -> double, re-baseline
+    c.update(report(0, signal=1.0, noise=8.0))
+    assert c.batch_scale() == 2 and c.noise_ema is None
+    assert "batch" in c.decisions and "b_noise" in c.decisions
+    # low noise: no growth, streak resets
+    c.update(report(1, signal=8.0, noise=0.1))
+    assert c.batch_scale() == 2 and c.grow_streak == 0
+    assert "batch" not in c.decisions
+
+
+def test_noise_adaptive_cap_handoff_floor():
+    """At the batch cap, noise trips decay lr_scale down to the floor."""
+    c = NoiseAdaptiveController(na_run(max_batch_scale=1, lr_scale_min=0.3),
+                                n_comp=1)
+    lrs = []
+    for i in range(3):
+        c.update(report(i, signal=1.0, noise=8.0))
+        lrs.append(c.lr_scale())
+    assert lrs == [0.5, 0.3, 0.3]
+    assert "lr" not in c.decisions          # floored: no further actuation
+
+
+def test_noise_adaptive_ema_crossing():
+    """H reacts to the EMA crossing the band edges, not to raw samples."""
+    c = NoiseAdaptiveController(na_run(ema=0.5), n_comp=1)
+    hs = []
+    for i, d in enumerate([0.3, 0.05, 0.05, 0.05, 2.0]):
+        c.update(report(i, diversity=d))
+        hs.append(c.h_at(i))
+    # EMA: 0.3, 0.175, 0.1125, 0.081 (crosses low), 1.04 (crosses high)
+    assert hs == [1, 1, 1, 2, 1]
+
+
+def test_noise_adaptive_degrades_without_ef_config():
+    """Without ef_sign the compression axis stays off; the other three
+    still run (no hard requirement, unlike auto_compress)."""
+    run = make_run(H=1, controller=ControllerConfig(kind="noise_adaptive",
+                                                    ema=0.0, patience=1))
+    c = make_controller(run, n_comp=2)
+    assert c.compression() is None
+    c.update(report(0, diversity=0.01, signal=1.0, noise=8.0,
+                    errs=[0.1, 0.1]))
+    assert c.h_at(0) == 2 and c.compression() is None
+
+
+# ---------------------------------------------------------------------------
+# fit-level: the composite drives a real run
+# ---------------------------------------------------------------------------
+
+D, C = 6, 3
+QUAD_SPECS = {"w": ParamSpec((D, C), (None, None)),
+              "b": ParamSpec((C,), (None,), init="zeros")}
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = jnp.mean((pred - batch["y"]) ** 2)
+    return loss, {"xent": loss}
+
+
+def quad_batches(seed=1, b=8, noise=0.01):
+    i = 0
+    while True:
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        x = jax.random.normal(k, (W, b, D))
+        y = x @ (jnp.ones((D, C)) * 0.5) + noise * jax.random.normal(
+            jax.random.fold_in(k, 1), (W, b, C))
+        yield {"x": x, "y": y}
+        i += 1
+
+
+def quad_bundle(run):
+    cc = run.controller
+    init, local_step, sync = make_local_sgd(
+        run, quad_loss, num_workers=W, use_kernel=True,
+        telemetry=cc.wants_telemetry,
+        speculate_compression=cc.wants_speculation)
+    nb = flatbuf.build_layout(
+        {"w": jax.ShapeDtypeStruct((D, C), jnp.float32),
+         "b": jax.ShapeDtypeStruct((C,), jnp.float32)}).num_buckets
+    return TrainBundle(cfg=run.model, run=run, layout=None, num_workers=W,
+                       specs=QUAD_SPECS, init=init, local_step=local_step,
+                       sync=sync, telemetry=cc.wants_telemetry, n_comp=nb)
+
+
+def test_noise_adaptive_through_fit(tmp_path):
+    steps = 32
+    run = make_run(H=2, steps=steps, sync_compression="ef_sign",
+                   wire_pack=True,
+                   controller=ControllerConfig(kind="noise_adaptive",
+                                               patience=1, h_max=8,
+                                               max_batch_scale=2,
+                                               err_budget=0.95))
+    tlog = tmp_path / "na.jsonl"
+    state, hist, summary = fit(run, quad_batches(), bundle=quad_bundle(run),
+                               num_steps=steps, telemetry_path=str(tlog))
+    recs = [json.loads(l) for l in tlog.read_text().splitlines()]
+    assert recs
+    # extended JSONL schema: noise split + lr_scale + provenance
+    for r in recs:
+        assert {"signal_sq", "noise_sq", "noise_ratio", "num_workers",
+                "next_lr_scale", "next_batch_scale"} <= set(r)
+    assert any("decisions" in r for r in recs), "provenance never logged"
+    ctl = summary["controller"]
+    assert ctl["kind"] == "noise_adaptive"
+    assert "lr_scale" in ctl and 0 < ctl["lr_scale"] <= 1.0
+    # ledger rows price the actuators
+    sc = summary["ledger"]["scaling"]
+    assert "batch_scale_range" in sc and "lr_scale_range" in sc
+    # the workload's diversity collapses -> H must have ramped
+    assert max(int(r["next_h"]) for r in recs) >= 2
+    assert hist[-1]["loss"] < 0.2
+
+
+def test_initial_plan_matches_controller_start(tmp_path):
+    """The config's declared wire format (sync_compression='ef_sign')
+    must NOT leak into round 1 when the policy starts uncompressed:
+    fit aligns the initial plan with ``controller.plan_delta(0)``, so
+    the first global round syncs (and is priced) dense, and compression
+    only turns on once the ladder escalates from measured error.
+
+    Regression: pre-fix, fit built the plan from ``ls.sync_compression``
+    and round 1 ran ef_sign even though the controller said none.
+    """
+    steps = 24
+    run = make_run(H=2, steps=steps, sync_compression="ef_sign",
+                   wire_pack=True,
+                   controller=ControllerConfig(kind="noise_adaptive",
+                                               patience=1, h_max=4,
+                                               err_budget=0.95))
+    tlog = tmp_path / "init.jsonl"
+    fit(run, quad_batches(), bundle=quad_bundle(run), num_steps=steps,
+        telemetry_path=str(tlog))
+    recs = [json.loads(l) for l in tlog.read_text().splitlines()]
+    assert len(recs) >= 2
+    # round 1 priced as the dense f32 payload; once every bucket is on
+    # the 1-bit wire the round price drops well below 1/4 of dense
+    assert recs[-1]["wire_bytes"] < recs[0]["wire_bytes"] / 4, \
+        (recs[0]["wire_bytes"], recs[-1]["wire_bytes"])
+
+
+def test_lr_scale_actuation_changes_trajectory():
+    """local_step(lr_scale=0.5) really halves the applied LR: one step
+    with lr_scale=0.5 equals one step at base_lr/2 (both paths)."""
+    for use_kernel in (False, True):
+        run_a = make_run(H=1, lr=0.03)
+        run_b = make_run(H=1, lr=0.015)
+        data = quad_batches()
+        batch = next(data)
+        k = jax.random.PRNGKey(0)
+        p0 = {"w": jax.random.normal(k, (D, C)) * 0.3, "b": jnp.zeros((C,))}
+        ia, sa, _ = make_local_sgd(run_a, quad_loss, num_workers=W,
+                                   use_kernel=use_kernel)
+        ib, sb, _ = make_local_sgd(run_b, quad_loss, num_workers=W,
+                                   use_kernel=use_kernel)
+        st_a = ia(k, p0)
+        st_b = ib(k, p0)
+        st_a, _ = sa(st_a, batch, 0.5)
+        st_b, _ = sb(st_b, batch)
+        for x, y in zip(jax.tree.leaves(unpack_state(st_a).params),
+                        jax.tree.leaves(unpack_state(st_b).params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-7)

@@ -367,9 +367,11 @@ def test_controllers_emit_plan_deltas():
                                                  patience=1, err_budget=10.0))
     ac = make_controller(run2, n_comp=2)
     from repro.core.controller import RoundReport
+    # nonzero errors: an exact 0.0 slot means zero reference energy
+    # (unmeasured that round) and no longer advances the ladder
     ac.update(RoundReport(round=1, step=1, h=2, loss=1.0,
                           stats={"comp_measured": True,
-                                 "comp_rel_err": [0.0, 0.0]}))
+                                 "comp_rel_err": [0.1, 0.1]}))
     d2 = ac.plan_delta(2)
     assert d2.compression == ("sign", "sign")
     lay = _layout_2dtypes()
