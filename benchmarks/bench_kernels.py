@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, wall_timer
+from repro.telemetry import trace
 from repro.core import flatbuf
 from repro.kernels import ops, ref
 
@@ -346,10 +347,11 @@ def noise_adaptive_bench():
     emits the priced wire bytes per round + the final training loss, so
     the BENCH artifact tracks the composite policy's comm/performance
     point across PRs (a frozen decision stack shows up as a bytes or
-    loss jump here before any paper table moves).
+    loss jump here before any paper table moves).  A Tracer is threaded
+    through ``fit`` so the record also carries the wall-time breakdown
+    (``round_s``/``sync_s``/``stage_s``) — the seconds axis for
+    ``benchmarks/trend.py``.
     """
-    import time
-
     from repro.configs.base import (ControllerConfig, InputShape,
                                     LocalSGDConfig, ModelConfig, OptimConfig,
                                     RunConfig)
@@ -399,16 +401,31 @@ def noise_adaptive_bench():
     bundle = TrainBundle(cfg=run.model, run=run, layout=None, num_workers=W,
                          specs=specs, init=init, local_step=local_step,
                          sync=sync, telemetry=True, n_comp=nb)
-    t0 = time.perf_counter()
-    _, hist, summary = fit(run, batches(), bundle=bundle, num_steps=steps,
-                           log=lambda *a, **k: None)
-    us = (time.perf_counter() - t0) / steps * 1e6
+    tr = trace.Tracer()
+    with wall_timer("controller/noise_adaptive_smoke") as w:
+        _, hist, summary = fit(run, batches(), bundle=bundle, num_steps=steps,
+                               log=lambda *a, **k: None, tracer=tr)
+    us = w["us"] / steps
     led = summary["ledger"]
     rounds = max(led["sync_rounds"], 1)
     ctl = summary["controller"]
+
+    def _mean(name):
+        d = [s.dur_s for s in tr.spans if s.name == name and s.dur_s is not None]
+        return sum(d) / len(d) if d else 0.0
+
+    stage_tot: dict[str, list] = {}
+    for sp in tr.spans:
+        if sp.name == "collective":
+            k = str(sp.attrs.get("stage", 0))
+            stage_tot.setdefault(k, []).append(sp.dur_s or 0.0)
+    stage_s = {k: sum(v) / len(v) for k, v in stage_tot.items()}
     emit("controller/noise_adaptive_smoke", us,
          f"wire_bytes_per_round={led['wire_bytes'] / rounds:.0f};"
          f"rounds={rounds};final_loss={hist[-1]['loss']:.4f};"
          f"h_final={ctl['h_final']};batch_scale={ctl['batch_scale']};"
          f"lr_scale={ctl['lr_scale']:.3f};"
-         f"compression={ctl.get('compression', 'none')}")
+         f"compression={ctl.get('compression', 'none')}",
+         extra={"round_s": round(_mean("round"), 6),
+                "sync_s": round(_mean("sync"), 6),
+                "stage_s": {k: round(v, 6) for k, v in sorted(stage_s.items())}})

@@ -9,6 +9,7 @@ train/test generalization gap. Every benchmark prints
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,26 @@ from repro.data.synthetic import cluster_classification
 
 ROWS: list[str] = []
 RECORDS: list[dict] = []
+
+_METRICS = None
+
+
+def bench_metrics():
+    """The shared bench MetricsRegistry: every timing helper feeds the
+    ``repro_bench_seconds`` histogram (label ``name``), so one Prometheus
+    exposition covers the whole bench run (``benchmarks.run --json-out``
+    embeds it in the artifact)."""
+    global _METRICS
+    if _METRICS is None:
+        from repro.telemetry.metrics import MetricsRegistry
+        _METRICS = MetricsRegistry()
+    return _METRICS
+
+
+def _observe_bench(name: str, seconds: float):
+    bench_metrics().histogram(
+        "bench_seconds", "wall seconds per benchmark measurement",
+        labels=("name",)).labels(name=name).observe(seconds)
 
 
 def _parse_derived(derived: str) -> dict:
@@ -44,11 +65,18 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", extra: dict | None = None):
+    """Print one CSV row and append the structured BENCH record.
+
+    ``extra`` merges additional structured fields (e.g. the tracer's
+    ``round_s``/``sync_s``/``stage_s`` wall-time breakdown) into the
+    JSON record without widening the CSV — ``benchmarks/trend.py``
+    flattens and diffs them across runs."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    **_parse_derived(derived), "derived_raw": derived})
+                    **_parse_derived(derived), **(extra or {}),
+                    "derived_raw": derived})
     print(row, flush=True)
 
 
@@ -153,11 +181,41 @@ def train_local_sgd(*, K, B_loc, H, steps, lr=0.15, post_local_switch=-1,
     return state, comm, hist
 
 
-def time_fn(fn, *args, iters=20, warmup=3):
+def time_fn(fn, *args, iters=20, warmup=3, name=None):
+    """THE timing helper: warmup + ``perf_counter`` + ``block_until_ready``
+    around ``iters`` calls.  Benches must route through this (or
+    :func:`wall_timer` for one-shot loops) rather than hand-rolling the
+    pattern; ``name`` additionally lands the measurement in the shared
+    ``bench_seconds`` metrics histogram."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    per_call_s = (time.perf_counter() - t0) / iters
+    if name is not None:
+        _observe_bench(name, per_call_s)
+    return per_call_s * 1e6  # us
+
+
+@contextmanager
+def wall_timer(name=None):
+    """One-shot wall measurement for whole training loops (no warmup —
+    compile time is part of what these benches report).  Yields a dict
+    that gains ``s``/``us`` on exit; feeds ``bench_seconds`` like
+    :func:`time_fn` when ``name`` is given:
+
+        with wall_timer("fig1/A1") as w:
+            train_local_sgd(...)
+        emit("fig1/A1", w["us"] / STEPS, ...)
+    """
+    out = {}
+    t0 = time.perf_counter()
+    try:
+        yield out
+    finally:
+        out["s"] = time.perf_counter() - t0
+        out["us"] = out["s"] * 1e6
+        if name is not None:
+            _observe_bench(name, out["s"])

@@ -6,15 +6,13 @@ communication rounds, eigenvalue, ...).
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (dataset, emit, mlp_init, mlp_loss, test_acc,
-                               time_fn, train_local_sgd)
+                               time_fn, train_local_sgd, wall_timer)
 from repro.core.noise import gradient_noise_trace
 
 STEPS = 240
@@ -34,7 +32,6 @@ def _data():
 
 def fig1_generalization_gap():
     train, test = _data()
-    t0 = time.perf_counter()
     rows = [
         ("A1_small_mb", dict(K=1, B_loc=64, H=1)),
         ("A2_large_mb", dict(K=8, B_loc=64, H=1)),
@@ -45,9 +42,10 @@ def fig1_generalization_gap():
     ]
     accs = {}
     for name, kw in rows:
-        st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
+        with wall_timer(f"fig1/{name}") as w:
+            st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
         accs[name] = test_acc(st, test)
-        emit(f"fig1/{name}", (time.perf_counter() - t0) * 1e6 / STEPS,
+        emit(f"fig1/{name}", w["us"] / STEPS,
              f"test_acc={accs[name]:.4f};comm_rounds={comm}")
     # headline claims, qualitative: post-local >= large-batch baseline
     emit("fig1/gap_closed", 0.0,
@@ -61,9 +59,9 @@ def table2_postlocal_vs_minibatch():
               ("post_H8_K4", dict(K=4, B_loc=64, H=8,
                                   post_local_switch=STEPS // 2))]
     for name, kw in combos:
-        t0 = time.perf_counter()
-        st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
-        emit(f"table2/{name}", (time.perf_counter() - t0) * 1e6 / STEPS,
+        with wall_timer(f"table2/{name}") as w:
+            st, comm, _ = train_local_sgd(steps=STEPS, train=train, **kw)
+        emit(f"table2/{name}", w["us"] / STEPS,
              f"test_acc={test_acc(st, test):.4f};comm_rounds={comm}")
 
 

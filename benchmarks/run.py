@@ -88,7 +88,7 @@ def main() -> None:
 
         import jax
 
-        from benchmarks.common import RECORDS
+        from benchmarks.common import RECORDS, bench_metrics
         artifact = {
             "bench": "local_sgd",
             "selected": selected,
@@ -97,6 +97,9 @@ def main() -> None:
             "python": platform.python_version(),
             "jax": jax.__version__,
             "records": RECORDS,
+            # Prometheus exposition of every timing-helper measurement
+            # (repro_bench_seconds histogram, label name=<bench case>).
+            "metrics_exposition": bench_metrics().exposition(),
         }
         with open(args.json_out, "w") as f:
             json.dump(artifact, f, indent=1)

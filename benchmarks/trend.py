@@ -1,0 +1,124 @@
+"""Cross-run BENCH trending: diff two ``benchmarks.run --json-out`` artifacts.
+
+The trace spine (ISSUE 8) gives every BENCH record a seconds axis
+(``us_per_call`` plus, for traced benches, ``round_s``/``sync_s``/
+``stage_s``).  This tool closes the loop: CI runs the smoke bench fresh,
+then diffs it against the committed ``benchmarks/BENCH_baseline.json``
+so a perf or plan-shape regression shows up as a per-case delta in the
+job log *before* any paper table moves.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.trend BASELINE.json CURRENT.json
+    # warn-only by default (exit 0); --strict exits 1 on breached cases
+
+Records are matched by ``name``.  Nested numeric fields (``stage_s``)
+are flattened with dotted keys.  Timing fields are noisy on shared CI
+runners, so breaches are reported case-by-case and only *warn* unless
+``--strict``; shape fields (stages, collectives, wire_bytes, rounds)
+use the same threshold but are the ones worth treating as real.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# fields that are wall-clock measurements (noisy) vs. structural
+TIMING_KEYS = ("us_per_call", "round_s", "sync_s", "stage_s")
+
+
+def _flatten(rec: dict, prefix: str = "") -> dict:
+    """Numeric leaves only, nested dicts dotted: stage_s.0 -> float."""
+    out: dict[str, float] = {}
+    for k, v in rec.items():
+        if k in ("name", "derived_raw"):
+            continue
+        key = f"{prefix}{k}"
+        if isinstance(v, bool):
+            out[key] = float(v)
+        elif isinstance(v, (int, float)):
+            out[key] = float(v)
+        elif isinstance(v, dict):
+            out.update(_flatten(v, prefix=f"{key}."))
+    return out
+
+
+def _is_timing(key: str) -> bool:
+    root = key.split(".", 1)[0]
+    return root in TIMING_KEYS
+
+
+def load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        art = json.load(f)
+    recs = art.get("records", art if isinstance(art, list) else [])
+    return {r["name"]: _flatten(r) for r in recs if "name" in r}
+
+
+def diff(base: dict[str, dict], cur: dict[str, dict], *, warn_pct: float):
+    """Yield (case, key, base, cur, pct, breach, timing) rows + presence
+    changes as (case, None, ...) sentinel rows."""
+    rows = []
+    for name in sorted(set(base) | set(cur)):
+        if name not in cur:
+            rows.append((name, "<missing in current>", None, None, None, True, False))
+            continue
+        if name not in base:
+            rows.append((name, "<new case>", None, None, None, False, False))
+            continue
+        b, c = base[name], cur[name]
+        for key in sorted(set(b) | set(c)):
+            bv, cv = b.get(key), c.get(key)
+            if bv is None or cv is None:
+                rows.append((name, key, bv, cv, None, bv is not None, _is_timing(key)))
+                continue
+            if bv == cv:
+                continue
+            pct = (cv - bv) / abs(bv) * 100.0 if bv else float("inf")
+            rows.append((name, key, bv, cv, pct, abs(pct) > warn_pct, _is_timing(key)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--warn-pct", type=float, default=30.0,
+                    help="relative-delta threshold for a breach (default 30)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any breach is found (default: warn only)")
+    ap.add_argument("--timing", action="store_true",
+                    help="also show sub-threshold timing deltas")
+    args = ap.parse_args(argv)
+
+    base, cur = load(args.baseline), load(args.current)
+    rows = diff(base, cur, warn_pct=args.warn_pct)
+
+    breaches = 0
+    print(f"trend: {args.baseline} -> {args.current} "
+          f"({len(base)} vs {len(cur)} cases, warn at {args.warn_pct:.0f}%)")
+    for name, key, bv, cv, pct, breach, timing in rows:
+        if pct is None:
+            tag = "!!" if breach else "  "
+            print(f" {tag} {name}: {key}"
+                  + (f" (base={bv} cur={cv})" if key not in
+                     ("<missing in current>", "<new case>") else ""))
+            breaches += breach
+            continue
+        if breach:
+            breaches += 1
+            kind = "timing" if timing else "shape"
+            print(f" !! {name}: {key} {bv:g} -> {cv:g} ({pct:+.1f}%, {kind})")
+        elif args.timing and timing:
+            print(f"    {name}: {key} {bv:g} -> {cv:g} ({pct:+.1f}%)")
+    if breaches:
+        print(f"trend: {breaches} case(s) over threshold"
+              + ("" if args.strict else " (warn-only; pass --strict to fail)"))
+    else:
+        print("trend: all matched fields within threshold")
+    return 1 if (breaches and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,139 @@
+"""Traced run: the bytes<->seconds join on one local-SGD training run.
+
+The trace spine (ISSUE 8) gives every quantity the comms ledger prices
+in BYTES a measured wall-clock figure in SECONDS.  This example runs
+one local-SGD fit on the synthetic cluster-classification MLP with a
+``Tracer`` + ``MetricsRegistry`` threaded through ``fit``, then:
+
+  * writes the full artifact set a ``--trace-dir`` run produces
+    (``trace.json`` for ui.perfetto.dev, ``metrics.prom`` Prometheus
+    exposition, ``telemetry.jsonl`` extended with ``round_s``/
+    ``sync_s``/``stage_s``, ``manifest.json``) and re-validates it with
+    the CI schema gate (``repro.telemetry.export.check_trace_dir``);
+  * prints the span census and the per-stage JOIN: for each collective
+    stage id, the ledger's priced wire bytes next to the trace's
+    attributed seconds — same id, two streams.
+
+Durations are measured unfenced by default (dispatch time; see the
+README's measurement-semantics note) — pass ``--fence`` for true
+wall-clock at the cost of dispatch pipelining.
+
+    PYTHONPATH=src python examples/traced_run.py [--fence]
+"""
+import argparse
+import json
+import pathlib
+import sys
+from collections import Counter
+
+root = pathlib.Path(__file__).parent.parent
+sys.path[:0] = [str(root / "src"), str(root)]
+
+import jax
+
+from benchmarks.common import DIM, dataset, mlp_loss, test_acc
+from repro.configs.base import (ControllerConfig, InputShape, LocalSGDConfig,
+                                ModelConfig, OptimConfig, RunConfig)
+from repro.core import flatbuf
+from repro.core.local_sgd import make_local_sgd, mean_params
+from repro.data.partition import ShardedBatches
+from repro.launch.steps import TrainBundle
+from repro.launch.train import fit
+from repro.models.base import ParamSpec
+from repro.telemetry import export as texport
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.trace import Tracer
+
+K, B_LOC, STEPS, WIDTH = 8, 32, 64, 128
+
+train, test = dataset()
+
+
+def make_bundle(run: RunConfig) -> TrainBundle:
+    import benchmarks.common as bc
+    specs = {"w1": ParamSpec((DIM, WIDTH), (None, None)),
+             "b1": ParamSpec((WIDTH,), (None,), init="zeros"),
+             "w2": ParamSpec((WIDTH, WIDTH), (None, None)),
+             "b2": ParamSpec((WIDTH,), (None,), init="zeros"),
+             "w3": ParamSpec((WIDTH, bc.CLASSES), (None, None)),
+             "b3": ParamSpec((bc.CLASSES,), (None,), init="zeros")}
+    init, local_step, sync = make_local_sgd(run, mlp_loss, num_workers=K,
+                                            use_kernel=True, telemetry=True)
+    n_comp = flatbuf.build_layout(
+        {k: jax.ShapeDtypeStruct(s.shape, "float32")
+         for k, s in specs.items()}).num_buckets
+    return TrainBundle(
+        cfg=run.model, run=run, layout=None, num_workers=K,
+        specs=specs, init=init, local_step=jax.jit(local_step),
+        sync=jax.jit(sync, static_argnames=("group", "compression",
+                                            "plan", "scope")),
+        telemetry=True, n_comp=n_comp)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fence", action="store_true",
+                    help="block_until_ready at span boundaries (true "
+                         "wall-clock, breaks dispatch pipelining)")
+    ap.add_argument("--out", default="traced_run_example")
+    args = ap.parse_args()
+
+    run = RunConfig(
+        model=ModelConfig(name="mlp", family="dense", citation=""),
+        shape=InputShape("traced", DIM, K * B_LOC, "train"),
+        local_sgd=LocalSGDConfig(local_steps=4, local_momentum=0.9,
+                                 sync_compression="sign", wire_pack=True),
+        controller=ControllerConfig(kind="static", telemetry=True),
+        optim=OptimConfig(base_lr=0.15, base_batch=K * B_LOC,
+                          lr_warmup_steps=STEPS // 20,
+                          lr_decay_steps=(STEPS // 2, 3 * STEPS // 4),
+                          weight_decay=1e-4),
+        steps=STEPS)
+
+    out = pathlib.Path(args.out)
+    out.mkdir(exist_ok=True)
+    tr = Tracer(fence=args.fence, annotate=True, metrics=MetricsRegistry())
+    state, hist, summary = fit(
+        run, ShardedBatches(train, K, B_LOC), bundle=make_bundle(run),
+        num_steps=STEPS, tracer=tr,
+        telemetry_path=str(out / "telemetry.jsonl"),
+        manifest_path=str(out / "manifest.json"))
+    texport.write_perfetto(str(out / "trace.json"), tr,
+                           extra={"wall_s": summary["wall_s"]})
+    texport.write_prometheus(str(out / "metrics.prom"), tr.metrics)
+    errs = texport.check_trace_dir(str(out))
+    assert not errs, errs
+
+    print(f"test acc {test_acc(mean_params(state), test):.3f}, "
+          f"final loss {hist[-1]['loss']:.4f}, "
+          f"wall {summary['wall_s']:.2f}s "
+          f"({'fenced' if args.fence else 'unfenced: dispatch time'})")
+    print(f"\nspan census ({summary['trace']['spans']} spans "
+          f"-> {out}/trace.json, load in ui.perfetto.dev):")
+    for name, n in sorted(Counter(s.name for s in tr.spans).items()):
+        tot = sum(s.dur_s or 0.0 for s in tr.spans if s.name == name)
+        print(f"  {name:<12} x{n:<4} {tot * 1e3:8.1f} ms total")
+
+    # the JOIN: ledger stage rows (bytes) x trace stage spans (seconds),
+    # matched on the shared stage id
+    recs = [json.loads(l) for l in open(out / "telemetry.jsonl")]
+    stage_bytes: dict = {}
+    for sp in tr.spans:
+        if sp.name == "collective":
+            stage_bytes.setdefault(sp.attrs["stage"], sp.attrs["wire_bytes"])
+    stage_secs: dict = {}
+    for r in recs:
+        for k, v in r["stage_s"].items():
+            stage_secs[int(k)] = stage_secs.get(int(k), 0.0) + v
+    print("\nper-stage bytes<->seconds join "
+          f"(sync_seconds={summary['ledger']['sync_seconds']:.3f}s):")
+    print(f"  {'stage':>5} {'wire bytes/round':>17} {'seconds total':>14}")
+    for sid in sorted(stage_secs):
+        print(f"  {sid:>5} {stage_bytes.get(sid, 0):>17.0f} "
+              f"{stage_secs[sid]:>14.4f}")
+    print(f"\nartifacts validated under {out}/ "
+          "(trace.json, metrics.prom, telemetry.jsonl, manifest.json)")
+
+
+if __name__ == "__main__":
+    main()

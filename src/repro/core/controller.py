@@ -471,3 +471,28 @@ def make_controller(run: RunConfig, *, n_comp: int = 1) -> SyncController:
     if kind in ("auto_compress", "noise_adaptive"):
         return _KINDS[kind](run, n_comp=n_comp)
     return _KINDS[kind](run)
+
+
+def traced_decision(tracer, controller: SyncController, report: RoundReport,
+                    step: int) -> PlanDelta:
+    """Run one ``update`` + ``plan_delta`` inside a ``controller`` span
+    (ISSUE 8): the span carries the emitted :class:`PlanDelta` and the
+    policy's ``decisions`` provenance, so the trace shows WHICH sensor
+    drove which actuation at each round boundary — and how long the
+    host-side decision itself took (relevant once policies fit models
+    to the telemetry stream).  ``tracer`` is any
+    ``telemetry.trace.Tracer`` (the null tracer makes this exactly the
+    bare update+plan_delta pair)."""
+    with tracer.span("controller", round=report.round, step=report.step,
+                     kind=getattr(controller, "kind", "custom")) as sp:
+        controller.update(report)
+        delta = controller.plan_delta(step)
+        sp.set(next_h=delta.h,
+               compression=(list(delta.compression)
+                            if isinstance(delta.compression, (tuple, list))
+                            else delta.compression),
+               topology=(delta.topology.describe()
+                         if delta.topology is not None else None),
+               batch_scale=delta.batch_scale, lr_scale=delta.lr_scale,
+               decisions=dict(getattr(controller, "decisions", None) or {}))
+    return delta

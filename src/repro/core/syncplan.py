@@ -325,6 +325,14 @@ class SyncPlan:
                              f"(topology={self.topology.describe()})")
         return out
 
+    def collective_stages(self, scope: str = "global") -> tuple[SyncStage, ...]:
+        """The timing/pricing hook (ISSUE 8): the scope's collective
+        stages in schedule order.  A stage's id is its INDEX in this
+        tuple — ``telemetry.CommsLedger.record_plan`` prices bytes and
+        ``telemetry.trace.sync_stage_spans`` attributes seconds under
+        the same ids, so the two streams join per stage."""
+        return tuple(s for s in self.schedule(scope) if s.kind == "collective")
+
     def scope_cost(self, scope: str = "global"):
         """(per-device wire bytes, collective count) of one ``scope``
         round — the sum of the stage estimates the ledger prices from."""

@@ -12,8 +12,18 @@ is appended to the comms ledger and (optionally) one JSONL line in
 ``round_summary`` stats + ledger costs + the controller's NEXT
 decisions).
 
+With a ``telemetry.trace.Tracer`` (ISSUE 8) the loop is additionally
+span-instrumented — ``round`` / ``local_steps`` / ``sync`` (+ per-stage
+``collective`` attribution) / ``controller`` / ``eval`` / ``checkpoint``
+— feeding the Perfetto/Prometheus exporters, the per-stage ``stage_s``
+seconds in the ledger rows and JSONL, and a run manifest beside the
+JSONL.  Without a tracer the loop runs the exact untraced code path
+(pinned bitwise by tests/test_trace.py).
+
 CLI (end-to-end example entry point):
     PYTHONPATH=src python -m repro.launch.train --arch paper-lm --steps 200
+    PYTHONPATH=src python -m repro.launch.train --smoke --steps 20 \
+        --trace-dir traced_run    # + trace.json/metrics.prom/manifest.json
 """
 from __future__ import annotations
 
@@ -29,8 +39,9 @@ from repro import configs
 from repro import telemetry as tele
 from repro.configs.base import InputShape, LocalSGDConfig, OptimConfig, RunConfig
 from repro.core import syncplan as splan
-from repro.core.controller import RoundReport, make_controller
+from repro.core.controller import RoundReport, make_controller, traced_decision
 from repro.core.schedule import DynamicSchedule
+from repro.telemetry import metrics as tmetrics
 from repro.data.partition import ShardedBatches
 from repro.data.synthetic import lm_examples, markov_lm
 from repro.launch import steps as steps_mod
@@ -59,11 +70,18 @@ def _scaled_batch(data_iter, scale: int):
 
 def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
         eval_every=0, eval_fn=None, log=print, mesh=None, layout=None,
-        controller=None, telemetry_path=None):
+        controller=None, telemetry_path=None, tracer=None,
+        checkpoint_every=0, checkpoint_fn=None, manifest_path=None):
     """Run the full schedule; returns (state, history, summary).
 
     ``controller`` overrides the policy built from ``run.controller``;
     ``telemetry_path`` writes one JSON line per global sync round.
+    ``tracer`` (a ``telemetry.trace.Tracer``) span-instruments the loop
+    and — when it carries a metrics registry — feeds the Prometheus set;
+    traced runs extend the JSONL records with ``round_s``/``sync_s``/
+    ``stage_s`` and write a run manifest at ``manifest_path`` (default:
+    ``<telemetry_path>.manifest.json``).  ``checkpoint_fn(state, step)``
+    runs every ``checkpoint_every`` steps inside a ``checkpoint`` span.
     """
     bundle = bundle or steps_mod.build_train(run, mesh=mesh, layout=layout)
     num_steps = num_steps or run.steps
@@ -144,7 +162,17 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
             cost_cache[key] = cost
         return cost_cache[key]
 
-    tlog = open(telemetry_path, "w") if telemetry_path else None
+    tracer = tracer if tracer is not None else tele.NULL
+    mreg = tracer.metrics
+    if tracer.enabled and (manifest_path or telemetry_path):
+        # the reproducibility sidecar BESIDE the JSONL: written up front
+        # so a crashed run still identifies itself to the trend tooling
+        from repro.telemetry import export as texport
+        texport.write_run_manifest(
+            manifest_path or f"{telemetry_path}.manifest.json",
+            run=run, plan=plan, layout=bundle.layout, mesh=mesh)
+
+    tlog = None
     history = []
     comm_rounds = {"block": 0, "global": 0}
     global_rounds = 0
@@ -153,35 +181,64 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     # local_step call so static trajectories stay bitwise-identical
     # (and custom bundles without the lr_scale arg keep working).
     lr_scale_now = 1.0
-    t_start = time.time()
+    # one "round" span per global round: opened at the round's first
+    # local step, closed when its global sync (+ decision) completes
+    round_span = None
+    t_start = time.perf_counter()
     try:
+        # opened inside the try so a raise anywhere in the loop (or in
+        # the ledger cost path) cannot leak the JSONL handle
+        if telemetry_path:
+            tlog = open(telemetry_path, "w")
         for t in range(num_steps):
-            batch = _scaled_batch(data_iter, controller.batch_scale())
-            if lr_scale_now == 1.0:
-                state, metrics = bundle.local_step(state, batch)
-            else:
-                state, metrics = bundle.local_step(state, batch,
-                                                   lr_scale_now)
             h_now = max(int(controller.h_at(t)), 1)
+            if round_span is None:
+                round_span = tracer.start("round", round=global_rounds + 1,
+                                          step=t, h=h_now)
+            with tracer.span("local_steps", step=t) as stp:
+                batch = _scaled_batch(data_iter, controller.batch_scale())
+                if lr_scale_now == 1.0:
+                    state, metrics = bundle.local_step(state, batch)
+                else:
+                    state, metrics = bundle.local_step(state, batch,
+                                                       lr_scale_now)
+                stp.fence(state)
+            if mreg is not None:
+                tmetrics.observe_step(mreg, stp.dur_s)
             level = sched.advance(t)
             synced = ""
             if level == 1:
-                state = bundle.sync(state, plan=plan, scope="block")
-                ledger.record_plan(step=t, level=1, h=h_now, plan=plan,
-                                   scope="block",
-                                   measured=measured_cost(plan, "block"))
+                with tracer.span("sync", scope="block",
+                                 topology=plan.topology.describe()) as ssp:
+                    state = bundle.sync(state, plan=plan, scope="block")
+                    ssp.fence(state)
+                stage_s = tele.sync_stage_spans(tracer, plan, "block", ssp)
+                entry = ledger.record_plan(
+                    step=t, level=1, h=h_now, plan=plan, scope="block",
+                    measured=measured_cost(plan, "block"),
+                    seconds=ssp.dur_s)
                 comm_rounds["block"] += 1
                 synced = "block"
+                if mreg is not None:
+                    tmetrics.observe_round(
+                        mreg, scope="block", h=h_now,
+                        wire_bytes=entry["bytes_on_wire"],
+                        sync_s=ssp.dur_s, stage_s=stage_s)
             elif level == 2:
                 # the plan already carries last round's PlanDelta
                 # (compressor modes / topology) — no loose kwargs
-                state = bundle.sync(state, plan=plan, scope="global")
+                with tracer.span("sync", scope="global",
+                                 topology=plan.topology.describe()) as ssp:
+                    state = bundle.sync(state, plan=plan, scope="global")
+                    ssp.fence(state)
+                sync_s = ssp.dur_s
+                stage_s = tele.sync_stage_spans(tracer, plan, "global", ssp)
                 global_rounds += 1
                 entry = ledger.record_plan(
                     step=t, level=2, h=h_now, plan=plan, scope="global",
                     measured=measured_cost(plan, "global"),
                     batch_scale=controller.batch_scale(),
-                    lr_scale=lr_scale_now)
+                    lr_scale=lr_scale_now, seconds=sync_s)
                 comm_rounds["global"] += 1
                 synced = "global"
                 report = RoundReport(
@@ -191,11 +248,21 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                            if bundle.telemetry else {}),
                     wire_bytes=entry["bytes_on_wire"],
                     collectives=entry["collectives"])
-                controller.update(report)
-                delta = controller.plan_delta(t + 1)
+                delta = traced_decision(tracer, controller, report, t + 1)
                 plan = delta.apply(plan)
                 if getattr(delta, "lr_scale", None) is not None:
                     lr_scale_now = float(delta.lr_scale)
+                tracer.finish(round_span, loss=report.loss,
+                              wire_bytes=report.wire_bytes)
+                round_s = round_span.dur_s
+                round_span = None
+                if mreg is not None:
+                    tmetrics.observe_round(
+                        mreg, scope="global", h=h_now,
+                        wire_bytes=report.wire_bytes, loss=report.loss,
+                        batch_scale=controller.batch_scale(),
+                        lr_scale=lr_scale_now, round_s=round_s,
+                        sync_s=sync_s, stage_s=stage_s)
                 if tlog is not None:
                     # None delta fields mean "keep": log the effective
                     # next decision, not the literal None
@@ -213,6 +280,13 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                                else controller.batch_scale()),
                            "next_lr_scale": lr_scale_now,
                            "topology": plan.topology.describe()}
+                    if tracer.enabled:
+                        # the seconds extension of the schema (README):
+                        # round/sync wall time + per-stage attribution
+                        # keyed by the SAME stage ids the ledger prices
+                        rec["round_s"] = round_s
+                        rec["sync_s"] = sync_s
+                        rec["stage_s"] = {str(i): s for i, s in stage_s}
                     # decision provenance (noise_adaptive): which sensor
                     # drove which actuation this round
                     prov = getattr(controller, "decisions", None)
@@ -224,15 +298,22 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
             rec.update(step=t, synced=synced)
             history.append(rec)
             if eval_every and eval_fn and (t + 1) % eval_every == 0:
-                ev = eval_fn(state)
+                with tracer.span("eval", step=t):
+                    ev = eval_fn(state)
                 rec.update({f"eval_{k}": float(v) for k, v in ev.items()})
                 log(f"step {t+1}: loss={rec['loss']:.4f} "
                     + " ".join(f"eval_{k}={float(v):.4f}"
                                for k, v in ev.items()))
+            if checkpoint_every and checkpoint_fn \
+                    and (t + 1) % checkpoint_every == 0:
+                with tracer.span("checkpoint", step=t) as csp:
+                    csp.fence(checkpoint_fn(state, t))
     finally:
+        if round_span is not None:          # training ended mid-round
+            tracer.finish(round_span, incomplete=True)
         if tlog is not None:
             tlog.close()
-    wall = time.time() - t_start
+    wall = time.perf_counter() - t_start
     summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps,
                "topology": plan.topology.describe(),
                "ledger": ledger.summary(),
@@ -242,6 +323,9 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                                   controller.compression()),
                               "batch_scale": controller.batch_scale(),
                               "lr_scale": lr_scale_now}}
+    if tracer.enabled:
+        summary["trace"] = {"spans": len(tracer.spans),
+                            "fenced": tracer.fence}
     return state, history, summary
 
 
@@ -287,6 +371,14 @@ def main():
     ap.add_argument("--block-steps", type=int, default=1, help="H^b")
     ap.add_argument("--post-local-switch", type=int, default=-1)
     ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--trace-dir", default="",
+                    help="write trace.json / metrics.prom / manifest.json / "
+                         "telemetry.jsonl for this run (Perfetto + "
+                         "Prometheus exports; CI validates the schemas)")
+    ap.add_argument("--fence", action="store_true",
+                    help="block_until_ready at span boundaries: true "
+                         "wall-clock per span at the cost of dispatch "
+                         "pipelining (defaults off)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke or args.arch != "paper-lm" \
@@ -309,9 +401,32 @@ def main():
                                  seq_len=args.seq, sample_seed=123))
     it = ShardedBatches(data, args.workers, args.local_batch)
     bundle = steps_mod.build_train(run, num_workers=args.workers)
+
+    tracer = None
+    trace_kw = {}
+    if args.trace_dir:
+        import os
+        os.makedirs(args.trace_dir, exist_ok=True)
+        tracer = tele.Tracer(fence=args.fence, annotate=True,
+                             metrics=tele.MetricsRegistry())
+        trace_kw = {"tracer": tracer,
+                    "telemetry_path": os.path.join(args.trace_dir,
+                                                   "telemetry.jsonl"),
+                    "manifest_path": os.path.join(args.trace_dir,
+                                                  "manifest.json")}
     state, hist, summary = fit(run, it, bundle=bundle, num_steps=args.steps,
                                eval_every=max(args.steps // 5, 1),
-                               eval_fn=eval_lm(bundle, held))
+                               eval_fn=eval_lm(bundle, held), **trace_kw)
+    if tracer is not None:
+        import os
+
+        from repro.telemetry import export as texport
+        texport.write_perfetto(os.path.join(args.trace_dir, "trace.json"),
+                               tracer, extra={"wall_s": summary["wall_s"]})
+        texport.write_prometheus(os.path.join(args.trace_dir, "metrics.prom"),
+                                 tracer.metrics)
+        print(f"trace: {len(tracer.spans)} spans -> {args.trace_dir}/ "
+              "(trace.json, metrics.prom, manifest.json, telemetry.jsonl)")
     print(f"done: final loss={hist[-1]['loss']:.4f} wall={summary['wall_s']:.1f}s "
           f"comm={summary['comm_rounds']}")
 

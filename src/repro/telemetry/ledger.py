@@ -127,14 +127,24 @@ class CommsLedger:
 
     def record_plan(self, *, step: int, level: int, h: int, plan,
                     scope: str = "global", measured: SyncCost | None = None,
-                    batch_scale: int = 1, lr_scale: float = 1.0) -> dict:
+                    batch_scale: int = 1, lr_scale: float = 1.0,
+                    seconds: float | None = None) -> dict:
         """Append one row per collective stage of ``plan.schedule(scope)``;
-        returns the round totals (``record``-shaped dict)."""
-        stages = [s for s in plan.schedule(scope) if s.kind == "collective"]
+        returns the round totals (``record``-shaped dict).
+
+        ``seconds`` is the round's MEASURED sync wall time (the tracer's
+        sync span, see ``telemetry/trace``): it is apportioned over the
+        stage rows as ``stage_s`` by the same wire-byte weights the byte
+        scaling uses, so every stage id carries bytes AND seconds in one
+        row (the traced spans use identical attribution — the two
+        streams join on (step, scope, stage))."""
+        stages = list(plan.collective_stages(scope))
         est = sum(s.wire_bytes for s in stages)
         scale = (measured.bytes_on_wire / est
                  if measured is not None and est > 0 else 1.0)
         source = measured.source if measured is not None else "analytic"
+        shares = ([s.wire_bytes / est for s in stages] if est > 0
+                  else [1.0 / max(len(stages), 1)] * len(stages))
         total_b, total_c = 0.0, 0
         for i, s in enumerate(stages):
             e = {"step": int(step), "level": int(level), "h": int(h),
@@ -149,15 +159,20 @@ class CommsLedger:
                  "compression": s.compression,
                  "batch_scale": int(batch_scale),
                  "lr_scale": float(lr_scale)}
+            if seconds is not None:
+                e["stage_s"] = float(seconds * shares[i])
             self.entries.append(e)
             total_b += e["bytes_on_wire"]
             total_c += e["collectives"]
-        return {"step": int(step), "level": int(level), "h": int(h),
-                "bytes_on_wire": total_b, "collectives": total_c,
-                "cost_source": source,
-                "compression": "|".join(plan.modes),
-                "batch_scale": int(batch_scale),
-                "lr_scale": float(lr_scale)}
+        out = {"step": int(step), "level": int(level), "h": int(h),
+               "bytes_on_wire": total_b, "collectives": total_c,
+               "cost_source": source,
+               "compression": "|".join(plan.modes),
+               "batch_scale": int(batch_scale),
+               "lr_scale": float(lr_scale)}
+        if seconds is not None:
+            out["sync_s"] = float(seconds)
+        return out
 
     def total_bytes(self, *, level: int | None = None) -> float:
         return float(sum(e["bytes_on_wire"] for e in self.entries
@@ -214,10 +229,15 @@ class CommsLedger:
                     / max(rel_examples, 1))}
 
     def summary(self) -> dict:
-        return {"sync_rounds": self.num_rounds(),
-                "wire_bytes": self.total_bytes(),
-                "collectives": self.total_collectives(),
-                "cost_sources": sorted({e["cost_source"]
-                                        for e in self.entries}),
-                "scaling": self.scaling(),
-                "topologies": self.by_topology()}
+        out = {"sync_rounds": self.num_rounds(),
+               "wire_bytes": self.total_bytes(),
+               "collectives": self.total_collectives(),
+               "cost_sources": sorted({e["cost_source"]
+                                       for e in self.entries}),
+               "scaling": self.scaling(),
+               "topologies": self.by_topology()}
+        if any("stage_s" in e for e in self.entries):
+            # measured sync wall time rode in via record_plan(seconds=)
+            out["sync_seconds"] = float(sum(e.get("stage_s", 0.0)
+                                            for e in self.entries))
+        return out
