@@ -429,3 +429,101 @@ def noise_adaptive_bench():
          extra={"round_s": round(_mean("round"), 6),
                 "sync_s": round(_mean("sync"), 6),
                 "stage_s": {k: round(v, 6) for k, v in sorted(stage_s.items())}})
+
+
+def elastic_bench():
+    """Elastic worker pool smoke (ISSUE 9).
+
+    Two short runs through the backend seam on a tiny resident quad
+    model, tracking the elastic machinery's cost point across PRs:
+
+    * ``backend/elastic_resize`` — a scripted W=4 -> 2 -> 4 run on the
+      (homogeneous) simulated backend: resize count, per-worker-set
+      wire bytes per round from the ledger, final loss.
+    * ``backend/straggler_demotion`` — an injected straggler drives the
+      skew gauge -> ElasticController demotion; the record carries the
+      simulated per-backend round seconds for both scopes (the demoted
+      worker prices only the outer rounds) and the post-demotion skew
+      over the active set (0.0 when the policy worked).
+    """
+    from repro.backend.simulated import SimulatedBackend
+    from repro.configs.base import (ControllerConfig, InputShape,
+                                    LocalSGDConfig, ModelConfig, OptimConfig,
+                                    RunConfig)
+    from repro.core.controller import ElasticController
+    from repro.core.local_sgd import make_local_sgd
+    from repro.data.partition import ShardedBatches
+    from repro.launch.steps import TrainBundle
+    from repro.launch.train import fit
+    from repro.models.base import ParamSpec
+
+    W, D, C, H, steps = 4, 6, 3, 2, 24
+
+    def loss(p, b):
+        l = jnp.mean((b["x"] @ p["w"] + p["b"] - b["y"]) ** 2)
+        return l, {"xent": l}
+
+    def build(run, ws):
+        init, local_step, sync = make_local_sgd(
+            run, loss, num_workers=ws.num_workers, use_kernel=True,
+            telemetry=True)
+        return TrainBundle(
+            cfg=run.model, run=run, layout=None,
+            num_workers=ws.num_workers,
+            specs={"w": ParamSpec((D, C), (None, None)),
+                   "b": ParamSpec((C,), (None,), init="zeros")},
+            init=init, local_step=local_step, sync=sync, telemetry=True,
+            n_comp=1, worker_set=ws)
+
+    run = RunConfig(
+        model=ModelConfig(name="bench", family="dense", citation=""),
+        shape=InputShape("t", D, W * 8, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, local_momentum=0.9,
+                                 nesterov=True),
+        optim=OptimConfig(base_lr=0.03, base_batch=W * 8, weight_decay=0.0,
+                          lr_warmup_steps=0, lr_decay_steps=()),
+        controller=ControllerConfig(kind="elastic"),
+        steps=steps)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096, D))
+    data = {"x": np.asarray(x),
+            "y": np.asarray(x @ (jnp.ones((D, C)) * 0.5))}
+
+    # --- scripted resize: W=4 -> 2 -> 4 -------------------------------
+    be = SimulatedBackend(W, build_fn=build)
+    ctl = ElasticController(run, resize_at={3: 2, 6: 4})
+    with wall_timer("backend/elastic_resize") as w:
+        _, hist, summary = fit(run, ShardedBatches(data, W, 8), backend=be,
+                               controller=ctl, num_steps=steps,
+                               log=lambda *a, **k: None)
+    wsets = summary["ledger"]["worker_sets"]
+    per_w = ";".join(f"W{k.split('=')[1]}_bytes_per_round={v['bytes_per_round']:.0f}"
+                     for k, v in sorted(wsets.items()))
+    emit("backend/elastic_resize", w["us"] / steps,
+         f"resizes={summary['resizes']};{per_w};"
+         f"final_loss={hist[-1]['loss']:.4f}",
+         extra={"resizes": summary["resizes"],
+                "worker_sets": {k: round(v["bytes_per_round"], 1)
+                                for k, v in wsets.items()}})
+
+    # --- straggler demotion -------------------------------------------
+    be2 = SimulatedBackend(W, latency_s={2: 0.02}, build_fn=build)
+    ctl2 = ElasticController(run)
+    with wall_timer("backend/straggler_demotion") as w:
+        _, _, summary2 = fit(run, ShardedBatches(data, W, 8), backend=be2,
+                             controller=ctl2, num_steps=steps,
+                             log=lambda *a, **k: None)
+    ts = [float(t) for t in be2.worker_step_times(h=H)]
+    mean_t = sum(ts) / len(ts)
+    post_skew = (max(ts) - min(ts)) / mean_t if mean_t > 0 else 0.0
+    rs_global = be2.round_seconds(h=H, scope="global")
+    rs_block = be2.round_seconds(h=H, scope="block")
+    emit("backend/straggler_demotion", w["us"] / steps,
+         f"demoted={list(be2.worker_set.demoted)};"
+         f"post_demotion_skew={post_skew:.3f};"
+         f"round_s_global={rs_global:.4f};round_s_block={rs_block:.4f};"
+         f"topology={summary2['topology']}",
+         extra={"post_demotion_skew": round(post_skew, 4),
+                "round_s_global": round(rs_global, 5),
+                "round_s_block": round(rs_block, 5)})

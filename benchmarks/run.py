@@ -17,6 +17,7 @@ Mapping to the paper (see DESIGN.md §6):
   kernels Pallas kernel microbenches
   roofline dry-run derived roofline rows (deliverable g quick view)
   noise_adaptive composite controller smoke: wire bytes/round + loss
+  elastic backend seam smoke: scripted resize + straggler demotion
 """
 from __future__ import annotations
 
@@ -50,6 +51,7 @@ def main() -> None:
         "sharded": bench_kernels.sharded_bench,
         "syncplan": bench_kernels.syncplan_bench,
         "noise_adaptive": bench_kernels.noise_adaptive_bench,
+        "elastic": bench_kernels.elastic_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -69,7 +71,7 @@ def main() -> None:
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
     smoke = ("kernels", "bucket", "resident", "sharded", "syncplan",
-             "noise_adaptive")
+             "noise_adaptive", "elastic")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

@@ -1,0 +1,36 @@
+"""Execution backends: who the workers are, behind one seam.
+
+Eagerly exposes only :mod:`repro.backend.base` (WorkerSet / Backend —
+pure bookkeeping, no heavy imports); the concrete backends resolve
+lazily via module ``__getattr__`` so ``launch.steps`` can import
+``repro.backend.base`` at module load without a cycle
+(``backend.local`` imports ``launch.steps`` back).
+"""
+from __future__ import annotations
+
+from repro.backend.base import Backend, WorkerSet
+
+_LAZY = {
+    "LocalBackend": ("repro.backend.local", "LocalBackend"),
+    "SimulatedBackend": ("repro.backend.simulated", "SimulatedBackend"),
+    "DistributedBackend": ("repro.backend.distributed", "DistributedBackend"),
+}
+
+__all__ = ["Backend", "WorkerSet", *_LAZY, "make_backend"]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def make_backend(kind: str, num_workers: int | None = None, **kw) -> Backend:
+    """CLI/config entry point: ``local`` / ``simulated`` / ``distributed``."""
+    kinds = {"local": "LocalBackend", "simulated": "SimulatedBackend",
+             "distributed": "DistributedBackend"}
+    if kind not in kinds:
+        raise ValueError(f"unknown backend {kind!r} (want one of {sorted(kinds)})")
+    return __getattr__(kinds[kind])(num_workers, **kw)

@@ -1,0 +1,147 @@
+"""Backend seam: who the workers are, owned as a first-class object.
+
+Everything above this module (fit / controllers / SyncPlan) talks about
+"the worker set" through two objects:
+
+* :class:`WorkerSet` — an immutable census of the live workers: stable
+  integer ids, who is demoted to the outer hierarchical scope, and how
+  the set maps onto the stacked worker axis.  Resize returns a NEW set
+  (shrink keeps the first ids, grow appends fresh ones) so a bundle /
+  plan / ledger row can hold the exact set it was built for.
+* :class:`Backend` — the execution substrate that owns a WorkerSet and
+  knows how to (re)build a :class:`~repro.launch.steps.TrainBundle` for
+  it.  Concrete backends: ``local`` (single-process vmapped mesh — the
+  default, bitwise-identical to the pre-seam stack), ``simulated``
+  (local execution + injected per-worker latency so straggler telemetry
+  has real values in CI), ``distributed`` (multi-controller
+  ``jax.distributed``; structural until multi-host CI exists).
+
+The seam is deliberately thin: a Backend does not wrap the train loop,
+it answers "build me a bundle for THIS worker set" and "what did each
+worker's step time look like this round".  Elastic resize and straggler
+demotion are plan-level operations (``PlanDelta.workers`` /
+``PlanDelta.demote``) actuated by ``fit`` through these two calls.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+
+@dataclass(frozen=True)
+class WorkerSet:
+    """Immutable census of the live workers.
+
+    ``ids`` are stable across resizes: position in the tuple IS the row
+    in the stacked worker axis, so ``ids[i]`` names the worker whose
+    state lives at ``state.params[i]``.  ``demoted`` workers still hold
+    a row (they keep training and syncing) but are scheduled on the
+    outer hierarchical scope — the flat/block ring no longer waits on
+    them every round.
+    """
+    ids: tuple
+    demoted: tuple = ()
+
+    @classmethod
+    def of(cls, num_workers: int) -> "WorkerSet":
+        return cls(ids=tuple(range(int(num_workers))))
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.ids)
+
+    @property
+    def active(self) -> tuple:
+        """Workers on the inner (fast) scope: ids minus demoted."""
+        return tuple(i for i in self.ids if i not in self.demoted)
+
+    def resize(self, new_w: int) -> "WorkerSet":
+        """Shrink keeps the first ``new_w`` ids (matching the
+        consecutive-group fold in :mod:`repro.core.elastic`); grow
+        appends fresh ids past the current maximum.  Demotions carry
+        over for surviving ids only."""
+        new_w = int(new_w)
+        if new_w <= 0:
+            raise ValueError(f"worker set must be non-empty, got {new_w}")
+        if new_w <= len(self.ids):
+            ids = self.ids[:new_w]
+        else:
+            nxt = max(self.ids) + 1 if self.ids else 0
+            ids = self.ids + tuple(range(nxt, nxt + new_w - len(self.ids)))
+        return WorkerSet(ids=ids,
+                         demoted=tuple(d for d in self.demoted if d in ids))
+
+    def demote(self, worker_id: int) -> "WorkerSet":
+        if worker_id not in self.ids:
+            raise ValueError(f"unknown worker id {worker_id} (ids={self.ids})")
+        if worker_id in self.demoted:
+            return self
+        return replace(self, demoted=self.demoted + (worker_id,))
+
+    def row_of(self, worker_id: int) -> int:
+        """Stacked-axis row of a worker id."""
+        return self.ids.index(worker_id)
+
+
+class Backend:
+    """Execution-substrate interface (see module docstring).
+
+    Subclasses set :attr:`kind` and implement :meth:`build`.  The base
+    class carries the WorkerSet bookkeeping so resize/demote semantics
+    are identical across backends.
+    """
+
+    kind: str = "base"
+
+    def __init__(self, num_workers: int | None = None):
+        self._worker_set = (WorkerSet.of(num_workers)
+                            if num_workers is not None else None)
+
+    # -- worker census ----------------------------------------------------
+    @property
+    def worker_set(self) -> WorkerSet | None:
+        return self._worker_set
+
+    @property
+    def num_workers(self) -> int | None:
+        ws = self._worker_set
+        return ws.num_workers if ws is not None else None
+
+    def demote(self, worker_id: int) -> WorkerSet:
+        if self._worker_set is None:
+            raise RuntimeError("backend has no worker set yet (call build)")
+        self._worker_set = self._worker_set.demote(worker_id)
+        return self._worker_set
+
+    # -- bundle construction ----------------------------------------------
+    def build(self, run, **kw):
+        """Build a TrainBundle for the current worker set."""
+        raise NotImplementedError
+
+    def resize(self, run, new_w: int, **kw):
+        """Adopt a new worker-set width and rebuild the bundle.
+
+        State surgery (``elastic.resize_state``) is the caller's job —
+        the backend only re-derives the compiled artifacts (local_step /
+        sync / SyncPlan) for the new W.
+        """
+        if self._worker_set is None:
+            raise RuntimeError("backend has no worker set yet (call build)")
+        self._worker_set = self._worker_set.resize(new_w)
+        return self.build(run, **kw)
+
+    # -- telemetry ---------------------------------------------------------
+    def worker_step_times(self, *, h: int = 1,
+                          measured_s: float | None = None):
+        """Per-worker wall seconds for the last round's local phase, in
+        stacked-axis order, or ``None`` when the backend executes the
+        workers in lockstep (vmapped local: one device, one clock — skew
+        is structurally unobservable, the gauge reads 0.0)."""
+        return None
+
+    def describe(self) -> dict:
+        ws = self._worker_set
+        return {"kind": self.kind,
+                "num_workers": ws.num_workers if ws else None,
+                "worker_ids": list(ws.ids) if ws else None,
+                "demoted": list(ws.demoted) if ws else None}

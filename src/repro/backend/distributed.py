@@ -1,0 +1,82 @@
+"""Multi-controller ``jax.distributed`` backend (structural).
+
+One process per host, each holding a slice of the global mesh; the
+WorkerSet census and resize/demote bookkeeping are identical to the
+local backend (and unit-tested), while actual multi-host execution
+requires a real multi-process launch — on a single-process box
+:meth:`DistributedBackend.build` raises with launch guidance instead of
+silently building a local bundle under a misleading name.
+
+The seam is what matters: ``fit`` / controllers / SyncPlan never ask
+"which backend", only "what is the worker set and build me a bundle for
+it", so swapping this in on a pod changes no call sites above the seam.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.backend.base import Backend
+
+
+class DistributedBackend(Backend):
+    kind = "distributed"
+
+    def __init__(self, num_workers: int | None = None, *,
+                 coordinator_address: str | None = None,
+                 process_id: int | None = None,
+                 num_processes: int | None = None,
+                 layout=None, use_kernel: bool = False):
+        super().__init__(num_workers)
+        self.coordinator_address = (coordinator_address
+                                    or os.environ.get("JAX_COORDINATOR_ADDRESS"))
+        self.process_id = process_id
+        self.num_processes = num_processes
+        self.layout = layout
+        self.use_kernel = use_kernel
+        self._initialized = False
+
+    def ensure_initialized(self):
+        """Lazily bring up the jax.distributed runtime (idempotent)."""
+        if self._initialized:
+            return
+        import jax
+        if jax.process_count() > 1:
+            self._initialized = True   # launcher already initialized it
+            return
+        if not self.coordinator_address:
+            raise RuntimeError(
+                "DistributedBackend needs a coordinator: pass "
+                "coordinator_address= (or set JAX_COORDINATOR_ADDRESS) and "
+                "launch one process per host, e.g.\n"
+                "  JAX_COORDINATOR_ADDRESS=host0:1234 python -m "
+                "repro.launch.train --backend distributed ...\n"
+                "For single-process development use --backend local or "
+                "--backend simulated.")
+        import jax.distributed
+        jax.distributed.initialize(
+            coordinator_address=self.coordinator_address,
+            num_processes=self.num_processes,
+            process_id=self.process_id)
+        self._initialized = True
+
+    def build(self, run, **kw):
+        self.ensure_initialized()
+        import jax
+        if jax.process_count() <= 1:
+            raise RuntimeError(
+                "DistributedBackend requires a multi-process launch "
+                f"(process_count={jax.process_count()}); use LocalBackend / "
+                "SimulatedBackend for single-process runs.")
+        from jax.sharding import Mesh
+        import numpy as np
+        from repro.launch import steps as steps_mod
+        from repro.sharding.layout import train_layout
+        layout = self.layout or train_layout(("data",), worker_axes=("data",))
+        mesh = Mesh(np.asarray(jax.devices()).reshape(
+            tuple(-1 if i == 0 else 1
+                  for i in range(len(layout.mesh_axes)))), layout.mesh_axes)
+        bundle = steps_mod.build_train(
+            run, mesh=mesh, layout=layout, use_kernel=self.use_kernel,
+            worker_set=self._worker_set)
+        self._worker_set = bundle.worker_set
+        return bundle

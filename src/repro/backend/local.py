@@ -1,0 +1,73 @@
+"""Local backend: single-process vmapped mesh execution (the default).
+
+``LocalBackend.build`` delegates to :func:`repro.launch.steps.build_train`
+with identical defaults, so a static-W run through the backend seam is
+bitwise-identical to the pre-seam stack (pinned by
+``tests/test_backend.py``).  The backend's value is the census: it owns
+the :class:`~repro.backend.base.WorkerSet`, and ``resize`` re-derives
+the compiled artifacts (local_step / sync / SyncPlan) for a new W while
+``fit`` carries the resident state across via
+:func:`repro.core.elastic.resize_state`.
+
+Workers on this backend execute under one ``jax.vmap`` on one clock, so
+per-worker step times are structurally lockstep — ``worker_step_times``
+returns ``None`` and the ``worker_step_skew`` gauge stays 0.0 (the
+simulated backend is the one that makes it move).
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.backend.base import Backend, WorkerSet
+
+
+class LocalBackend(Backend):
+    kind = "local"
+
+    def __init__(self, num_workers: int | None = None, *, mesh=None,
+                 layout=None, use_kernel: bool = False, jit: bool = True,
+                 build_fn=None):
+        super().__init__(num_workers)
+        self.mesh = mesh
+        self.layout = layout
+        self.use_kernel = use_kernel
+        self.jit = jit
+        # custom bundle factory ``build_fn(run, worker_set) -> TrainBundle``
+        # — the seam for models outside the launch zoo (tests, benches):
+        # resize calls back into it with the NEW worker set so elastic
+        # runs rebuild the same model at a different W
+        self.build_fn = build_fn
+
+    def build(self, run, **kw):
+        if self.build_fn is not None:
+            bundle = self.build_fn(run, self._worker_set)
+            if getattr(bundle, "worker_set", None) is None:
+                bundle.worker_set = (self._worker_set
+                                     or WorkerSet.of(bundle.num_workers))
+            self._worker_set = bundle.worker_set
+            return bundle
+        from repro.launch import steps as steps_mod
+        kw.setdefault("mesh", self.mesh)
+        kw.setdefault("layout", self.layout)
+        kw.setdefault("use_kernel", self.use_kernel)
+        kw.setdefault("jit", self.jit)
+        bundle = steps_mod.build_train(run, worker_set=self._worker_set, **kw)
+        # build_train defaults the census when the backend had none yet
+        # (num_workers derived from the mesh/layout) — adopt it
+        self._worker_set = bundle.worker_set
+        return bundle
+
+    def adopt(self, bundle) -> WorkerSet:
+        """Take ownership of a hand-made bundle's worker set (the
+        deprecation shim for pre-seam callers that construct TrainBundle
+        themselves); stamps ``bundle.worker_set`` when missing."""
+        if bundle.worker_set is None:
+            warnings.warn(
+                "TrainBundle without a worker_set is deprecated; build it "
+                "through a Backend (repro.backend.LocalBackend) or "
+                "launch.steps.build_train so the worker census is owned by "
+                "the backend seam",
+                DeprecationWarning, stacklevel=3)
+            bundle.worker_set = WorkerSet.of(bundle.num_workers)
+        self._worker_set = bundle.worker_set
+        return self._worker_set

@@ -1,0 +1,58 @@
+"""Simulated heterogeneous backend: local execution + injected latency.
+
+Numerically IDENTICAL to :class:`~repro.backend.local.LocalBackend`
+(same build path, same trajectories) — what it adds is a per-worker
+wall-clock model so the straggler telemetry has real values on a
+single-process CI box.  ``worker_step_times`` reports, for each worker
+in stacked-axis order,
+
+    t_i = h * (base_step_s + latency_s.get(id_i, 0.0))
+
+so the ``worker_step_skew`` gauge ((max-min)/mean over the ACTIVE set)
+is nonzero exactly when the injected latency map is, and drops back
+toward 0 after the controller demotes the slow worker (demoted workers
+leave the inner scope, so they stop contributing to the skew the flat
+ring experiences).  ``round_seconds`` prices a round under the current
+census the same way: the inner scope waits on the slowest active
+worker, the outer (global) scope on the slowest worker overall.
+"""
+from __future__ import annotations
+
+from repro.backend.local import LocalBackend
+
+
+class SimulatedBackend(LocalBackend):
+    kind = "simulated"
+
+    def __init__(self, num_workers: int | None = None, *,
+                 latency_s: dict | None = None, base_step_s: float = 0.01,
+                 **kw):
+        super().__init__(num_workers, **kw)
+        self.latency_s = dict(latency_s or {})
+        self.base_step_s = float(base_step_s)
+
+    def _time_of(self, worker_id: int, h: int) -> float:
+        return h * (self.base_step_s + self.latency_s.get(worker_id, 0.0))
+
+    def worker_step_times(self, *, h: int = 1,
+                          measured_s: float | None = None):
+        """Simulated per-worker seconds for one local phase of ``h``
+        steps, in stacked-axis order.  ACTIVE workers only — demoted
+        workers run on the outer scope and no longer gate the inner
+        ring, which is what makes post-demotion skew observable."""
+        ws = self._worker_set
+        if ws is None:
+            return None
+        active = ws.active or ws.ids
+        return [self._time_of(i, h) for i in active]
+
+    def round_seconds(self, *, h: int = 1, scope: str = "global") -> float:
+        """Wall seconds one sync round waits on the local phase: the
+        slowest active worker for inner/block scopes, the slowest worker
+        overall for the global scope (demoted workers still sync
+        there)."""
+        ws = self._worker_set
+        if ws is None:
+            return 0.0
+        ids = ws.ids if scope == "global" else (ws.active or ws.ids)
+        return max(self._time_of(i, h) for i in ids)

@@ -91,9 +91,77 @@ def save_flat(path: str, tree, *, step: int | None = None,
         json.dump(meta, f)
 
 
+def _elastic_restore_flat(path: str, template, layout, meta):
+    """Worker-axis re-bucket: restore a snapshot saved at W_old into a
+    template at W_new (the elastic-resize x checkpoint interaction).
+
+    Applies ONLY when the saved and template layouts agree on
+    everything except one consistent leading-dim pair (W_old, W_new)
+    on the worker-stacked leaves — leaf count, dtypes, trailing shapes,
+    and the single-copy leaves must match exactly.  Shrink keeps the
+    first W_new workers BIT-EXACT (surviving state round-trips
+    unchanged); grow clones each worker W_new/W_old times (exactly how
+    ``core/elastic`` grows a live run).  Returns None when the mismatch
+    is not an elastic one (the caller raises its strict error).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import flatbuf
+    from repro.core.elastic import resize_axis
+
+    saved_shapes = [tuple(s) for s in meta["leaf_shapes"]]
+    tmpl_shapes = [tuple(s.shape) for s in layout.slots]
+    if len(saved_shapes) != len(tmpl_shapes) or \
+            meta["leaf_dtypes"] != [s.dtype for s in layout.slots]:
+        return None
+    pair = None
+    for ss, ts in zip(saved_shapes, tmpl_shapes):
+        if ss == ts:
+            continue
+        if len(ss) != len(ts) or not ss or ss[1:] != ts[1:]:
+            return None
+        if pair is None:
+            pair = (ss[0], ts[0])
+        elif (ss[0], ts[0]) != pair:
+            return None
+    if pair is None:
+        return None          # identical leaves, bucketing disagreed: not elastic
+    w_old, w_new = pair
+    if (w_old % w_new) if w_old > w_new else (w_new % w_old):
+        return None
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(leaves) != len(saved_shapes):
+        return None
+    # rebuild the layout the snapshot was SAVED with: the template's
+    # structure at the saved shapes, validated against the recorded
+    # bucketing so a stale meta cannot silently misparse the buffers
+    sds = [jax.ShapeDtypeStruct(s, jnp.zeros((), d).dtype)
+           for s, d in zip(saved_shapes, meta["leaf_dtypes"])]
+    slay = flatbuf.build_layout(jax.tree_util.tree_unflatten(treedef, sds))
+    if list(slay.bucket_dtypes) != meta["bucket_dtypes"] or \
+            list(slay.bucket_rows) != meta["bucket_rows"]:
+        return None
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    bufs = []
+    for i in range(slay.num_buckets):
+        dt = np.dtype(jnp.zeros((), slay.bucket_dtypes[i]).dtype)
+        bufs.append(jnp.asarray(
+            data[f"bucket{i}"].view(dt).reshape(slay.bucket_rows[i], -1)))
+    saved_leaves = jax.tree_util.tree_flatten(flatbuf.unflatten(slay, bufs))[0]
+    out = [sl if tuple(sl.shape) == ts
+           else resize_axis(sl, ts[0], fold="slice")
+           for sl, ts in zip(saved_leaves, tmpl_shapes)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def restore_flat(path: str, template):
     """Restore a :func:`save_flat` snapshot through ``flatbuf.unflatten``
-    into the structure/shapes/dtypes of ``template``."""
+    into the structure/shapes/dtypes of ``template``.
+
+    A snapshot saved at a different worker count restores through the
+    elastic re-bucket path (see :func:`_elastic_restore_flat`): shrink
+    keeps the surviving workers bit-exact, grow clones — any other
+    layout mismatch still raises."""
     from repro.core import flatbuf
 
     layout = flatbuf.build_layout(template)
@@ -103,6 +171,9 @@ def restore_flat(path: str, template):
             layout.num_leaves != meta["num_leaves"] or \
             [list(s.shape) for s in layout.slots] != meta["leaf_shapes"] or \
             [s.dtype for s in layout.slots] != meta["leaf_dtypes"]:
+        restored = _elastic_restore_flat(path, template, layout, meta)
+        if restored is not None:
+            return restored
         raise ValueError(
             f"flat checkpoint layout mismatch: saved "
             f"{meta['bucket_dtypes']}/{meta['bucket_rows']} "

@@ -220,6 +220,14 @@ class ControllerConfig:
                          compression escalation, and an LR-decay handoff
                          (``lr_scale`` on PlanDelta) once the batch hits
                          ``max_batch_scale``.
+      * elastic        — worker-set policy on the Backend seam
+                         (ISSUE 9): scripted/externally-triggered
+                         resizes via ``PlanDelta.workers`` (with LR/
+                         batch co-scaling in fit, Lau et al. 2024) and
+                         straggler demotion — when the step-time skew
+                         gauge exceeds ``skew_threshold`` for
+                         ``skew_patience`` rounds, the slowest worker
+                         is demoted to the outer hierarchical scope.
 
     ``telemetry=None`` enables stats collection exactly when the kind
     needs it (any non-static kind); set True to collect round telemetry
@@ -228,7 +236,7 @@ class ControllerConfig:
     """
 
     kind: Literal["static", "diversity_h", "adaptive_batch",
-                  "auto_compress", "noise_adaptive"] = "static"
+                  "auto_compress", "noise_adaptive", "elastic"] = "static"
     telemetry: bool | None = None     # None => kind != "static"
     # H adaptation bounds / start (diversity_h)
     h_min: int = 1
@@ -251,6 +259,12 @@ class ControllerConfig:
     noise_grow: float = 1.0
     lr_cap_decay: float = 0.5
     lr_scale_min: float = 0.1
+    # straggler demotion (elastic): demote the slowest worker to the
+    # outer hierarchical scope once the worker_step_skew gauge
+    # ((max-min)/mean over the active set) stays above skew_threshold
+    # for skew_patience consecutive global rounds
+    skew_threshold: float = 0.5
+    skew_patience: int = 2
 
     @property
     def wants_telemetry(self) -> bool:

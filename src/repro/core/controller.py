@@ -447,12 +447,111 @@ class NoiseAdaptiveController(_EmitsPlanDelta):
                                               "noise still dominant"}
 
 
+class ElasticController(_EmitsPlanDelta):
+    """Worker-set policy on the Backend seam (ISSUE 9).
+
+    Two actuations, both carried on the same per-round
+    :class:`PlanDelta` every other policy uses:
+
+    * **elastic resize** — ``resize_at`` maps global-round index to a
+      target worker-set width; at that round the delta carries
+      ``workers=W'`` and the fit loop performs the state surgery
+      (core/elastic), rebuilds the bundle through the backend, and
+      applies the Lau et al. 2024 LR/batch co-scaling.  (The scripted
+      map stands in for an external membership signal — a real cluster
+      would feed join/leave events into the same field.)
+    * **straggler demotion** — when the ``worker_step_skew`` gauge
+      (fed by the backend's per-worker step times; structurally 0.0 on
+      the lockstep local backend) exceeds ``skew_threshold`` for
+      ``skew_patience`` consecutive rounds, the slowest worker is
+      demoted: ``demote=<id>`` moves it to the outer scope in the
+      backend's census, and — when the config can serve block syncs
+      (plain-mean paths only: compression / global momentum require
+      flat local SGD, see core/local_sgd) — the delta also switches the
+      plan to ``hierarchical(W//2)`` and stretches the outer cadence
+      via ``block_steps`` so the demoted worker stops gating every
+      round.
+
+    H / compression / batch follow the static schedule — this policy
+    only moves workers.
+    """
+
+    kind = "elastic"
+
+    def __init__(self, run: RunConfig, *, resize_at: dict | None = None,
+                 demote_block_steps: int = 2):
+        from repro.core.local_sgd import needs_anchor
+        self.ls = run.local_sgd
+        self.cc = run.controller
+        self.resize_at = {int(k): int(v) for k, v in (resize_at or {}).items()}
+        self.demote_block_steps = int(demote_block_steps)
+        self.can_block = not needs_anchor(self.ls)
+        self.skew_streak = 0
+        self.demoted: set[int] = set()
+        self.decisions: dict = {}
+        self._pending_workers: int | None = None
+        self._pending_demote: int | None = None
+        self._pending_block_steps: int | None = None
+
+    def h_at(self, step: int) -> int:
+        return local_steps_at(self.ls, step)
+
+    def compression(self):
+        return None
+
+    def batch_scale(self) -> int:
+        return 1
+
+    def update(self, report: RoundReport) -> None:
+        self.decisions = {}
+        target = self.resize_at.get(report.round)
+        if target is not None:
+            self._pending_workers = target
+            self.decisions["resize"] = {"workers": target,
+                                        "round": report.round}
+        skew = report.stats.get("worker_step_skew")
+        if skew is None:
+            return
+        if skew > self.cc.skew_threshold:
+            self.skew_streak += 1
+        else:
+            self.skew_streak = 0
+        slowest = report.stats.get("worker_slowest")
+        if (self.skew_streak >= self.cc.skew_patience
+                and slowest is not None and slowest not in self.demoted):
+            slowest = int(slowest)
+            self.skew_streak = 0
+            self.demoted.add(slowest)
+            self._pending_demote = slowest
+            self.decisions["straggler"] = {"demote": slowest,
+                                           "skew": float(skew),
+                                           "scheduled": self.can_block}
+            if self.can_block:
+                from repro.core.syncplan import (default_block_size,
+                                                 hierarchical)
+                w = int(report.stats.get("num_workers") or 0)
+                if w > 1:
+                    self._topology_switch = hierarchical(default_block_size(w))
+                    self._pending_block_steps = self.demote_block_steps
+
+    def plan_delta(self, step: int) -> PlanDelta:
+        import dataclasses
+        delta = super().plan_delta(step)
+        w, self._pending_workers = self._pending_workers, None
+        d, self._pending_demote = self._pending_demote, None
+        b, self._pending_block_steps = self._pending_block_steps, None
+        if w is None and d is None and b is None:
+            return delta
+        return dataclasses.replace(delta, workers=w, demote=d, block_steps=b)
+
+
 _KINDS = {
     "static": StaticController,
     "diversity_h": DiversityHController,
     "adaptive_batch": AdaptiveBatchController,
     "auto_compress": AutoCompressController,
     "noise_adaptive": NoiseAdaptiveController,
+    "elastic": ElasticController,
 }
 
 
@@ -494,5 +593,6 @@ def traced_decision(tracer, controller: SyncController, report: RoundReport,
                topology=(delta.topology.describe()
                          if delta.topology is not None else None),
                batch_scale=delta.batch_scale, lr_scale=delta.lr_scale,
+               workers=delta.workers, demote=delta.demote,
                decisions=dict(getattr(controller, "decisions", None) or {}))
     return delta

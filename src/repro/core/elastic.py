@@ -1,0 +1,125 @@
+"""Elastic worker-axis resize: carry LocalSGDState through a W change.
+
+The worker axis is the leading dim of every stacked array in a
+:class:`~repro.core.local_sgd.LocalSGDState` (params / momentum /
+ef_memory; ``(W,) + shape`` on the tree path, ``(W, rows, 128)`` bucket
+buffers with ``leading=1`` on the resident path).  A resize maps that
+axis to a new width without materializing the pytree view:
+
+* **shrink** (W -> W', W % W' == 0): fold groups of ``W // W'``
+  consecutive workers.  ``fold="mean"`` averages the group — the same
+  reduction the sync's :func:`~repro.core.local_sgd.group_mean` applies,
+  so departing workers' momentum / EF memory is folded into the
+  survivors rather than dropped.  ``fold="slice"`` keeps the first W'
+  workers bit-exact (the checkpoint-restore semantics, where the
+  surviving state must round-trip exactly).
+* **grow** (W -> W', W' % W == 0): ``jnp.repeat`` each worker
+  ``W' // W`` times.  Clones start from identical state and diverge
+  through their data shards — exactly how a fresh run seeded from the
+  synced model would start.
+
+Single-copy state (anchor, global_u, step, rng) has no worker axis and
+passes through untouched.  Telemetry accumulators carry their ``(W,)``
+fields through the same fold so ``round_summary``'s ``num_workers``
+tracks the live worker set.
+
+LR/batch co-scaling on resize (Lau et al. 2024, eq. 5) lives in the fit
+loop, not here — this module is pure state surgery.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatbuf
+from repro.telemetry import stats as tstats
+
+
+def resize_axis(x, new_w: int, *, fold: str = "mean"):
+    """Resize the leading (worker) axis of one array to ``new_w``.
+
+    Shrink requires ``W % new_w == 0`` (consecutive-group fold, matching
+    ``group_mean``'s blocks-of-consecutive-workers convention); grow
+    requires ``new_w % W == 0`` (uniform clone).  Dtype is preserved —
+    the mean fold rounds back through the input dtype exactly like the
+    sync's mean does.
+    """
+    w = int(x.shape[0])
+    if new_w == w:
+        return x
+    if fold not in ("mean", "slice"):
+        raise ValueError(f"unknown fold {fold!r} (want 'mean' or 'slice')")
+    if new_w < w:
+        if w % new_w:
+            raise ValueError(
+                f"cannot shrink worker axis {w} -> {new_w}: not divisible")
+        if fold == "slice":
+            return x[:new_w]
+        g = w // new_w
+        return x.reshape((new_w, g) + x.shape[1:]).mean(axis=1).astype(x.dtype)
+    if new_w % w:
+        raise ValueError(
+            f"cannot grow worker axis {w} -> {new_w}: not divisible")
+    return jnp.repeat(x, new_w // w, axis=0)
+
+
+def _resize_stacked(tree, new_w: int, *, fold: str):
+    """Map :func:`resize_axis` over a stacked tree / BucketState / None.
+
+    A resident ``BucketState`` with ``leading=1`` resizes its bucket
+    buffers in place (the layout describes per-worker shapes, so it is
+    W-agnostic and carries over unchanged); ``leading=0`` states
+    (anchor/global_u in bucket form) have no worker axis and pass
+    through.
+    """
+    if tree is None:
+        return None
+    if flatbuf.is_bucket_state(tree):
+        if tree.leading != 1:
+            return tree
+        return tree.with_buckets(
+            [resize_axis(b, new_w, fold=fold) for b in tree.buckets])
+    return jax.tree.map(lambda x: resize_axis(x, new_w, fold=fold), tree)
+
+
+def resize_stats(stats, new_w: int, *, fold: str = "mean"):
+    """Carry a StatsAccumulator through a resize: (W,) fields fold like
+    the state, scalars (round counters, sync pair, comp slots) persist."""
+    if stats is None:
+        return None
+    r = lambda x: resize_axis(x, new_w, fold=fold)
+    return tstats.StatsAccumulator(
+        acc_grad_sq=r(stats.acc_grad_sq),
+        acc_update_sq=r(stats.acc_update_sq),
+        acc_steps=stats.acc_steps,
+        round_grad_sq=r(stats.round_grad_sq),
+        round_update_sq=r(stats.round_update_sq),
+        round_steps=stats.round_steps,
+        pre_sync_sq=stats.pre_sync_sq, post_sync_sq=stats.post_sync_sq,
+        comp_err_sq=stats.comp_err_sq, comp_ref_sq=stats.comp_ref_sq,
+        rounds=stats.rounds)
+
+
+def resize_state(state: Any, new_w: int, *, fold: str = "mean"):
+    """Return ``state`` with its worker axis resized to ``new_w``.
+
+    Works on both the tree and resident forms (resident stays resident —
+    no pytree round-trip).  ``fold`` controls the shrink semantics; grow
+    always clones.  anchor / global_u / step / rng are single-copy and
+    unchanged, which is what keeps an anchored resize consistent: the
+    anchor still describes the last synced model, and the next sync's
+    model-difference is taken against it per (surviving or cloned)
+    worker.
+    """
+    from repro.core.local_sgd import LocalSGDState
+    return LocalSGDState(
+        params=_resize_stacked(state.params, new_w, fold=fold),
+        momentum=_resize_stacked(state.momentum, new_w, fold=fold),
+        anchor=state.anchor,
+        global_u=state.global_u,
+        ef_memory=_resize_stacked(state.ef_memory, new_w, fold=fold),
+        step=state.step,
+        rng=state.rng,
+        stats=resize_stats(state.stats, new_w, fold=fold))

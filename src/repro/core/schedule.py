@@ -54,6 +54,11 @@ class DynamicSchedule:
         self.h_at = h_at
         self.since_sync = 0
         self.rounds = 0
+        # runtime copy of the block-phase length so a controller can
+        # retune the cadence mid-run (PlanDelta.block_steps — e.g. a
+        # straggler demotion moving the outer scope off the per-round
+        # path) without mutating the frozen config
+        self.block_steps = cfg.block_steps
 
     def advance(self, step: int) -> int:
         """Advance one local step; returns the sync level due AFTER
@@ -64,8 +69,8 @@ class DynamicSchedule:
             return 0
         self.since_sync = 0
         self.rounds += 1
-        if self.cfg.block_steps > 1:
-            return 2 if self.rounds % self.cfg.block_steps == 0 else 1
+        if self.block_steps > 1:
+            return 2 if self.rounds % self.block_steps == 0 else 1
         return 2
 
 

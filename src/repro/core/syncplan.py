@@ -498,12 +498,29 @@ class PlanDelta:
                       noise_adaptive controller's decay handoff once
                       the batch hits its cap).  Consumed by the fit
                       loop, not the plan: ``apply`` ignores it.
+    ``workers``     — elastic resize: target worker-set width for the
+                      NEXT round (None = keep).  Consumed by the fit
+                      loop (state surgery via core/elastic +
+                      backend.resize + LR/batch co-scaling), not the
+                      plan: ``apply`` ignores it.
+    ``demote``      — straggler demotion: worker id to move to the
+                      outer hierarchical scope (None = none).  Fit
+                      actuates it through ``backend.demote``; pairs
+                      with a ``topology`` switch when the plan is still
+                      flat.  ``apply`` ignores it.
+    ``block_steps`` — runtime block-phase length for DynamicSchedule
+                      (None = keep), the cadence knob a demotion uses
+                      to keep the outer scope off the per-round path.
+                      Consumed by the fit loop: ``apply`` ignores it.
     """
     h: int | None = None
     compression: Any = None
     topology: Topology | None = None
     batch_scale: int | None = None
     lr_scale: float | None = None
+    workers: int | None = None
+    demote: int | None = None
+    block_steps: int | None = None
 
     def apply(self, plan: SyncPlan) -> SyncPlan:
         """Derive the next round's plan.  An empty delta returns the

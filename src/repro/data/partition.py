@@ -53,3 +53,21 @@ class ShardedBatches:
 
     def batches_per_epoch(self) -> int:
         return self.per_worker // self.B
+
+    def resize(self, num_workers: int, *, local_batch: int | None = None):
+        """Elastic re-partition to a new worker count (backend seam).
+
+        The paper's protocol partitions the CURRENT epoch's permutation
+        among the live workers, so a resize re-shards the same global
+        dataset W' ways and restarts the epoch pass — every example is
+        still drawn from a disjoint shard, now among W' workers.
+        ``local_batch`` optionally co-scales B (fit keeps the global
+        batch roughly constant across a resize when asked to).
+        """
+        if num_workers <= 0:
+            raise ValueError(f"num_workers must be positive, got {num_workers}")
+        self.W = int(num_workers)
+        if local_batch is not None:
+            self.B = int(local_batch)
+        self._reshard()
+        return self

@@ -47,6 +47,7 @@ class TrainBundle:
     n_comp: int = 1             # compression-error slots (sub-buckets)
     sync_lower: Any = None      # mesh only: lower sync for HLO ledger costs
     sync_plan: Any = None       # compiled syncplan.SyncPlan (fit's default)
+    worker_set: Any = None      # backend.base.WorkerSet this bundle was built for
 
 
 def _stats_partition_specs(layout: MeshLayout):
@@ -65,8 +66,13 @@ def _stats_partition_specs(layout: MeshLayout):
 
 def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
                           resident: bool = False, telemetry: bool = False,
-                          bucket_layout=None):
+                          bucket_layout=None, worker_set=None):
     """PartitionSpecs for a LocalSGDState built from param specs.
+
+    ``worker_set`` is the backend seam: specs name the mesh AXES the
+    worker dim shards over (size-agnostic), so the same spec tree serves
+    every W — passing the set documents which census the state belongs
+    to and lets callers assert the mesh's worker extent matches it.
 
     ``resident=True`` mirrors the resident bucket form (see
     core/local_sgd): stacked buffers shard their leading worker dim over
@@ -119,13 +125,20 @@ def state_partition_specs(specs, layout: MeshLayout, run: RunConfig, *,
 
 def build_train(run: RunConfig, *, mesh: Mesh | None = None,
                 layout: MeshLayout | None = None, num_workers: int | None = None,
-                use_kernel: bool = False, jit: bool = True) -> TrainBundle:
+                use_kernel: bool = False, jit: bool = True,
+                worker_set=None) -> TrainBundle:
     cfg = run.model
     if layout is None and mesh is not None:
         worker_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
         layout = train_layout(tuple(mesh.axis_names), worker_axes=worker_axes)
     if layout is not None and mesh is not None:
         layout = layout.with_mesh(mesh)
+    if worker_set is not None:
+        if num_workers is not None and num_workers != worker_set.num_workers:
+            raise ValueError(
+                f"num_workers={num_workers} disagrees with "
+                f"worker_set ({worker_set.num_workers} workers)")
+        num_workers = worker_set.num_workers
     if num_workers is None:
         num_workers = layout.num_workers(mesh) if (mesh is not None and layout) else 1
 
@@ -202,9 +215,12 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
             mbase.abstract(specs, jnp.dtype(run.model.param_dtype)),
             wd_mask=wd_mask, shard_classes=shard_cls)
         n_comp = blay.num_buckets
+    if worker_set is None:
+        from repro.backend.base import WorkerSet
+        worker_set = WorkerSet.of(num_workers)
     bundle = TrainBundle(cfg=cfg, run=run, layout=layout, num_workers=num_workers,
                          specs=specs, init=init, local_step=local_step, sync=sync,
-                         telemetry=telemetry, n_comp=n_comp)
+                         telemetry=telemetry, n_comp=n_comp, worker_set=worker_set)
     # the bundle's compiled SyncPlan: topology from the config
     # (auto = hierarchical blocks iff block_steps > 1), per-sub-bucket
     # modes from sync_compression, coalesce from sync_coalesce.  fit
@@ -215,7 +231,8 @@ def build_train(run: RunConfig, *, mesh: Mesh | None = None,
 
     if mesh is not None and jit:
         sspec = state_partition_specs(specs, layout, run, resident=resident,
-                                      telemetry=telemetry, bucket_layout=blay)
+                                      telemetry=telemetry, bucket_layout=blay,
+                                      worker_set=worker_set)
         bspec = inp.train_batch_pspecs(cfg, run.shape, layout)
         ssh = _named(mesh, sspec)
         bsh = _named(mesh, bspec)

@@ -44,7 +44,6 @@ from repro.core.schedule import DynamicSchedule
 from repro.telemetry import metrics as tmetrics
 from repro.data.partition import ShardedBatches
 from repro.data.synthetic import lm_examples, markov_lm
-from repro.launch import steps as steps_mod
 from repro.models import base as mbase
 from repro.models import lm
 
@@ -71,7 +70,8 @@ def _scaled_batch(data_iter, scale: int):
 def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
         eval_every=0, eval_fn=None, log=print, mesh=None, layout=None,
         controller=None, telemetry_path=None, tracer=None,
-        checkpoint_every=0, checkpoint_fn=None, manifest_path=None):
+        checkpoint_every=0, checkpoint_fn=None, manifest_path=None,
+        backend=None):
     """Run the full schedule; returns (state, history, summary).
 
     ``controller`` overrides the policy built from ``run.controller``;
@@ -82,8 +82,30 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     ``stage_s`` and write a run manifest at ``manifest_path`` (default:
     ``<telemetry_path>.manifest.json``).  ``checkpoint_fn(state, step)``
     runs every ``checkpoint_every`` steps inside a ``checkpoint`` span.
+
+    ``backend`` (ISSUE 9) is the execution substrate owning the
+    WorkerSet (repro.backend).  None builds the default ``LocalBackend``
+    from ``mesh``/``layout`` — bitwise-identical to the pre-seam path.
+    The backend feeds the per-worker step times into the round stats
+    (``worker_step_skew``) and actuates the elastic PlanDelta fields:
+    ``demote`` (census + outer-scope scheduling), ``block_steps``
+    (DynamicSchedule cadence), and ``workers`` (resize: state surgery
+    via core/elastic, bundle/plan rebuild through the backend, data
+    re-partition, and the Lau et al. 2024 LR co-scaling).  Legacy
+    callers — ``fit(run, data_iter)`` or hand-made bundles without a
+    ``worker_set`` — keep working through the default-backend shim (the
+    latter with a DeprecationWarning, mirroring the PR 5 ``sync(group=)``
+    treatment).
     """
-    bundle = bundle or steps_mod.build_train(run, mesh=mesh, layout=layout)
+    from repro.backend.local import LocalBackend
+    if backend is None:
+        backend = LocalBackend(mesh=mesh, layout=layout)
+    elif mesh is None:
+        mesh = getattr(backend, "mesh", None)
+    if bundle is None:
+        bundle = backend.build(run)
+    elif hasattr(backend, "adopt"):
+        backend.adopt(bundle)
     num_steps = num_steps or run.steps
     ls = run.local_sgd
 
@@ -100,20 +122,20 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     # for hand-made bundles — compiled here from the state's own bucket
     # layout with the config's declared topology.  The controller
     # rewrites it between rounds via PlanDelta.
+    def config_plan(bundle_, state_):
+        from repro.core.local_sgd import needs_anchor
+        wa = (bundle_.layout.worker_axes if bundle_.layout is not None else ())
+        return splan.make_sync_plan(
+            _sync_layout(state_),
+            topology=splan.resolve_topology(ls, bundle_.num_workers,
+                                            worker_axes=wa),
+            compression=ls.sync_compression, num_workers=bundle_.num_workers,
+            wire_pack=ls.wire_pack, coalesce=ls.sync_coalesce,
+            worker_axes=wa, anchored=needs_anchor(ls))
+
     plan = bundle.sync_plan
     if plan is None:
-        from repro.core.local_sgd import needs_anchor
-        plan = splan.make_sync_plan(
-            _sync_layout(state),
-            topology=splan.resolve_topology(
-                ls, bundle.num_workers,
-                worker_axes=(bundle.layout.worker_axes
-                             if bundle.layout is not None else ())),
-            compression=ls.sync_compression, num_workers=bundle.num_workers,
-            wire_pack=ls.wire_pack, coalesce=ls.sync_coalesce,
-            worker_axes=(bundle.layout.worker_axes
-                         if bundle.layout is not None else ()),
-            anchored=needs_anchor(ls))
+        plan = config_plan(bundle, state)
     # align round 1 with the controller's INITIAL decision: the
     # error-driven compressor policies (auto_compress, noise_adaptive)
     # start uncompressed and escalate from measured error, so the
@@ -176,11 +198,18 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     history = []
     comm_rounds = {"block": 0, "global": 0}
     global_rounds = 0
-    # the controller's runtime LR multiplier (PlanDelta.lr_scale — the
-    # noise_adaptive batch-cap handoff).  1.0 keeps the exact two-arg
-    # local_step call so static trajectories stay bitwise-identical
-    # (and custom bundles without the lr_scale arg keep working).
+    # the runtime LR multiplier is a product of two factors: the
+    # controller's absolute lr_scale (PlanDelta.lr_scale — the
+    # noise_adaptive batch-cap handoff) and the cumulative elastic
+    # co-scaling factor (linear scaling with the global batch across
+    # worker-set resizes, Lau et al. 2024).  Both at 1.0 keeps the
+    # exact two-arg local_step call so static trajectories stay
+    # bitwise-identical (and custom bundles without the lr_scale arg
+    # keep working).
+    lr_ctrl = 1.0
+    lr_resize = 1.0
     lr_scale_now = 1.0
+    resizes = 0
     # one "round" span per global round: opened at the round's first
     # local step, closed when its global sync (+ decision) completes
     round_span = None
@@ -216,7 +245,7 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                 entry = ledger.record_plan(
                     step=t, level=1, h=h_now, plan=plan, scope="block",
                     measured=measured_cost(plan, "block"),
-                    seconds=ssp.dur_s)
+                    seconds=ssp.dur_s, num_workers=bundle.num_workers)
                 comm_rounds["block"] += 1
                 synced = "block"
                 if mreg is not None:
@@ -238,20 +267,40 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                     step=t, level=2, h=h_now, plan=plan, scope="global",
                     measured=measured_cost(plan, "global"),
                     batch_scale=controller.batch_scale(),
-                    lr_scale=lr_scale_now, seconds=sync_s)
+                    lr_scale=lr_scale_now, seconds=sync_s,
+                    num_workers=bundle.num_workers)
                 comm_rounds["global"] += 1
                 synced = "global"
+                stats = (tele.round_summary(state.stats)
+                         if bundle.telemetry else {})
+                # backend step-time census: None on lockstep backends
+                # (one vmap, one clock — the gauge stays 0.0); the
+                # simulated/distributed backends report per-ACTIVE-worker
+                # seconds, the straggler sensor for the elastic policy
+                wtimes = backend.worker_step_times(h=h_now,
+                                                  measured_s=stp.dur_s)
+                if wtimes:
+                    ts = [float(x) for x in wtimes]
+                    mean_t = sum(ts) / len(ts)
+                    ws = backend.worker_set
+                    active = ws.active or ws.ids
+                    stats["worker_step_s"] = ts
+                    stats["worker_step_skew"] = (
+                        (max(ts) - min(ts)) / mean_t if mean_t > 0 else 0.0)
+                    stats["worker_slowest"] = int(
+                        active[max(range(len(ts)), key=ts.__getitem__)])
+                    stats.setdefault("num_workers", ws.num_workers)
                 report = RoundReport(
                     round=global_rounds, step=t, h=h_now,
                     loss=float(metrics["loss"]),
-                    stats=(tele.round_summary(state.stats)
-                           if bundle.telemetry else {}),
+                    stats=stats,
                     wire_bytes=entry["bytes_on_wire"],
                     collectives=entry["collectives"])
                 delta = traced_decision(tracer, controller, report, t + 1)
                 plan = delta.apply(plan)
                 if getattr(delta, "lr_scale", None) is not None:
-                    lr_scale_now = float(delta.lr_scale)
+                    lr_ctrl = float(delta.lr_scale)
+                    lr_scale_now = lr_ctrl * lr_resize
                 tracer.finish(round_span, loss=report.loss,
                               wire_bytes=report.wire_bytes)
                 round_s = round_span.dur_s
@@ -262,7 +311,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                         wire_bytes=report.wire_bytes, loss=report.loss,
                         batch_scale=controller.batch_scale(),
                         lr_scale=lr_scale_now, round_s=round_s,
-                        sync_s=sync_s, stage_s=stage_s)
+                        sync_s=sync_s, stage_s=stage_s,
+                        worker_step_s=wtimes)
                 if tlog is not None:
                     # None delta fields mean "keep": log the effective
                     # next decision, not the literal None
@@ -280,6 +330,10 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                                else controller.batch_scale()),
                            "next_lr_scale": lr_scale_now,
                            "topology": plan.topology.describe()}
+                    if getattr(delta, "workers", None) is not None:
+                        rec["next_workers"] = int(delta.workers)
+                    if getattr(delta, "demote", None) is not None:
+                        rec["demote"] = int(delta.demote)
                     if tracer.enabled:
                         # the seconds extension of the schema (README):
                         # round/sync wall time + per-stage attribution
@@ -294,6 +348,54 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                         rec["decisions"] = prov
                     tlog.write(json.dumps(rec) + "\n")
                     tlog.flush()
+                # --- elastic actuation (ISSUE 9): the worker-set fields
+                # of the PlanDelta, applied AFTER the round is fully
+                # recorded so the JSONL/trace show the decision at the
+                # round that made it and the next round runs under the
+                # new census ---------------------------------------------
+                if getattr(delta, "demote", None) is not None:
+                    backend.demote(int(delta.demote))
+                if getattr(delta, "block_steps", None) is not None:
+                    sched.block_steps = int(delta.block_steps)
+                new_w = getattr(delta, "workers", None)
+                if new_w is not None and int(new_w) != bundle.num_workers:
+                    new_w, old_w = int(new_w), bundle.num_workers
+                    with tracer.span("resize", step=t, from_workers=old_w,
+                                     to_workers=new_w):
+                        from repro.core import elastic
+                        # carry the resident/tree state across the new
+                        # worker axis (departing workers' momentum/EF
+                        # folded via the mean, joiners cloned)
+                        state = elastic.resize_state(state, new_w)
+                        bundle = backend.resize(run, new_w)
+                        state_avals = jax.eval_shape(lambda s: s, state)
+                        # recompile the plan for the new W, carrying the
+                        # controller's current modes; a block size that
+                        # no longer divides W is re-derived
+                        topo = plan.topology
+                        if topo.block_size and new_w % topo.block_size:
+                            topo = splan.Topology(
+                                topo.kind, splan.default_block_size(new_w))
+                        newplan = bundle.sync_plan
+                        if newplan is None:
+                            newplan = config_plan(bundle, state)
+                        plan = (newplan.with_modes(plan.modes)
+                                .with_topology(topo))
+                        if hasattr(data_iter, "resize"):
+                            data_iter.resize(new_w)
+                        else:
+                            raise RuntimeError(
+                                f"elastic resize {old_w} -> {new_w} needs a "
+                                "resizable data iterator (ShardedBatches or "
+                                "any object with .resize(num_workers)); got "
+                                f"{type(data_iter).__name__}")
+                        # LR co-scales with the global batch (linear
+                        # scaling across the resize, Lau et al. 2024)
+                        lr_resize *= new_w / old_w
+                        lr_scale_now = lr_ctrl * lr_resize
+                        resizes += 1
+                    log(f"resize: W {old_w} -> {new_w} at step {t} "
+                        f"(lr x{lr_resize:g})")
             rec = {k: float(v) for k, v in metrics.items()}
             rec.update(step=t, synced=synced)
             history.append(rec)
@@ -316,6 +418,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
     wall = time.perf_counter() - t_start
     summary = {"wall_s": wall, "comm_rounds": comm_rounds, "steps": num_steps,
                "topology": plan.topology.describe(),
+               "backend": backend.describe(),
+               "resizes": resizes,
                "ledger": ledger.summary(),
                "controller": {"kind": getattr(controller, "kind", "custom"),
                               "h_final": int(controller.h_at(num_steps)),
@@ -371,6 +475,20 @@ def main():
     ap.add_argument("--block-steps", type=int, default=1, help="H^b")
     ap.add_argument("--post-local-switch", type=int, default=-1)
     ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "simulated", "distributed"],
+                    help="execution backend (repro.backend); simulated "
+                         "injects per-worker latency so the straggler "
+                         "telemetry has real values on one process")
+    ap.add_argument("--straggler-s", type=float, default=0.0,
+                    help="simulated backend: extra per-step seconds "
+                         "injected into the LAST worker (drives the "
+                         "worker_step_skew gauge)")
+    ap.add_argument("--controller", default="static",
+                    choices=["static", "diversity_h", "adaptive_batch",
+                             "auto_compress", "noise_adaptive", "elastic"],
+                    help="sync controller policy (elastic adds straggler "
+                         "demotion on the skew gauge)")
     ap.add_argument("--trace-dir", default="",
                     help="write trace.json / metrics.prom / manifest.json / "
                          "telemetry.jsonl for this run (Perfetto + "
@@ -385,6 +503,7 @@ def main():
         else configs.get("paper-lm")
     cfg = cfg.replace(max_seq_len=args.seq)
     shape = InputShape("cli", args.seq, args.workers * args.local_batch, "train")
+    from repro.configs.base import ControllerConfig
     run = RunConfig(
         model=cfg, shape=shape,
         local_sgd=LocalSGDConfig(local_steps=args.local_steps,
@@ -393,6 +512,7 @@ def main():
         optim=OptimConfig(base_lr=args.lr, base_batch=shape.global_batch,
                           lr_warmup_steps=10,
                           lr_decay_steps=(args.steps // 2, 3 * args.steps // 4)),
+        controller=ControllerConfig(kind=args.controller),
         steps=args.steps)
 
     toks = markov_lm(vocab=cfg.vocab_size, num_seqs=1024, seq_len=args.seq)
@@ -400,7 +520,12 @@ def main():
     held = lm_examples(markov_lm(vocab=cfg.vocab_size, num_seqs=64,
                                  seq_len=args.seq, sample_seed=123))
     it = ShardedBatches(data, args.workers, args.local_batch)
-    bundle = steps_mod.build_train(run, num_workers=args.workers)
+    from repro import backend as backend_mod
+    be_kw = {}
+    if args.backend == "simulated" and args.straggler_s:
+        be_kw["latency_s"] = {args.workers - 1: args.straggler_s}
+    be = backend_mod.make_backend(args.backend, args.workers, **be_kw)
+    bundle = be.build(run)
 
     tracer = None
     trace_kw = {}
@@ -414,7 +539,8 @@ def main():
                                                    "telemetry.jsonl"),
                     "manifest_path": os.path.join(args.trace_dir,
                                                   "manifest.json")}
-    state, hist, summary = fit(run, it, bundle=bundle, num_steps=args.steps,
+    state, hist, summary = fit(run, it, bundle=bundle, backend=be,
+                               num_steps=args.steps,
                                eval_every=max(args.steps // 5, 1),
                                eval_fn=eval_lm(bundle, held), **trace_kw)
     if tracer is not None:

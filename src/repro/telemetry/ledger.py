@@ -128,7 +128,8 @@ class CommsLedger:
     def record_plan(self, *, step: int, level: int, h: int, plan,
                     scope: str = "global", measured: SyncCost | None = None,
                     batch_scale: int = 1, lr_scale: float = 1.0,
-                    seconds: float | None = None) -> dict:
+                    seconds: float | None = None,
+                    num_workers: int | None = None) -> dict:
         """Append one row per collective stage of ``plan.schedule(scope)``;
         returns the round totals (``record``-shaped dict).
 
@@ -137,8 +138,15 @@ class CommsLedger:
         stage rows as ``stage_s`` by the same wire-byte weights the byte
         scaling uses, so every stage id carries bytes AND seconds in one
         row (the traced spans use identical attribution — the two
-        streams join on (step, scope, stage))."""
+        streams join on (step, scope, stage)).
+
+        ``num_workers`` stamps the rows with the worker-set width the
+        round priced (defaults to the plan's own) — the elastic path
+        resizes W mid-run, and :meth:`by_workers` aggregates per
+        census so the cost of each worker set stays separable."""
         stages = list(plan.collective_stages(scope))
+        nw = int(num_workers if num_workers is not None
+                 else getattr(plan, "num_workers", 0) or 0)
         est = sum(s.wire_bytes for s in stages)
         scale = (measured.bytes_on_wire / est
                  if measured is not None and est > 0 else 1.0)
@@ -153,6 +161,7 @@ class CommsLedger:
                  "buckets": list(s.buckets),
                  "group": int(s.group),
                  "coalesced": bool(s.coalesced),
+                 "num_workers": nw,
                  "bytes_on_wire": float(s.wire_bytes * scale),
                  "collectives": int(s.collectives),
                  "cost_source": source,
@@ -205,6 +214,25 @@ class CommsLedger:
                     / max(len(v["rounds"]), 1)}
                 for k, v in out.items()}
 
+    def by_workers(self) -> dict:
+        """Per-worker-set round costs — the elastic view: a W=4→2→4 run
+        reports each census's rounds / wire bytes / bytes-per-round as
+        its own row, so resize decisions are priced separably."""
+        out: dict = {}
+        for e in self.entries:
+            key = int(e.get("num_workers", 0) or 0)
+            d = out.setdefault(key, {"rounds": set(), "wire_bytes": 0.0,
+                                     "collectives": 0})
+            d["rounds"].add((e["step"], e["level"]))
+            d["wire_bytes"] += e["bytes_on_wire"]
+            d["collectives"] += e["collectives"]
+        return {f"W={k}": {"rounds": len(v["rounds"]),
+                           "wire_bytes": float(v["wire_bytes"]),
+                           "collectives": int(v["collectives"]),
+                           "bytes_per_round": float(v["wire_bytes"])
+                           / max(len(v["rounds"]), 1)}
+                for k, v in sorted(out.items())}
+
     def scaling(self) -> dict:
         """Trajectory of the batch/LR actuators over the recorded rounds
         — the noise_adaptive controller's priced decisions.  Per-example
@@ -235,7 +263,8 @@ class CommsLedger:
                "cost_sources": sorted({e["cost_source"]
                                        for e in self.entries}),
                "scaling": self.scaling(),
-               "topologies": self.by_topology()}
+               "topologies": self.by_topology(),
+               "worker_sets": self.by_workers()}
         if any("stage_s" in e for e in self.entries):
             # measured sync wall time rode in via record_plan(seconds=)
             out["sync_seconds"] = float(sum(e.get("stage_s", 0.0)

@@ -1,0 +1,421 @@
+"""Backend seam + elastic worker pool tests (ISSUE 9 acceptance).
+
+* WorkerSet / resize_axis / resize_state semantics (fold=mean vs slice,
+  grow-by-clone, divisibility, resident sub-bucket carrying).
+* Static-W runs through the default LocalBackend are bitwise-identical
+  to the pre-seam path; hand-made bundles keep working through the
+  deprecation shim (warning pinned, trajectory pinned).
+* Elastic trajectories: a mid-run resize equals a fresh run at the new
+  W continued from the carried state (SGD + LARS, dense + ef_sign,
+  tree + resident), and DynamicSchedule boundaries are W-independent.
+* The simulated heterogeneous backend gives ``worker_step_skew`` real
+  values and drives a straggler demotion end to end (census, topology
+  switch, JSONL/trace decision stream, post-demotion skew).
+* The W=4->2->4 acceptance run: resident state carried through both
+  resizes, ledger pricing per worker set, convergence.
+* DistributedBackend single-process gating.
+"""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import WorkerSet, make_backend
+from repro.backend.local import LocalBackend
+from repro.backend.simulated import SimulatedBackend
+from repro.configs.base import (ControllerConfig, InputShape, LocalSGDConfig,
+                                ModelConfig, OptimConfig, RunConfig)
+from repro.core import elastic, flatbuf
+from repro.core.controller import ElasticController
+from repro.core.local_sgd import is_resident, make_local_sgd, unpack_state
+from repro.core.schedule import DynamicSchedule, local_steps_at
+from repro.data.partition import ShardedBatches
+from repro.launch.steps import TrainBundle
+from repro.launch.train import fit
+from repro.models.base import ParamSpec
+from repro.telemetry import MetricsRegistry, Tracer
+
+D, C = 6, 3
+QUAD_SPECS = {"w": ParamSpec((D, C), (None, None)),
+              "b": ParamSpec((C,), (None,), init="zeros")}
+
+
+def quad_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = jnp.mean((pred - batch["y"]) ** 2)
+    return loss, {"xent": loss}
+
+
+def quad_data(n=4096, seed=0, noise=0.01):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, D))
+    y = x @ (jnp.ones((D, C)) * 0.5) + noise * jax.random.normal(
+        jax.random.fold_in(key, 1), (n, C))
+    return {"x": np.asarray(x), "y": np.asarray(y)}
+
+
+def make_run(H=2, controller=None, *, steps=24, optimizer="sgd", **ls_kw):
+    return RunConfig(
+        model=ModelConfig(name="quad", family="dense", citation=""),
+        shape=InputShape("t", 8, 4 * 8, "train"),
+        local_sgd=LocalSGDConfig(local_steps=H, local_momentum=0.9,
+                                 nesterov=True, **ls_kw),
+        optim=OptimConfig(optimizer=optimizer, base_lr=0.03, base_batch=4 * 8,
+                          weight_decay=0.0, lr_warmup_steps=0,
+                          lr_decay_steps=()),
+        controller=controller or ControllerConfig(),
+        steps=steps)
+
+
+def quad_builder(*, use_kernel=False):
+    """``LocalBackend(build_fn=...)`` factory: rebuilds the quad bundle
+    for WHATEVER worker set the backend currently owns — the seam an
+    elastic resize calls back through."""
+    def build(run, ws):
+        cc = run.controller
+        init, local_step, sync = make_local_sgd(
+            run, quad_loss, num_workers=ws.num_workers,
+            use_kernel=use_kernel, telemetry=cc.wants_telemetry,
+            speculate_compression=cc.wants_speculation)
+        return TrainBundle(cfg=run.model, run=run, layout=None,
+                           num_workers=ws.num_workers, specs=QUAD_SPECS,
+                           init=init, local_step=local_step, sync=sync,
+                           telemetry=cc.wants_telemetry, n_comp=1,
+                           worker_set=ws)
+    return build
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# WorkerSet + resize_axis/resize_state unit semantics
+# ---------------------------------------------------------------------------
+
+def test_worker_set_semantics():
+    ws = WorkerSet.of(4)
+    assert ws.ids == (0, 1, 2, 3) and ws.num_workers == 4
+    assert ws.resize(2).ids == (0, 1)
+    grown = ws.resize(2).resize(4)
+    assert grown.ids == (0, 1, 2, 3)          # fresh ids past the max
+    assert ws.demote(3).active == (0, 1, 2)
+    assert ws.demote(3).resize(2).demoted == ()   # departing demotee drops
+    assert ws.demote(3).resize(8).demoted == (3,)  # surviving one carries
+    assert ws.row_of(2) == 2
+    with pytest.raises(ValueError):
+        ws.demote(9)
+    with pytest.raises(ValueError):
+        ws.resize(0)
+
+
+def test_resize_axis_folds():
+    x = jnp.arange(8.0).reshape(4, 2)
+    np.testing.assert_array_equal(np.asarray(elastic.resize_axis(x, 2)),
+                                  [[1.0, 2.0], [5.0, 6.0]])      # group mean
+    np.testing.assert_array_equal(
+        np.asarray(elastic.resize_axis(x, 2, fold="slice")),
+        np.asarray(x[:2]))                                       # bit-exact
+    g = elastic.resize_axis(x, 8)
+    assert g.shape == (8, 2)
+    np.testing.assert_array_equal(np.asarray(g[0]), np.asarray(g[1]))
+    assert elastic.resize_axis(x, 4) is x                        # no-op
+    with pytest.raises(ValueError):
+        elastic.resize_axis(x, 3)
+    with pytest.raises(ValueError):
+        elastic.resize_axis(x, 2, fold="nope")
+    # dtype preserved through the mean fold
+    xb = jnp.arange(8, dtype=jnp.bfloat16).reshape(4, 2)
+    assert elastic.resize_axis(xb, 2).dtype == jnp.bfloat16
+
+
+def test_resize_state_resident_subbuckets():
+    """Resident resize touches ONLY the leading=1 worker-stacked buffers
+    (sub-bucket layout carried unchanged) and agrees with resizing the
+    pytree view leaf-by-leaf; single-copy buffers pass through."""
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (4, D, C)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (4, C))}
+    st = flatbuf.BucketState.pack(tree, leading=1)
+    anchor = flatbuf.BucketState.pack(
+        {k: v[0] for k, v in tree.items()})
+    from repro.core.local_sgd import LocalSGDState
+    state = LocalSGDState(params=st, momentum=st, anchor=anchor,
+                          global_u=None, ef_memory=st,
+                          step=jnp.int32(7), rng=key)
+    out = elastic.resize_state(state, 2)
+    assert is_resident(out) and out.params.leading == 1
+    assert out.params.layout is st.layout          # layout is W-agnostic
+    ref = jax.tree.map(lambda x: elastic.resize_axis(x, 2), tree)
+    assert_trees_equal(out.params.unpack(), ref)
+    assert out.anchor is anchor                    # single-copy untouched
+    assert int(out.step) == 7
+    # grow: clones
+    up = elastic.resize_state(state, 8)
+    assert jax.tree.leaves(up.params)[0].shape[0] == 8
+
+
+def test_resize_state_stats():
+    from repro.telemetry.stats import init_stats
+    s = dataclasses.replace(init_stats(4, 2), acc_grad_sq=jnp.arange(4.0))
+    out = elastic.resize_stats(s, 2)
+    np.testing.assert_allclose(np.asarray(out.acc_grad_sq), [0.5, 2.5])
+    assert out.comp_err_sq.shape == (2,)           # slots persist
+
+
+def test_resize_fsdp_subbuckets():
+    """Elastic resize on a SHARDED sub-bucket layout (FSDP classes):
+    the worker-axis fold happens in shard-major bucket space and must
+    agree with folding the pytree view leaf-by-leaf — permutation +
+    zero padding commute with the group mean."""
+    cls = {"w1": flatbuf.ShardClass(axes=("model",), dims=((0, 2),)),
+           "w2": flatbuf.ShardClass(axes=("model",), dims=((1, 2),)),
+           "b": None}
+    key = jax.random.PRNGKey(3)
+    tree = {"w1": jax.random.normal(key, (4, 8, 4)),
+            "w2": jax.random.normal(jax.random.fold_in(key, 1), (4, 4, 8)),
+            "b": jax.random.normal(jax.random.fold_in(key, 2), (4, 4))}
+    lay = flatbuf.build_layout(tree, leading=1, shard_classes=cls)
+    assert lay.num_buckets > 1                     # classes split buckets
+    st = flatbuf.BucketState.pack(tree, layout=lay, leading=1)
+    for new_w, fold in ((2, "mean"), (2, "slice"), (8, "mean")):
+        out = st.with_buckets(
+            [elastic.resize_axis(b, new_w, fold=fold) for b in st.buckets])
+        ref = jax.tree.map(
+            lambda x: elastic.resize_axis(x, new_w, fold=fold), tree)
+        assert_trees_equal(out.unpack(), ref)
+
+
+# ---------------------------------------------------------------------------
+# static-W: backend path bitwise + deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_static_backend_bitwise_and_shim(tmp_path):
+    """The same quad run three ways — hand-made bundle (deprecation
+    shim), explicit LocalBackend(build_fn=), and default backend — is
+    bitwise-identical; only the hand-made path warns."""
+    steps = 12
+
+    def batches(W=4, seed=1, b=8):
+        i = 0
+        while True:
+            k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+            x = jax.random.normal(k, (W, b, D))
+            y = x @ (jnp.ones((D, C)) * 0.5)
+            yield {"x": x, "y": y}
+            i += 1
+
+    run = make_run(H=3, steps=steps)
+    bundle = quad_builder()(run, WorkerSet.of(4))
+    bundle.worker_set = None                      # simulate a pre-seam bundle
+    with pytest.warns(DeprecationWarning, match="worker_set"):
+        ref, _, _ = fit(run, batches(), bundle=bundle, num_steps=steps, seed=0)
+    be = LocalBackend(4, build_fn=quad_builder())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        state, _, summary = fit(run, batches(), backend=be,
+                                num_steps=steps, seed=0)
+    assert summary["backend"]["kind"] == "local"
+    assert summary["resizes"] == 0
+    assert_trees_equal(ref.params, state.params)
+
+
+# ---------------------------------------------------------------------------
+# elastic trajectories: resize == fresh run at the new W from carried state
+# ---------------------------------------------------------------------------
+
+def _reference_elastic(run, data, *, use_kernel, resize_round, new_w,
+                       steps, seed=0):
+    """Oracle: run the legacy-style loop at W0, then hand the resized
+    state to a FRESH loop at ``new_w`` — what the paper's protocol would
+    do on an actual membership change.  Mirrors fit's actuation order
+    (resize applied after the round's global sync) and LR co-scaling."""
+    from repro.models import base as mbase
+    ls = run.local_sgd
+    W0 = 4
+    build = quad_builder(use_kernel=use_kernel)
+    bundle = build(run, WorkerSet.of(W0))
+    it = ShardedBatches(data, W0, 8)
+    rng = jax.random.PRNGKey(seed)
+    params0 = mbase.materialize(bundle.specs, rng, dtype=jnp.float32)
+    state = bundle.init(jax.random.fold_in(rng, 1), params0)
+    since, rounds = 0, 0
+    lr_resize = None
+    for t in range(steps):
+        b = next(it)
+        state, _ = (bundle.local_step(state, b) if lr_resize is None
+                    else bundle.local_step(state, b, lr_resize))
+        since += 1
+        if since >= local_steps_at(ls, t):
+            since = 0
+            rounds += 1
+            state = bundle.sync(state)
+            if rounds == resize_round:
+                state = elastic.resize_state(state, new_w)
+                bundle = build(run, WorkerSet.of(new_w))
+                it.resize(new_w)
+                lr_resize = new_w / W0
+    return state
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("optimizer", ["sgd", "lars"])
+@pytest.mark.parametrize("ls_kw", [dict(), dict(sync_compression="ef_sign")])
+def test_elastic_resize_matches_fresh_run(use_kernel, optimizer, ls_kw):
+    """A mid-run shrink W=4->2 through fit's elastic path equals the
+    fresh-run-at-W=2-from-carried-state oracle bitwise — SGD and LARS,
+    dense and ef_sign, tree and resident."""
+    steps, H, resize_round, new_w = 16, 2, 3, 2
+    run = make_run(H=H, steps=steps, optimizer=optimizer,
+                   controller=ControllerConfig(kind="elastic"), **ls_kw)
+    data = quad_data()
+    ref = _reference_elastic(run, data, use_kernel=use_kernel,
+                             resize_round=resize_round, new_w=new_w,
+                             steps=steps)
+    be = LocalBackend(4, build_fn=quad_builder(use_kernel=use_kernel))
+    ctl = ElasticController(run, resize_at={resize_round: new_w})
+    state, _, summary = fit(run, ShardedBatches(data, 4, 8), backend=be,
+                            controller=ctl, num_steps=steps, seed=0)
+    assert summary["resizes"] == 1
+    assert be.worker_set.num_workers == new_w
+    assert_trees_equal(unpack_state(ref).params, unpack_state(state).params)
+    assert_trees_equal(unpack_state(ref).momentum,
+                       unpack_state(state).momentum)
+
+
+def test_schedule_block_steps_runtime_knob():
+    """The runtime ``block_steps`` knob (PlanDelta.block_steps — the
+    demotion actuator) changes the sync cadence from the next round
+    without touching the frozen config; the schedule itself is
+    worker-count-independent, so resizes cannot perturb boundaries
+    (pinned end-to-end in the acceptance test's JSONL)."""
+    ls = LocalSGDConfig(local_steps=2, block_steps=1)
+    c = DynamicSchedule(ls, lambda t: 1)
+    assert [c.advance(t) for t in range(4)] == [2, 2, 2, 2]
+    c.block_steps = 2              # every other global becomes a block sync
+    assert [c.advance(t) for t in range(4, 8)] == [1, 2, 1, 2]
+    assert c.cfg.block_steps == 1                  # config stays frozen
+
+
+# ---------------------------------------------------------------------------
+# simulated heterogeneity -> skew gauge -> demotion
+# ---------------------------------------------------------------------------
+
+def test_simulated_backend_skew_and_demotion(tmp_path):
+    """ISSUE-9 satellite: injected per-worker latency makes the
+    worker_step_skew gauge nonzero, the elastic policy demotes the
+    straggler after ``skew_patience`` rounds (observable in the JSONL +
+    trace decision stream), and post-demotion skew collapses."""
+    steps = 24
+    run = make_run(H=2, steps=steps,
+                   controller=ControllerConfig(kind="elastic"))
+    be = SimulatedBackend(4, latency_s={2: 0.05},
+                          build_fn=quad_builder())
+    tracer = Tracer(metrics=MetricsRegistry())
+    jsonl = tmp_path / "t.jsonl"
+    state, _, summary = fit(run, ShardedBatches(quad_data(), 4, 8),
+                            backend=be, num_steps=steps, seed=0,
+                            telemetry_path=str(jsonl), tracer=tracer)
+    recs = [json.loads(l) for l in open(jsonl)]
+    pre = [r for r in recs if "demote" not in r and r["round"] <= 2]
+    post = [r for r in recs if r["round"] > 2]
+    assert all(r["worker_step_skew"] > run.controller.skew_threshold
+               for r in pre)
+    demoted = [r for r in recs if "demote" in r]
+    assert len(demoted) == 1 and demoted[0]["demote"] == 2
+    assert demoted[0]["round"] == run.controller.skew_patience
+    assert all(r["worker_step_skew"] == 0.0 for r in post)
+    assert be.worker_set.demoted == (2,)
+    assert be.worker_step_times(h=1) == [be.base_step_s] * 3   # active only
+    # the demotion moved the plan to the hierarchical topology and the
+    # schedule to a block cadence
+    assert summary["topology"].startswith("hierarchical")
+    assert summary["comm_rounds"]["block"] > 0
+    # decision provenance rides the trace's controller span
+    spans = [s for s in tracer.spans if s.name == "controller"
+             and s.attrs.get("demote") is not None]
+    assert len(spans) == 1
+    assert spans[0].attrs["decisions"]["straggler"]["demote"] == 2
+    # simulated round pricing: inner scope no longer waits on worker 2
+    assert be.round_seconds(h=1, scope="block") == pytest.approx(
+        be.base_step_s)
+    assert be.round_seconds(h=1, scope="global") == pytest.approx(
+        be.base_step_s + 0.05)
+
+
+def test_demotion_not_scheduled_for_anchored_configs():
+    """Compression/global-momentum configs cannot serve block-scope
+    syncs (core/local_sgd asserts global scope); the elastic policy
+    still demotes the worker in the census but must NOT switch the plan
+    to a block topology."""
+    from repro.core.controller import RoundReport
+    run = make_run(H=2, sync_compression="ef_sign",
+                   controller=ControllerConfig(kind="elastic"))
+    ctl = ElasticController(run)
+    assert not ctl.can_block
+    stats = {"worker_step_skew": 2.0, "worker_slowest": 1, "num_workers": 4}
+    for r in (1, 2):
+        ctl.update(RoundReport(round=r, step=2 * r, h=2, loss=1.0,
+                               stats=stats))
+    delta = ctl.plan_delta(4)
+    assert delta.demote == 1
+    assert delta.topology is None and delta.block_steps is None
+
+
+# ---------------------------------------------------------------------------
+# the acceptance run: W=4 -> 2 -> 4, resident state carried through
+# ---------------------------------------------------------------------------
+
+def test_elastic_w4_2_4_acceptance(tmp_path):
+    steps = 40
+    run = make_run(H=2, steps=steps,
+                   controller=ControllerConfig(kind="elastic"))
+    be = LocalBackend(4, build_fn=quad_builder(use_kernel=True))
+    ctl = ElasticController(run, resize_at={4: 2, 9: 4})
+    jsonl = tmp_path / "t.jsonl"
+    state, hist, summary = fit(run, ShardedBatches(quad_data(), 4, 8),
+                               backend=be, controller=ctl, num_steps=steps,
+                               seed=0, telemetry_path=str(jsonl))
+    assert summary["resizes"] == 2
+    assert is_resident(state)                      # stayed on the bus
+    assert jax.tree.leaves(state.params)[0].shape[0] == 4
+    # ledger prices rounds under each worker set
+    wsets = summary["ledger"]["worker_sets"]
+    assert set(wsets) == {"W=2", "W=4"} and wsets["W=2"]["rounds"] >= 3
+    assert wsets["W=2"]["bytes_per_round"] < wsets["W=4"]["bytes_per_round"]
+    # decision stream shows both resizes
+    recs = [json.loads(l) for l in open(jsonl)]
+    assert [r["next_workers"] for r in recs if "next_workers" in r] == [2, 4]
+    # DynamicSchedule boundaries stayed consistent across both resizes:
+    # global syncs land every H=2 steps regardless of worker count
+    assert [r["step"] for r in recs] == list(range(1, steps, 2))
+    assert all(r["h"] == 2 for r in recs)
+    # converged: late loss well under the early loss
+    assert hist[-1]["loss"] < 0.1 * hist[0]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# distributed backend: structural gating
+# ---------------------------------------------------------------------------
+
+def test_distributed_backend_gating():
+    be = make_backend("distributed", 4)
+    assert be.kind == "distributed"
+    assert be.worker_set == WorkerSet.of(4)
+    be.demote(1)
+    assert be.worker_set.demoted == (1,)
+    run = make_run()
+    with pytest.raises(RuntimeError, match="coordinator|multi-process"):
+        be.build(run)
+
+
+def test_make_backend_kinds():
+    assert make_backend("local", 2).kind == "local"
+    assert make_backend("simulated", 2).kind == "simulated"
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_backend("ray", 2)

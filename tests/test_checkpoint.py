@@ -1,10 +1,16 @@
-"""Checkpoint round-trips, including full LocalSGDState."""
+"""Checkpoint round-trips, including full LocalSGDState and the
+elastic worker-axis restore (ISSUE 9: a flat snapshot saved at W_old
+restores into a W_new template — shrink keeps survivors bit-exact,
+grow clones; any non-elastic mismatch still raises)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.checkpoint import load_meta, restore, save
+from repro.checkpoint.checkpoint import (load_meta, restore, restore_flat,
+                                         save, save_flat)
 from repro.configs.base import InputShape, LocalSGDConfig, ModelConfig, OptimConfig, RunConfig
+from repro.core import flatbuf
 from repro.core.local_sgd import make_local_sgd
 
 
@@ -37,3 +43,86 @@ def test_roundtrip_local_sgd_state(tmp_path):
     out = restore(path, tmpl)
     np.testing.assert_allclose(out.params["w"], state.params["w"])
     assert int(out.step) == 1
+
+
+# ---------------------------------------------------------------------------
+# elastic worker-axis restore (backend seam x checkpoint)
+# ---------------------------------------------------------------------------
+
+def _stacked_state(w, seed=0):
+    """LocalSGDState-shaped tree: (W, ...) stacked leaves + single-copy
+    anchor/step, the shape class the elastic restore has to handle."""
+    key = jax.random.PRNGKey(seed)
+    mk = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s)
+    return {"params": {"w": mk(0, (w, 6, 3)), "b": mk(1, (w, 3))},
+            "momentum": {"w": mk(2, (w, 6, 3)), "b": mk(3, (w, 3))},
+            "anchor": {"w": mk(4, (6, 3)), "b": mk(5, (3,))},
+            "step": jnp.int32(5)}
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+@pytest.mark.parametrize("new_w", [2, 8])
+def test_elastic_restore_flat_rebuckets_worker_axis(tmp_path, new_w):
+    """restore_flat of a W=4 snapshot into a W=2 / W=8 template: shrink
+    keeps the surviving workers BIT-EXACT, grow clones each worker;
+    single-copy leaves (anchor, step) restore unchanged."""
+    state4 = _stacked_state(4)
+    path = str(tmp_path / "w4")
+    save_flat(path, state4, step=5)
+    out = restore_flat(path, _sds(_stacked_state(new_w, seed=1)))
+    for name in ("params", "momentum"):
+        for k, saved in state4[name].items():
+            got = np.asarray(out[name][k])
+            if new_w < 4:
+                np.testing.assert_array_equal(got, np.asarray(saved)[:new_w])
+            else:
+                np.testing.assert_array_equal(
+                    got, np.repeat(np.asarray(saved), new_w // 4, axis=0))
+    for k, v in state4["anchor"].items():
+        np.testing.assert_array_equal(np.asarray(out["anchor"][k]),
+                                      np.asarray(v))
+    assert int(out["step"]) == 5
+
+
+def test_elastic_restore_flat_resident(tmp_path):
+    """The same re-bucket on a RESIDENT snapshot: BucketState leaves are
+    the (W, rows, 128) buffers themselves, and the restored state stays
+    in bucket form with the surviving workers bit-exact."""
+    key = jax.random.PRNGKey(2)
+    params4 = {"w": jax.random.normal(key, (4, 6, 3)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (4, 3))}
+    st4 = flatbuf.BucketState.pack(params4, leading=1)
+    path = str(tmp_path / "res4")
+    save_flat(path, {"params": st4}, step=9)
+    tmpl = {"params": flatbuf.BucketState.pack(
+        jax.tree.map(lambda x: jnp.zeros_like(x[:2]), params4), leading=1)}
+    out = restore_flat(path, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tmpl))
+    assert flatbuf.is_bucket_state(out["params"])
+    ref = jax.tree.map(lambda x: x[:2], params4)
+    for a, b in zip(jax.tree.leaves(out["params"].unpack()),
+                    jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_flat_non_elastic_mismatch_still_raises(tmp_path):
+    state4 = _stacked_state(4)
+    path = str(tmp_path / "w4bad")
+    save_flat(path, state4, step=5)
+    # trailing-shape change: not a worker-axis resize
+    bad = _stacked_state(4, seed=1)
+    bad["params"]["w"] = jnp.zeros((4, 7, 3))
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_flat(path, _sds(bad))
+    # inconsistent leading pair (one leaf shrinks, one grows): rejected
+    mixed = _stacked_state(4, seed=1)
+    mixed["params"]["w"] = jnp.zeros((2, 6, 3))
+    mixed["momentum"]["w"] = jnp.zeros((8, 6, 3))
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_flat(path, _sds(mixed))
+    # non-divisible resize (4 -> 3): rejected
+    with pytest.raises(ValueError, match="layout mismatch"):
+        restore_flat(path, _sds(_stacked_state(3, seed=1)))
