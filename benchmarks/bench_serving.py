@@ -1,0 +1,136 @@
+"""Serving bench: continuous batching vs the static wave (ISSUE 10).
+
+Acceptance row: with a mixed-length workload (a few long generations +
+many short ones), the continuous-batching engine must deliver at least
+the static batch's tokens/s at the same batch size — the static wave
+holds every slot until its LONGEST sequence finishes, while the engine
+retires short sequences and admits queued work into the freed slots.
+
+Emits:
+
+* ``serving/static_baseline``      us/token, tokens/s of the wave loop
+* ``serving/continuous_batching``  us/token, tokens/s, occupancy,
+                                   speedup over the static row
+* ``serving/hot_swap``             ms per live weight install
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, wall_timer
+
+
+def _workload(rng, vocab, batch):
+    """Mixed generation lengths: per wave of ``batch``, one long tail +
+    short requests — the shape continuous batching exists for.  The
+    static wave burns ``max(lens)`` steps on EVERY slot; the engine
+    retires the shorts after 2 tokens and packs the queued longs into
+    the freed slots, so they overlap instead of serializing per wave."""
+    lens = [36, 2, 2, 2][:batch] + [2] * max(0, batch - 4)
+    reqs = []
+    for _ in range(6):               # six waves' worth of work
+        for n in lens:
+            p = rng.integers(0, vocab, int(rng.integers(3, 7))).tolist()
+            reqs.append((p, n))
+    return reqs
+
+
+def serving_bench():
+    from repro import configs
+    from repro.models import base as mbase
+    from repro.models import lm
+    from repro.serving import DecodeEngine
+    from repro.telemetry import MetricsRegistry
+
+    cfg = configs.get_smoke("gemma3-1b")
+    params = mbase.materialize(lm.param_specs(cfg), jax.random.PRNGKey(0))
+    batch, max_len = 4, 48
+    rng = np.random.default_rng(0)
+    reqs = _workload(rng, cfg.vocab_size, batch)
+    total_tokens = sum(n for _, n in reqs)
+
+    # -- static wave baseline: batch B prompts, decode until the slowest
+    # finishes, then the next wave (the examples/serve_lm.py shape) ----
+    L = 8                     # fixed wave shapes: compile once, not per wave
+    step = jax.jit(lambda p, t, c, n: lm.decode_step(cfg, p, t, c, n))
+    pref = jax.jit(lambda p, t: lm.prefill(cfg, p, t, max_len=max_len))
+
+    def run_static():
+        out = 0
+        for w in range(0, len(reqs), batch):
+            wave = reqs[w:w + batch]
+            toks = np.zeros((len(wave), L), np.int32)
+            for i, (p, _) in enumerate(wave):
+                toks[i, L - len(p):] = p           # left-pad the wave
+            logits, cache = pref(params, jnp.asarray(toks))
+            tok = logits.argmax(-1).astype(jnp.int32)
+            out += len(wave)
+            # every slot decodes until the LAST request's budget
+            for i in range(max(n for _, n in wave) - 1):
+                logits, cache = step(params, tok, cache,
+                                     jnp.int32(L + i + 1))
+                tok = logits.argmax(-1).astype(jnp.int32)
+                out += sum(1 for _, n in wave if n > i + 1)
+            jax.block_until_ready(tok)
+        return out
+
+    # -- continuous batching at the same batch size --------------------
+    reg = MetricsRegistry()
+    eng = DecodeEngine(cfg, params, max_batch=batch, max_len=max_len,
+                       page_size=8, prefill_len=L, metrics=reg)
+
+    def run_continuous():
+        warm, occ = eng.tokens_out, []
+        for p, n in reqs:
+            eng.submit(p, max_new=n)
+        with wall_timer("serving/continuous_batching") as w:
+            while not eng.idle:
+                eng.step()
+                occ.append(eng.num_active / batch)
+        return eng.tokens_out - warm, w["s"], occ
+
+    run_static()                                    # compile
+    eng.submit(reqs[0][0], max_new=2)               # compile both programs
+    eng.run()
+
+    # INTERLEAVED best-of-3: each loop is a ~100 ms window, and machine
+    # throughput drifts by +-30% over seconds — measuring the two paths
+    # back-to-back would hand whichever ran in the quiet window a bogus
+    # win.  Alternate static/continuous passes so drift hits both, and
+    # take each path's best pass as its capability number.
+    static_s = cont_s = np.inf
+    for _ in range(3):
+        with wall_timer("serving/static_baseline") as w:
+            emitted = run_static()
+        static_s = min(static_s, w["s"])
+        cont_tokens, s, occ_samples = run_continuous()
+        cont_s = min(cont_s, s)
+    static_tps = emitted / static_s
+    emit("serving/static_baseline", static_s * 1e6 / emitted,
+         f"tokens_per_s={static_tps:.1f};batch={batch};"
+         f"tokens={emitted};waves={len(reqs) // batch}")
+    cont_tps = cont_tokens / cont_s
+    emit("serving/continuous_batching", cont_s * 1e6 / cont_tokens,
+         f"tokens_per_s={cont_tps:.1f};batch={batch};"
+         f"tokens={cont_tokens};occupancy={np.mean(occ_samples):.2f};"
+         f"speedup_vs_static={cont_tps / static_tps:.2f}",
+         extra={"static_tokens_per_s": round(static_tps, 1),
+                "page_size": eng.pl.page_size,
+                "num_pages": eng.pl.num_pages})
+
+    # -- live weight hot-swap latency ----------------------------------
+    new_params = mbase.materialize(lm.param_specs(cfg),
+                                   jax.random.PRNGKey(1))
+    eng.submit(reqs[0][0], max_new=30)              # keep a resident alive
+    eng.step()
+    t0 = time.perf_counter()
+    eng.install_weights(new_params, version=1)
+    swap_s = time.perf_counter() - t0
+    eng.run()
+    emit("serving/hot_swap", swap_s * 1e6,
+         f"swap_ms={swap_s * 1e3:.1f};residents=1;"
+         f"version={eng.weight_version}")

@@ -18,6 +18,7 @@ Mapping to the paper (see DESIGN.md §6):
   roofline dry-run derived roofline rows (deliverable g quick view)
   noise_adaptive composite controller smoke: wire bytes/round + loss
   elastic backend seam smoke: scripted resize + straggler demotion
+  serving continuous batching vs static wave + hot-swap latency
 """
 from __future__ import annotations
 
@@ -42,7 +43,8 @@ def main() -> None:
                          "tracked across PRs")
     args = ap.parse_args()
 
-    from benchmarks import bench_convex, bench_kernels, bench_roofline, paper_tables
+    from benchmarks import (bench_convex, bench_kernels, bench_roofline,
+                            bench_serving, paper_tables)
 
     benches = {
         "kernels": bench_kernels.kernels_bench,
@@ -52,6 +54,7 @@ def main() -> None:
         "syncplan": bench_kernels.syncplan_bench,
         "noise_adaptive": bench_kernels.noise_adaptive_bench,
         "elastic": bench_kernels.elastic_bench,
+        "serving": bench_serving.serving_bench,
         "roofline": bench_roofline.roofline_rows,
         "sec5": paper_tables.sec5_noise_scale,
         "table17": paper_tables.table17_network_delay_tolerance,
@@ -71,7 +74,7 @@ def main() -> None:
     slow = {"table1", "fig1", "table2", "fig2b", "table4", "table8",
             "table14", "table16", "fig4", "fig6", "fig6b", "fig10"}
     smoke = ("kernels", "bucket", "resident", "sharded", "syncplan",
-             "noise_adaptive", "elastic")
+             "noise_adaptive", "elastic", "serving")
     selected = ([s for s in args.only.split(",") if s] if args.only
                 else list(smoke) if args.smoke
                 else [k for k in benches if not (args.fast and k in slow)])

@@ -78,6 +78,17 @@ class WorkerSet:
             return self
         return replace(self, demoted=self.demoted + (worker_id,))
 
+    def promote(self, worker_id: int) -> "WorkerSet":
+        """Return a demoted worker to the inner (fast) scope — the
+        inverse of :meth:`demote`, for stragglers that recovered."""
+        if worker_id not in self.ids:
+            raise ValueError(f"unknown worker id {worker_id} (ids={self.ids})")
+        if worker_id not in self.demoted:
+            return self
+        return replace(self,
+                       demoted=tuple(d for d in self.demoted
+                                     if d != worker_id))
+
     def row_of(self, worker_id: int) -> int:
         """Stacked-axis row of a worker id."""
         return self.ids.index(worker_id)
@@ -113,6 +124,12 @@ class Backend:
         self._worker_set = self._worker_set.demote(worker_id)
         return self._worker_set
 
+    def promote(self, worker_id: int) -> WorkerSet:
+        if self._worker_set is None:
+            raise RuntimeError("backend has no worker set yet (call build)")
+        self._worker_set = self._worker_set.promote(worker_id)
+        return self._worker_set
+
     # -- bundle construction ----------------------------------------------
     def build(self, run, **kw):
         """Build a TrainBundle for the current worker set."""
@@ -137,6 +154,16 @@ class Backend:
         stacked-axis order, or ``None`` when the backend executes the
         workers in lockstep (vmapped local: one device, one clock — skew
         is structurally unobservable, the gauge reads 0.0)."""
+        return None
+
+    def worker_times_by_id(self, *, h: int = 1,
+                           measured_s: float | None = None):
+        """Per-worker wall seconds keyed by worker id, for ALL workers —
+        demoted ones included.  :meth:`worker_step_times` covers only
+        the active set (the skew the inner ring experiences), so a
+        demoted worker's recovery is invisible there; this is the
+        sensor the elastic policy's promotion-back path reads.  ``None``
+        when the backend cannot attribute per-worker time."""
         return None
 
     def describe(self) -> dict:

@@ -46,6 +46,16 @@ class SimulatedBackend(LocalBackend):
         active = ws.active or ws.ids
         return [self._time_of(i, h) for i in active]
 
+    def worker_times_by_id(self, *, h: int = 1,
+                           measured_s: float | None = None):
+        """All workers' simulated seconds keyed by id — demoted workers
+        included, so the elastic policy can see a straggler recover
+        (``latency_s`` cleared mid-run) and promote it back."""
+        ws = self._worker_set
+        if ws is None:
+            return None
+        return {int(i): self._time_of(i, h) for i in ws.ids}
+
     def round_seconds(self, *, h: int = 1, scope: str = "global") -> float:
         """Wall seconds one sync round waits on the local phase: the
         slowest active worker for inner/block scopes, the slowest worker

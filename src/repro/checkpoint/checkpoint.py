@@ -190,3 +190,50 @@ def restore_flat(path: str, template):
         bufs.append(jax.numpy.asarray(
             raw.view(dt).reshape(layout.bucket_rows[i], -1)))
     return flatbuf.unflatten(layout, bufs)
+
+
+# ---------------------------------------------------------------------------
+# Versioned publish channel: trainer -> serving hot-swap (see serving/)
+# ---------------------------------------------------------------------------
+
+def publish_flat(dir: str, tree, *, step: int | None = None,
+                 extra: dict | None = None) -> tuple[int, str]:
+    """Publish ``tree`` as the next weight version under ``dir``.
+
+    Writes ``weights_v{n}.npz`` via :func:`save_flat`, then atomically
+    advances ``manifest.json`` (temp file + ``os.replace``) so a reader
+    polling :func:`latest_flat` only ever observes fully written
+    versions.  Returns ``(version, snapshot_path)``.
+    """
+    os.makedirs(dir, exist_ok=True)
+    mpath = os.path.join(dir, "manifest.json")
+    manifest = {"latest": -1, "versions": {}}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    version = int(manifest["latest"]) + 1
+    name = f"weights_v{version}"
+    save_flat(os.path.join(dir, name), tree, step=step,
+              extra={"version": version, **(extra or {})})
+    manifest["latest"] = version
+    manifest["versions"][str(version)] = {"path": name + ".npz",
+                                          "step": step}
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, mpath)
+    return version, os.path.join(dir, name + ".npz")
+
+
+def latest_flat(dir: str) -> tuple[int, str] | None:
+    """Latest published ``(version, snapshot_path)`` under ``dir`` per
+    its manifest, or None when nothing has been published yet."""
+    mpath = os.path.join(dir, "manifest.json")
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        manifest = json.load(f)
+    latest = int(manifest["latest"])
+    if latest < 0:
+        return None
+    return latest, os.path.join(dir, manifest["versions"][str(latest)]["path"])

@@ -471,6 +471,15 @@ class ElasticController(_EmitsPlanDelta):
       plan to ``hierarchical(W//2)`` and stretches the outer cadence
       via ``block_steps`` so the demoted worker stops gating every
       round.
+    * **promotion-back** (ISSUE 10) — demotion is no longer one-way:
+      the backend's by-id census (``worker_step_s_by_id``, which —
+      unlike the active-only skew sensor — still sees demoted workers)
+      is watched per demoted id, and when a worker's excess over the
+      active mean stays below ``skew_threshold`` for ``skew_patience``
+      consecutive rounds it is returned to the inner scope via
+      ``promote=<id>`` (one per round).  When the LAST demoted worker
+      comes back, the delta also restores the pre-demotion topology
+      (``flat`` for a flat-scheduled run) and block cadence.
 
     H / compression / batch follow the static schedule — this policy
     only moves workers.
@@ -488,9 +497,11 @@ class ElasticController(_EmitsPlanDelta):
         self.can_block = not needs_anchor(self.ls)
         self.skew_streak = 0
         self.demoted: set[int] = set()
+        self.recovery_streak: dict[int, int] = {}
         self.decisions: dict = {}
         self._pending_workers: int | None = None
         self._pending_demote: int | None = None
+        self._pending_promote: int | None = None
         self._pending_block_steps: int | None = None
 
     def h_at(self, step: int) -> int:
@@ -509,6 +520,7 @@ class ElasticController(_EmitsPlanDelta):
             self._pending_workers = target
             self.decisions["resize"] = {"workers": target,
                                         "round": report.round}
+        self._maybe_promote(report)
         skew = report.stats.get("worker_step_skew")
         if skew is None:
             return
@@ -534,15 +546,54 @@ class ElasticController(_EmitsPlanDelta):
                     self._topology_switch = hierarchical(default_block_size(w))
                     self._pending_block_steps = self.demote_block_steps
 
+    def _maybe_promote(self, report: RoundReport) -> None:
+        """Watch demoted workers in the by-id census; return one to the
+        inner scope once its excess over the active mean has stayed
+        below ``skew_threshold`` for ``skew_patience`` rounds."""
+        by_id = report.stats.get("worker_step_s_by_id")
+        if not self.demoted or not by_id:
+            return
+        by_id = {int(k): float(v) for k, v in by_id.items()}
+        active = [t for i, t in by_id.items() if i not in self.demoted]
+        mean_active = sum(active) / len(active) if active else 0.0
+        if mean_active <= 0:
+            return
+        for d in sorted(self.demoted):
+            if d not in by_id:
+                continue
+            excess = (by_id[d] - mean_active) / mean_active
+            if excess < self.cc.skew_threshold:
+                self.recovery_streak[d] = self.recovery_streak.get(d, 0) + 1
+            else:
+                self.recovery_streak[d] = 0
+        ready = [d for d in sorted(self.demoted)
+                 if self.recovery_streak.get(d, 0) >= self.cc.skew_patience]
+        if not ready:
+            return
+        back = ready[0]                       # one promotion per round
+        self.demoted.discard(back)
+        self.recovery_streak.pop(back, None)
+        self._pending_promote = back
+        self.decisions["recovered"] = {"promote": back,
+                                       "restored": not self.demoted}
+        if not self.demoted and self.can_block:
+            # last straggler back: undo the demotion-era schedule
+            from repro.core.syncplan import flat
+            if self.ls.block_steps == 1:
+                self._topology_switch = flat()
+            self._pending_block_steps = self.ls.block_steps
+
     def plan_delta(self, step: int) -> PlanDelta:
         import dataclasses
         delta = super().plan_delta(step)
         w, self._pending_workers = self._pending_workers, None
         d, self._pending_demote = self._pending_demote, None
+        p, self._pending_promote = self._pending_promote, None
         b, self._pending_block_steps = self._pending_block_steps, None
-        if w is None and d is None and b is None:
+        if w is None and d is None and p is None and b is None:
             return delta
-        return dataclasses.replace(delta, workers=w, demote=d, block_steps=b)
+        return dataclasses.replace(delta, workers=w, demote=d, promote=p,
+                                   block_steps=b)
 
 
 _KINDS = {
@@ -594,5 +645,6 @@ def traced_decision(tracer, controller: SyncController, report: RoundReport,
                          if delta.topology is not None else None),
                batch_scale=delta.batch_scale, lr_scale=delta.lr_scale,
                workers=delta.workers, demote=delta.demote,
+               promote=getattr(delta, "promote", None),
                decisions=dict(getattr(controller, "decisions", None) or {}))
     return delta

@@ -423,6 +423,20 @@ def is_bucket_state(x) -> bool:
     return isinstance(x, BucketState)
 
 
+def abstract_buckets(layout: FlatLayout, *, lead: tuple = ()) -> list:
+    """ShapeDtypeStruct per bucket buffer: ``(*lead, rows, LANE)``.
+
+    The template form shared by resident checkpoint restores and the
+    serving weight-subscriber (a :class:`BucketState` of these SDS
+    leaves restores a published bucket snapshot without materializing a
+    pytree), and by the serving page pools (``lead=(num_pages,
+    page_size)`` turns each bucket into a pool of fixed-size KV pages).
+    """
+    return [jax.ShapeDtypeStruct(tuple(lead) + (layout.bucket_rows[b], LANE),
+                                 jnp.dtype(layout.bucket_dtypes[b]))
+            for b in range(layout.num_buckets)]
+
+
 # ---------------------------------------------------------------------------
 # Precomputed per-bucket constants (numpy; static under jit)
 # ---------------------------------------------------------------------------

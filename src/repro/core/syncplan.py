@@ -508,6 +508,13 @@ class PlanDelta:
                       actuates it through ``backend.demote``; pairs
                       with a ``topology`` switch when the plan is still
                       flat.  ``apply`` ignores it.
+    ``promote``     — straggler promotion-back: worker id to return to
+                      the inner scope after its step time recovered
+                      (None = none).  Fit actuates it through
+                      ``backend.promote``; when the last demoted worker
+                      is promoted the delta also restores the
+                      pre-demotion topology / block cadence.  ``apply``
+                      ignores it.
     ``block_steps`` — runtime block-phase length for DynamicSchedule
                       (None = keep), the cadence knob a demotion uses
                       to keep the outer scope off the per-round path.
@@ -520,6 +527,7 @@ class PlanDelta:
     lr_scale: float | None = None
     workers: int | None = None
     demote: int | None = None
+    promote: int | None = None
     block_steps: int | None = None
 
     def apply(self, plan: SyncPlan) -> SyncPlan:

@@ -321,3 +321,28 @@ def build_serve(cfg: ModelConfig, shape: InputShape, *, mesh: Mesh | None = None
             decode_fn, in_shardings=(psh, tsh, csh, None),
             out_shardings=(logits_sh, csh))
     return bundle
+
+
+def build_engine(cfg: ModelConfig, shape: InputShape, params=None, *,
+                 page_size: int = 8, num_pages: int | None = None,
+                 prefill_len: int | None = None, eos_id: int | None = None,
+                 scan: bool = True, seed: int = 0, tracer=None, metrics=None,
+                 jit: bool = True):
+    """Continuous-batching serving engine for one host (see
+    :mod:`repro.serving.engine`).
+
+    The dynamic-batching counterpart of :func:`build_serve`:
+    ``shape.global_batch`` decode slots, ``shape.seq_len`` max sequence
+    length, a paged KV pool sized for full occupancy.  ``params=None``
+    materializes fresh ones from the config's specs (smoke/bench use).
+    """
+    from repro.serving.engine import DecodeEngine
+
+    if params is None:
+        params = mbase.materialize(lm.param_specs(cfg),
+                                   jax.random.PRNGKey(seed))
+    return DecodeEngine(cfg, params, max_batch=shape.global_batch,
+                        max_len=shape.seq_len, page_size=page_size,
+                        num_pages=num_pages, prefill_len=prefill_len,
+                        eos_id=eos_id, scan=scan, tracer=tracer,
+                        metrics=metrics, jit=jit)

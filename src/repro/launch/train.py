@@ -290,6 +290,14 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                     stats["worker_slowest"] = int(
                         active[max(range(len(ts)), key=ts.__getitem__)])
                     stats.setdefault("num_workers", ws.num_workers)
+                # by-id census covers demoted workers too — the sensor
+                # the promotion-back path needs (a recovered straggler
+                # is invisible in the active-only skew above)
+                wtimes_by_id = backend.worker_times_by_id(
+                    h=h_now, measured_s=stp.dur_s)
+                if wtimes_by_id:
+                    stats["worker_step_s_by_id"] = {
+                        int(k): float(v) for k, v in wtimes_by_id.items()}
                 report = RoundReport(
                     round=global_rounds, step=t, h=h_now,
                     loss=float(metrics["loss"]),
@@ -334,6 +342,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                         rec["next_workers"] = int(delta.workers)
                     if getattr(delta, "demote", None) is not None:
                         rec["demote"] = int(delta.demote)
+                    if getattr(delta, "promote", None) is not None:
+                        rec["promote"] = int(delta.promote)
                     if tracer.enabled:
                         # the seconds extension of the schema (README):
                         # round/sync wall time + per-stage attribution
@@ -355,6 +365,8 @@ def fit(run: RunConfig, data_iter, *, bundle=None, num_steps=None, seed=0,
                 # new census ---------------------------------------------
                 if getattr(delta, "demote", None) is not None:
                     backend.demote(int(delta.demote))
+                if getattr(delta, "promote", None) is not None:
+                    backend.promote(int(delta.promote))
                 if getattr(delta, "block_steps", None) is not None:
                     sched.block_steps = int(delta.block_steps)
                 new_w = getattr(delta, "workers", None)

@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.base import ParamSpec
-from repro.models.layers import (apply_rope, chunked_attention, constrain,
-                                 decode_attention, geglu, rms_norm, swiglu)
+from repro.models.layers import (apply_rope, cache_write, chunked_attention,
+                                 constrain, decode_attention, geglu, rms_norm,
+                                 swiglu)
 from repro.sharding.layout import MeshLayout
 
 
@@ -85,9 +86,9 @@ def attn_apply(cfg: ModelConfig, p, x, ctx: Ctx, *, window: int = 0,
     new_cache = None
     if ctx.mode == "decode":
         cache = ctx.cache
-        write = ctx.cache_len - 1
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write, axis=1)
+        write = ctx.cache_len - 1       # () or (B,): per-seq decode positions
+        kc = cache_write(cache["k"], k, write)
+        vc = cache_write(cache["v"], v, write)
         kc = constrain(kc, lay, "batch", "kv_seq", "kv_heads", None)
         vc = constrain(vc, lay, "batch", "kv_seq", "kv_heads", None)
         out = decode_attention(q, kc, vc, cache_len=ctx.cache_len,
@@ -184,9 +185,9 @@ def mla_apply(cfg: ModelConfig, p, x, ctx: Ctx):
 
     if ctx.mode == "decode":
         cache = ctx.cache
-        write = ctx.cache_len - 1
-        cc = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c.astype(cache["ckv"].dtype), write, axis=1)
-        rc = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), write, axis=1)
+        write = ctx.cache_len - 1       # () or (B,): per-seq decode positions
+        cc = cache_write(cache["ckv"], c, write)
+        rc = cache_write(cache["k_rope"], k_rope, write)
         cc = constrain(cc, lay, "batch", "kv_seq", None)
         rc = constrain(rc, lay, "batch", "kv_seq", None)
         # absorbed decode: score in latent space (the MLA memory trick)

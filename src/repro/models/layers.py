@@ -211,6 +211,24 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return constrain(out, lay, "batch", "seq", "heads", None)
 
 
+def cache_write(buf, new, write):
+    """Write one token's k/v rows into a sequence-major cache buffer.
+
+    ``buf``: (B, S, ...); ``new``: (B, 1, ...); ``write``: () or (B,)
+    int — the target position along axis 1.  The scalar form is the
+    classic single-counter decode; the vector form is what continuous
+    batching needs (every resident sequence sits at its own position),
+    implemented as a batch-vmapped dynamic_update_slice so each row gets
+    its own start index.
+    """
+    new = new.astype(buf.dtype)
+    w = jnp.asarray(write)
+    if w.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, w, axis=1)
+    upd = lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    return jax.vmap(upd)(buf, new, w)
+
+
 def decode_attention(q, k_cache, v_cache, *, cache_len, window: int = 0,
                      softcap: float = 0.0, scale: float = 0.0,
                      lay: MeshLayout | None = None):

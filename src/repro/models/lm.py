@@ -238,6 +238,45 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     }
 
 
+def cache_axes_tree(cfg: ModelConfig, *, enc_len: int | None = None):
+    """Logical-axes pytree congruent with :func:`init_cache` trees."""
+    return init_cache(cfg, 1, 1, axes=True, enc_len=enc_len)
+
+
+def grow_cache(cfg: ModelConfig, cache, max_len: int, *,
+               enc_len: int | None = None):
+    """Embed a length-S prefill cache into a ``max_len`` template.
+
+    Each leaf is zero-extended along its ``kv_seq`` axis (located via the
+    logical-axes tree, so stacked-group and remainder leaves both work)
+    with its dtype preserved — the jittable replacement for the old
+    example-side ``pad_to`` hack, which silently cast the cache to the
+    template dtype and re-padded on every call.  Recurrent leaves (no
+    ``kv_seq`` axis) and the encoder cross-attention KV (``xk``/``xv``,
+    whose length is the encoder's, not the decoder's) pass through.
+    """
+    axes = cache_axes_tree(cfg, enc_len=enc_len)
+    is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0
+                         and all(isinstance(e, (str, type(None))) for e in x))
+    flat_c, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    flat_a = jax.tree.flatten(axes, is_leaf=is_axes)[0]
+    assert len(flat_c) == len(flat_a), (len(flat_c), len(flat_a))
+    grown = []
+    for (path, leaf), ax in zip(flat_c, flat_a):
+        key = str(path[-1]) if path else ""
+        if "kv_seq" not in ax or "xk" in key or "xv" in key:
+            grown.append(leaf)
+            continue
+        si = ax.index("kv_seq")
+        if leaf.shape[si] >= max_len:
+            grown.append(leaf)
+            continue
+        pads = [(0, 0)] * leaf.ndim
+        pads[si] = (0, max_len - leaf.shape[si])
+        grown.append(jnp.pad(leaf, pads))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(cache), grown)
+
+
 def cache_partition_specs(cfg: ModelConfig, lay: MeshLayout, batch: int, max_len: int,
                           *, enc_len: int | None = None):
     tree = init_cache(cfg, batch, max_len, axes=True, enc_len=enc_len)
@@ -449,15 +488,35 @@ def loss_fn(cfg: ModelConfig, params, batch, *, lay=None, scan=True,
 # ---------------------------------------------------------------------------
 
 def prefill(cfg: ModelConfig, params, tokens, *, lay=None, max_len=None,
-            prefix_embed=None, enc_frames=None, scan=True,
+            lengths=None, prefix_embed=None, enc_frames=None, scan=True,
             block_q=512, block_k=512):
-    """Full forward building a KV cache; returns (last_logits, cache)."""
+    """Full forward building a KV cache; returns (last_logits, cache).
+
+    ``lengths`` (optional (B,) int): true prompt lengths when ``tokens``
+    is right-padded — logits are read at position ``lengths-1`` instead
+    of the last column.  Causal masking makes hidden states at positions
+    ``< lengths`` independent of the padding, so a padded prefill reads
+    the same logits an exact-length prefill would (the serving engine's
+    fixed-shape admission path relies on this).
+    """
     Bsz, S = tokens.shape
     out = forward(cfg, params, tokens, lay=lay, mode="prefill",
                   prefix_embed=prefix_embed, enc_frames=enc_frames,
                   cache_len=S, scan=scan, block_q=block_q, block_k=block_k)
-    logits = logits_from_hidden(cfg, params, out["hidden"][:, -1:], lay=lay)
-    return logits, out["cache"]
+    hidden = out["hidden"]
+    if lengths is None:
+        last = hidden[:, -1:]
+    else:
+        idx = jnp.maximum(jnp.asarray(lengths, jnp.int32).reshape(-1) - 1
+                          + out["prefix_len"], 0)[:, None, None]
+        last = jnp.take_along_axis(
+            hidden, jnp.broadcast_to(idx, (Bsz, 1, hidden.shape[-1])), axis=1)
+    logits = logits_from_hidden(cfg, params, last, lay=lay)
+    cache = out["cache"]
+    if max_len is not None and max_len > S:
+        enc_len = enc_frames.shape[1] if enc_frames is not None else None
+        cache = grow_cache(cfg, cache, max_len, enc_len=enc_len)
+    return logits, cache
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, cache_len, *, lay=None,

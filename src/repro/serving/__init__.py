@@ -1,0 +1,28 @@
+"""Serving subsystem: continuous batching, paged KV cache, hot-swap.
+
+The inference-side consumer of the training repo's flat-bus machinery
+(ISSUE 10).  Three pillars:
+
+* :mod:`repro.serving.paged` — fixed-size KV pages as flatbuf bucket
+  rows, per-sequence page tables, null-page zero convention.
+* :mod:`repro.serving.engine` — :class:`DecodeEngine`: admission queue,
+  slot allocation, interleaved prefill/decode, retirement, greedy
+  sampling, live weight install.
+* :mod:`repro.serving.publish` — trainer-side versioned weight
+  publishing + server-side subscription (manifest.json protocol).
+
+Build an engine from a config via :func:`repro.launch.steps.build_engine`.
+"""
+from repro.serving.engine import DecodeEngine, Request, Result
+from repro.serving.paged import (PageLayout, build_page_layout, gather,
+                                 init_pool, paged_decode_step,
+                                 scatter_prefill, scatter_token)
+from repro.serving.publish import (WeightPublisher, WeightSubscriber,
+                                   consensus_buckets)
+
+__all__ = [
+    "DecodeEngine", "Request", "Result",
+    "PageLayout", "build_page_layout", "init_pool", "gather",
+    "scatter_token", "scatter_prefill", "paged_decode_step",
+    "WeightPublisher", "WeightSubscriber", "consensus_buckets",
+]

@@ -1,0 +1,394 @@
+"""Continuous-batching decode engine over the paged KV cache.
+
+The static serving path (``examples/serve_lm.py``) decodes one wave: B
+prompts enter together, every slot runs until the LAST sequence
+finishes, and a short request burns a slot doing nothing for the whole
+wave.  :class:`DecodeEngine` instead treats the decode batch as a pool
+of **slots** fed from an admission queue: sequences retire the step
+they hit EOS / their token budget, the freed slot (and its KV pages)
+goes back to the allocator, and the next queued request is prefilled in
+between decode steps — the decode program never recompiles because its
+shapes are fixed (idle slots ride along with ``len == 0``, their
+logits ignored and their page writes dropped).
+
+Three jitted programs cover the whole serving loop:
+
+* ``_prefill``: one padded (max_batch, prefill_len) forward covering a
+  whole admission round -> first-token logits (read at each row's true
+  length, see ``lm.prefill(lengths=...)``) + bulk page writes
+  (:func:`repro.serving.paged.scatter_prefill`; length-0 rows — idle
+  slots and residents mid-decode — write nothing).
+* ``_decode``: one continuous step for ALL slots —
+  :func:`repro.serving.paged.paged_decode_step` (gather -> decode ->
+  scatter) + on-device greedy sampling and length increments, so the
+  loop state (tokens, lens, tables) stays device-resident between
+  steps and only the (B,) sampled-token vector crosses to the host.
+* ``_mean``: bucket-level mean of a worker-stacked published snapshot
+  (weight install path; see :mod:`repro.serving.publish`).
+
+**Live weight hot-swap**: :meth:`install_weights` replaces the resident
+params between decode steps from a published :class:`BucketState`
+(bucket buffers -> one ``unpack()``, no per-leaf pytree round-trip) and
+re-prefills every resident sequence's history under the new weights, so
+the continuation is exactly what a fresh engine restarted on the new
+version with the emitted history as prompt would produce (pinned by
+tests/test_serving.py).  Swaps are traced as ``swap`` spans and fed to
+``repro_serve_swap_seconds`` / ``repro_serve_weight_version``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving import paged
+from repro.telemetry.metrics import observe_serve_step, observe_swap
+from repro.telemetry.trace import NULL
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request for the admission queue."""
+    uid: int
+    prompt: tuple            # token ids
+    max_new: int = 16
+    eos_id: int | None = None
+
+
+@dataclass
+class Result:
+    """A retired request: emitted tokens + why it stopped."""
+    uid: int
+    tokens: list = field(default_factory=list)
+    finish_reason: str = "length"        # "eos" | "length"
+    weight_versions: tuple = ()          # versions that produced tokens
+
+
+class DecodeEngine:
+    """Continuous-batching engine: queue -> slots -> paged decode.
+
+    ``max_batch`` decode slots over a shared page pool sized for full
+    occupancy by default.  All sequencing state (histories, lengths,
+    page tables, the free-page list) is host-side numpy; device state is
+    the page pools and the resident params.  Sampling is greedy.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int, max_len: int,
+                 page_size: int = 8, num_pages: int | None = None,
+                 prefill_len: int | None = None, eos_id: int | None = None,
+                 scan: bool = True, cache_dtype=jnp.float32, tracer=None,
+                 metrics=None, jit: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        # prompts pad to ONE fixed prefill shape (single compile); keep
+        # it near the real prompt lengths — padding past them is wasted
+        # forward compute, not just wasted memory
+        self.prefill_len = int(prefill_len) if prefill_len else self.max_len
+        if not 0 < self.prefill_len <= self.max_len:
+            raise ValueError(f"prefill_len {self.prefill_len} outside "
+                             f"(0, max_len={self.max_len}]")
+        self.eos_id = eos_id
+        self.tracer = tracer if tracer is not None else NULL
+        self.metrics = metrics
+
+        pl = paged.build_page_layout(cfg, page_size=page_size,
+                                     max_len=max_len, num_pages=0,
+                                     dtype=cache_dtype)
+        if num_pages is None:      # full occupancy + the null page
+            num_pages = 1 + self.max_batch * pl.pages_per_seq
+        self.pl = pl = paged.PageLayout(
+            token_layout=pl.token_layout, leaf_axes=pl.leaf_axes,
+            page_size=pl.page_size, num_pages=int(num_pages),
+            pages_per_seq=pl.pages_per_seq)
+        self.pools = paged.init_pool(pl)
+        self.free_pages = list(range(pl.num_pages - 1, 0, -1))  # pop() -> low ids first
+
+        B = self.max_batch
+        self.tables = np.zeros((B, pl.pages_per_seq), np.int32)  # NULL_PAGE
+        self.lens = np.zeros(B, np.int32)        # tokens held incl. pending
+        self.hist = [None] * B                   # list[int] per live slot
+        self.prompt_len = np.zeros(B, np.int32)
+        self.gen = np.zeros(B, np.int32)         # tokens emitted
+        self.slot_req = [None] * B               # Request per live slot
+        self.slot_versions = [()] * B
+
+        self.queue: deque[Request] = deque()
+        self.completed: list[Result] = []
+        self.weight_version = -1
+        self._uid = 0
+        self.steps = 0
+        self.tokens_out = 0
+        # device mirrors of the decode loop state: refreshed from the
+        # host arrays only when slot membership changes (admit / retire
+        # / swap), so a steady-state decode step uploads NOTHING — the
+        # sampled tokens feed back on device and lens increments
+        # in-program.  The per-step device->host traffic is the (B,)
+        # sampled-token vector the server needs anyway.
+        self._dirty = True
+        self._tok_dev = None
+        self._lens_dev = None
+        self._tab_dev = None
+
+        def prefill_fn(params, tokens, lengths, tables, pools):
+            logits, cache = lm.prefill(cfg, params, tokens,
+                                       lengths=lengths, scan=scan)
+            pools = paged.scatter_prefill(pl, pools, cache, tables, lengths)
+            return logits, pools
+
+        def decode_fn(params, tokens, pools, tables, lens):
+            logits, pools = paged.paged_decode_step(cfg, params, tokens,
+                                                    pools, tables, lens, pl,
+                                                    scan=scan)
+            tok = logits[:, -1].argmax(-1).astype(jnp.int32)   # greedy
+            return tok, jnp.where(lens > 0, lens + 1, 0), pools
+
+        # the old pools are dead the moment a program returns the new
+        # ones, so donate them: page scatters update the pool buffers in
+        # place instead of copying the whole pool every step
+        self._prefill = (jax.jit(prefill_fn, donate_argnums=4) if jit
+                         else prefill_fn)
+        self._decode = (jax.jit(decode_fn, donate_argnums=2) if jit
+                        else decode_fn)
+        self._mean = jax.jit(lambda b: b.astype(jnp.float32).mean(0)
+                             .astype(b.dtype)) if jit else \
+            (lambda b: b.astype(jnp.float32).mean(0).astype(b.dtype))
+
+    # ------------------------------------------------------------------
+    # Queue
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, *, max_new: int = 16,
+               eos_id: int | None = None) -> int:
+        """Enqueue a prompt; returns the request uid."""
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(f"prompt({len(prompt)}) + max_new({max_new}) "
+                             f"exceeds max_len({self.max_len})")
+        uid = self._uid
+        self._uid += 1
+        self.queue.append(Request(uid=uid, prompt=prompt, max_new=max_new,
+                                  eos_id=eos_id if eos_id is not None
+                                  else self.eos_id))
+        return uid
+
+    @property
+    def num_active(self) -> int:
+        return int((self.lens > 0).sum())
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.num_active == 0
+
+    # ------------------------------------------------------------------
+    # Admission + prefill
+    # ------------------------------------------------------------------
+
+    def _admit(self):
+        """Move queued requests into free slots while pages last; the
+        whole admission round runs ONE batched prefill program (rows
+        that are idle or mid-decode ride along with length 0 and write
+        nothing) and each admitted slot emits its first token."""
+        free_slots = [b for b in range(self.max_batch) if self.lens[b] == 0]
+        if not self.queue or not free_slots:
+            return 0
+        admits = []
+        with self.tracer.span("admit") as sp:
+            while (self.queue and free_slots
+                   and len(self.free_pages) >= self.pl.pages_per_seq):
+                req = self.queue.popleft()
+                slot = free_slots.pop(0)
+                row = np.array([self.free_pages.pop()
+                                for _ in range(self.pl.pages_per_seq)],
+                               np.int32)
+                self.tables[slot] = row
+                self.slot_req[slot] = req
+                admits.append((slot, list(req.prompt)))
+            sp.set(admitted=len(admits), queued=len(self.queue))
+        if admits:
+            self._prefill_batch(admits)
+        return len(admits)
+
+    def _prefill_batch(self, work, *, emit: bool = True):
+        """Prefill ``work`` — a list of (slot, history) — in one padded
+        batch; when ``emit``, sample each slot's first token, else just
+        rebuild the KV (hot-swap re-prefill, lens untouched)."""
+        self._dirty = True          # new tokens / tables for these slots
+        Ls = [len(h) for _, h in work]
+        # two padded shapes at most: the admission shape (prefill_len)
+        # and the swap re-prefill shape (max_len, histories mid-flight)
+        S = self.prefill_len if max(Ls) <= self.prefill_len else self.max_len
+        toks = np.zeros((self.max_batch, S), np.int32)
+        lens = np.zeros(self.max_batch, np.int32)
+        for slot, h in work:
+            toks[slot, :len(h)] = h
+            lens[slot] = len(h)
+        with self.tracer.span("prefill") as sp:
+            logits, self.pools = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(self.tables), self.pools)
+            sp.set(slots=len(work), length=int(max(Ls)))
+            if emit:
+                sp.fence(logits)
+        if not emit:
+            return
+        lg = np.asarray(logits)
+        for slot, history in work:
+            tok = int(lg[slot, -1].argmax())
+            self.hist[slot] = history + [tok]
+            self.prompt_len[slot] = len(history)
+            self.lens[slot] = len(history) + 1
+            self.gen[slot] = 1
+            self.slot_versions[slot] = (self.weight_version,)
+            self.tokens_out += 1
+            self._maybe_retire(slot, tok)
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """One engine iteration: admit new work, then one continuous
+        decode step over every resident sequence.  Returns the number
+        of tokens emitted this step."""
+        self._admit()
+        active = np.flatnonzero(self.lens > 0)
+        emitted = 0
+        if active.size:
+            if self._dirty:
+                toks = np.zeros((self.max_batch, 1), np.int32)
+                for b in active:
+                    toks[b, 0] = self.hist[b][-1]
+                self._tok_dev = jnp.asarray(toks)
+                self._lens_dev = jnp.asarray(self.lens)
+                self._tab_dev = jnp.asarray(self.tables)
+                self._dirty = False
+            t0 = time.perf_counter()
+            with self.tracer.span("decode") as sp:
+                tok_dev, self._lens_dev, self.pools = self._decode(
+                    self.params, self._tok_dev, self.pools,
+                    self._tab_dev, self._lens_dev)
+                self._tok_dev = tok_dev[:, None]
+                sp.set(active=int(active.size), step=self.steps)
+                sp.fence(tok_dev)
+            dt = time.perf_counter() - t0
+            tk = np.asarray(tok_dev)
+            for b in active:
+                tok = int(tk[b])
+                self.hist[b].append(tok)
+                self.lens[b] += 1
+                self.gen[b] += 1
+                emitted += 1
+                self._maybe_retire(b, tok)
+            self.tokens_out += emitted
+        else:
+            dt = None
+        self.steps += 1
+        if self.metrics is not None:
+            observe_serve_step(
+                self.metrics, new_tokens=emitted,
+                queue_depth=len(self.queue),
+                occupancy=active.size / self.max_batch, decode_s=dt)
+        return emitted
+
+    def run(self, *, max_steps: int = 10_000) -> list:
+        """Step until queue and slots drain; returns retired Results."""
+        n0 = len(self.completed)
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+        return self.completed[n0:]
+
+    def _maybe_retire(self, slot: int, tok: int):
+        req = self.slot_req[slot]
+        done_eos = req.eos_id is not None and tok == req.eos_id
+        done_len = (self.gen[slot] >= req.max_new
+                    or self.lens[slot] >= self.max_len)
+        if not (done_eos or done_len):
+            return
+        self.completed.append(Result(
+            uid=req.uid, tokens=self.hist[slot][self.prompt_len[slot]:],
+            finish_reason="eos" if done_eos else "length",
+            weight_versions=self.slot_versions[slot]))
+        self.free_pages.extend(int(p) for p in self.tables[slot])
+        self.tables[slot] = paged.NULL_PAGE
+        self.lens[slot] = 0
+        self.hist[slot] = None
+        self.slot_req[slot] = None
+        self.gen[slot] = 0
+        self._dirty = True          # slot membership changed
+
+    # ------------------------------------------------------------------
+    # Live weight hot-swap
+    # ------------------------------------------------------------------
+
+    def install_weights(self, weights, *, version: int | None = None):
+        """Install new weights between decode steps.
+
+        ``weights``: a param pytree, or a published
+        :class:`~repro.core.flatbuf.BucketState` (single-copy, or
+        worker-stacked ``leading=1`` — averaged bucket-by-bucket on
+        device, never through a per-leaf pytree view).  Every resident
+        sequence's history is re-prefilled under the new weights so its
+        continuation matches a restart on the new version.
+        """
+        from repro.core import flatbuf
+
+        t0 = time.perf_counter()
+        with self.tracer.span("swap") as sp:
+            if flatbuf.is_bucket_state(weights):
+                if weights.leading == 1:          # worker-stacked publish
+                    weights = weights.with_buckets(
+                        [self._mean(b) for b in weights.buckets], leading=0)
+                self.params = weights.unpack()
+            else:
+                self.params = weights
+            self.weight_version = (version if version is not None
+                                   else self.weight_version + 1)
+            residents = [b for b in range(self.max_batch) if self.lens[b] > 0]
+            if residents:
+                self._prefill_batch([(b, self.hist[b][:-1])
+                                     for b in residents], emit=False)
+            for b in residents:
+                self.slot_versions[b] = (self.slot_versions[b]
+                                         + (self.weight_version,))
+            jax.block_until_ready(self.pools)
+            sp.set(version=self.weight_version, residents=len(residents))
+        if self.metrics is not None:
+            observe_swap(self.metrics, version=self.weight_version,
+                         swap_s=time.perf_counter() - t0)
+
+    def poll_weights(self, subscriber) -> int | None:
+        """Install the latest published version if it is newer than the
+        resident one (see :class:`repro.serving.publish.WeightSubscriber`).
+        Returns the installed version or None."""
+        got = subscriber.poll(newer_than=self.weight_version)
+        if got is None:
+            return None
+        version, state = got
+        self.install_weights(state, version=version)
+        return version
+
+    # ------------------------------------------------------------------
+
+    def describe(self) -> dict:
+        pl = self.pl
+        return {
+            "arch": self.cfg.name, "max_batch": self.max_batch,
+            "max_len": self.max_len, "page_size": pl.page_size,
+            "num_pages": pl.num_pages, "pages_per_seq": pl.pages_per_seq,
+            "free_pages": len(self.free_pages),
+            "pool_bytes": pl.pool_bytes(),
+            "active": self.num_active, "queued": len(self.queue),
+            "steps": self.steps, "tokens_out": self.tokens_out,
+            "weight_version": self.weight_version,
+        }

@@ -1,0 +1,252 @@
+"""Paged KV cache on the flat-bus bucket convention (ISSUE 10).
+
+The training side packs the parameter pytree into (rows, 128) buckets so
+hot paths dispatch O(#buckets) instead of O(#leaves) (core/flatbuf).
+Serving has the same shape of problem one level down: a contiguous
+per-sequence KV cache allocates ``max_len`` for every slot up front and
+welds a sequence to its slot.  This module cuts the cache into
+fixed-size **pages** that live in one shared pool per dtype bucket, with
+per-sequence **page tables** mapping logical token positions to pool
+pages — vLLM's PagedAttention layout, expressed in flatbuf terms:
+
+* One decoding token's KV across ALL layers is flattened by the exact
+  :func:`repro.core.flatbuf.build_layout` machinery into
+  ``rows_per_token`` rows of 128 lanes (per-leaf :class:`LeafSlot`
+  metadata records where each layer's k/v lands, padding rounds every
+  leaf to a sublane boundary, padding-is-zero invariant included).
+* A **page** is ``page_size`` consecutive token positions of one
+  sequence: a ``(page_size, rows_per_token_b, 128)`` slab of bucket
+  ``b``'s pool.  The pool is ``(num_pages, page_size, rows, 128)`` —
+  bucket buffers with two leading dims, same convention worker-stacked
+  resident state uses.
+* A **page table** is a ``(pages_per_seq,)`` int32 row of pool page
+  ids; page 0 is the reserved **null page** and is kept all-zero (the
+  pool-level mirror of the bucket padding invariant), so gathering an
+  unallocated table entry yields exact zeros.
+
+``gather`` materializes a standard contiguous cache view from the pool
+(one fancy-index per bucket + the flatbuf unflatten), so the model's
+``decode_step`` runs UNMODIFIED on paged storage and the paged path is
+numerically identical to the contiguous one — attention already reads
+every cached token per step, so the extra pool read is a constant
+factor, not a complexity change (an in-kernel page gather is the TPU
+follow-on).  ``scatter_token`` writes only the newly decoded token's
+rows back (one scatter per bucket); ``scatter_prefill`` bulk-writes an
+admitted prompt's KV.  All three are pure jnp functions the engine jits
+into its step programs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatbuf
+from repro.core.flatbuf import LANE, FlatLayout
+
+NULL_PAGE = 0       # reserved all-zero page: unallocated table entries
+
+
+def _is_axes(x):
+    return (isinstance(x, tuple) and len(x) > 0
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+@dataclass(frozen=True)
+class PageLayout:
+    """Static description of one model's paged KV cache.
+
+    ``token_layout`` is a :class:`~repro.core.flatbuf.FlatLayout` over
+    the per-token cache slices (each cache leaf with its batch and
+    kv_seq axes removed) — its :class:`LeafSlot` rows say where every
+    layer's k/v for ONE token position sits inside the page, exactly as
+    parameter slots say where a leaf sits inside its bucket.
+    ``leaf_axes`` keeps each cache leaf's logical axes (flatten order)
+    so gather/scatter can transpose between the model's cache layout
+    and the (batch, position)-leading page view.
+    """
+    token_layout: FlatLayout
+    leaf_axes: tuple
+    page_size: int              # token positions per page
+    num_pages: int              # pool pages per bucket (incl. null page 0)
+    pages_per_seq: int          # table length: ceil(max_len / page_size)
+
+    @property
+    def max_tokens(self) -> int:
+        """Gathered contiguous view length (>= the engine's max_len)."""
+        return self.page_size * self.pages_per_seq
+
+    @property
+    def rows_per_token(self) -> tuple[int, ...]:
+        return self.token_layout.bucket_rows
+
+    def pool_bytes(self) -> int:
+        return sum(self.num_pages * self.page_size * r * LANE
+                   * np.dtype(d).itemsize
+                   for r, d in zip(self.token_layout.bucket_rows,
+                                   self.token_layout.bucket_dtypes))
+
+
+def build_page_layout(cfg, *, page_size: int, max_len: int,
+                      num_pages: int, dtype=jnp.float32,
+                      enc_len: int | None = None) -> PageLayout:
+    """Derive the page layout from the model's cache structure.
+
+    Every cache leaf must carry both a ``batch`` and a ``kv_seq``
+    logical axis (attention-family caches); recurrent mixers (mamba2 /
+    xLSTM) keep fixed-size state with no position axis and raise —
+    their serving path is the contiguous cache.
+    """
+    from repro.models import lm
+
+    axes_tree = lm.cache_axes_tree(cfg, enc_len=enc_len)
+    flat_axes = jax.tree.flatten(axes_tree, is_leaf=_is_axes)[0]
+    shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, 1, 1, dtype=dtype, enc_len=enc_len))
+    flat_sds, treedef = jax.tree.flatten(shapes)
+    assert len(flat_axes) == len(flat_sds)
+
+    per_token = []
+    for ax, sd in zip(flat_axes, flat_sds):
+        if "batch" not in ax or "kv_seq" not in ax:
+            raise ValueError(
+                f"paged KV cache needs (batch, kv_seq) axes on every cache "
+                f"leaf; got {ax} for shape {sd.shape} — recurrent caches "
+                f"(mamba2/xLSTM) serve from the contiguous path")
+        keep = [i for i, a in enumerate(ax) if a not in ("batch", "kv_seq")]
+        per_token.append(jax.ShapeDtypeStruct(
+            tuple(sd.shape[i] for i in keep), dtype))
+    token_layout = flatbuf.build_layout(
+        jax.tree.unflatten(treedef, per_token))
+    pages_per_seq = -(-int(max_len) // int(page_size))
+    return PageLayout(token_layout=token_layout, leaf_axes=tuple(flat_axes),
+                      page_size=int(page_size), num_pages=int(num_pages),
+                      pages_per_seq=pages_per_seq)
+
+
+def init_pool(pl: PageLayout) -> list:
+    """Zero page pools, one per dtype bucket (page 0 is the null page
+    and must STAY zero — scatters drop instead of writing to it)."""
+    return [jnp.zeros(s.shape, s.dtype) for s in flatbuf.abstract_buckets(
+        pl.token_layout, lead=(pl.num_pages, pl.page_size))]
+
+
+# ---------------------------------------------------------------------------
+# Model-layout <-> (batch, position)-leading transposes
+# ---------------------------------------------------------------------------
+
+def _to_bs(leaf, ax):
+    """Model cache leaf -> (B, S, *per_token dims in original order)."""
+    return jnp.moveaxis(leaf, (ax.index("batch"), ax.index("kv_seq")), (0, 1))
+
+
+def _from_bs(leaf, ax):
+    """Inverse of :func:`_to_bs`."""
+    return jnp.moveaxis(leaf, (0, 1), (ax.index("batch"), ax.index("kv_seq")))
+
+
+# ---------------------------------------------------------------------------
+# Gather / scatter
+# ---------------------------------------------------------------------------
+
+def gather(pl: PageLayout, pools, tables):
+    """Materialize the contiguous cache view of each sequence's pages.
+
+    ``tables``: (B, pages_per_seq) int32 page ids.  Returns the model's
+    cache pytree with kv_seq length ``pl.max_tokens``; unallocated
+    entries read the null page (exact zeros) and positions past a
+    sequence's ``cache_len`` are masked by decode attention, so page
+    reuse never leaks a previous owner's KV into the logits.
+    """
+    B, P = tables.shape
+    views = []
+    for pool in pools:
+        g = pool[tables]                       # (B, P, page, rows, LANE)
+        views.append(g.reshape(B, P * pl.page_size, -1, LANE))
+    leaves = jax.tree.leaves(
+        flatbuf.unflatten(pl.token_layout, views, leading=2))
+    out = [_from_bs(leaf, ax) for leaf, ax in zip(leaves, pl.leaf_axes)]
+    return jax.tree.unflatten(pl.token_layout.treedef, out)
+
+
+def scatter_token(pl: PageLayout, pools, cache, positions, tables,
+                  active=None):
+    """Write each sequence's token at ``positions`` from a contiguous
+    cache view back into its page.
+
+    ``positions``: (B,) int32 token positions (the decode write slots,
+    ``cache_len - 1``); ``active``: optional (B,) bool — inactive rows
+    drop their write (out-of-range page id + scatter mode='drop'), so
+    idle engine slots can never pollute the null page.
+    """
+    leaves = jax.tree.leaves(cache)
+    tok = []
+    for leaf, ax in zip(leaves, pl.leaf_axes):
+        bs = _to_bs(leaf, ax)                  # (B, S, *per_tok)
+        idx = positions.reshape((-1,) + (1,) * (bs.ndim - 1))
+        tok.append(jnp.take_along_axis(bs, idx, axis=1)[:, 0])
+    bufs = flatbuf.flatten(pl.token_layout,
+                           jax.tree.unflatten(pl.token_layout.treedef, tok),
+                           leading=1)          # [(B, rows_b, LANE)]
+    page = jnp.take_along_axis(
+        tables, (positions // pl.page_size)[:, None], axis=1)[:, 0]
+    if active is not None:
+        page = jnp.where(active, page, pl.num_pages)       # OOB => drop
+    off = positions % pl.page_size
+    return [pool.at[page, off].set(buf.astype(pool.dtype), mode="drop")
+            for pool, buf in zip(pools, bufs)]
+
+
+def scatter_prefill(pl: PageLayout, pools, cache, tables, lengths):
+    """Bulk-write admitted sequences' prefilled KV into their pages.
+
+    ``cache``: the model cache from a batch-B prefill (kv_seq length
+    S <= pl.max_tokens, each row right-padded past its length);
+    ``tables``: (B, pages_per_seq) int32 (a single (pages_per_seq,) row
+    is promoted to B=1); ``lengths``: (B,) int32 — row b's positions
+    ``>= lengths[b]`` drop instead of writing, so a length-0 row writes
+    NOTHING.  That makes one fixed-shape program cover every admission
+    round: rows that are idle or mid-decode ride along with length 0
+    and their pages stay untouched.
+    """
+    tables = jnp.asarray(tables)
+    if tables.ndim == 1:
+        tables = tables[None]
+    B = tables.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)
+    leaves = jax.tree.leaves(cache)
+    bs_leaves = [_to_bs(leaf, ax)[:B]
+                 for leaf, ax in zip(leaves, pl.leaf_axes)]
+    S = bs_leaves[0].shape[1]
+    bufs = flatbuf.flatten(pl.token_layout,
+                           jax.tree.unflatten(pl.token_layout.treedef,
+                                              bs_leaves),
+                           leading=2)          # [(B, S, rows_b, LANE)]
+    t = jnp.arange(S)
+    page = jnp.where(t[None, :] < lengths[:, None],
+                     tables[:, t // pl.page_size], pl.num_pages)   # (B, S)
+    off = jnp.broadcast_to(t % pl.page_size, page.shape)
+    return [pool.at[page, off].set(buf.astype(pool.dtype), mode="drop")
+            for pool, buf in zip(pools, bufs)]
+
+
+def paged_decode_step(cfg, params, tokens, pools, tables, cache_lens,
+                      pl: PageLayout, *, scan: bool = True):
+    """Page-table-aware decode step: gather -> decode_step -> write-back.
+
+    ``cache_lens``: (B,) int32 INCLUDING the new token (0 marks an idle
+    slot: its logits are garbage and its write drops).  Returns
+    ``(logits, new_pools)``; the gathered contiguous view is transient
+    inside the jitted program.
+    """
+    from repro.models import lm
+
+    cache = gather(pl, pools, tables)
+    logits, new_cache = lm.decode_step(cfg, params, tokens, cache,
+                                       cache_lens, scan=scan)
+    positions = jnp.maximum(cache_lens - 1, 0)
+    new_pools = scatter_token(pl, pools, new_cache, positions, tables,
+                              active=cache_lens > 0)
+    return logits, new_pools

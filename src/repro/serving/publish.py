@@ -1,0 +1,98 @@
+"""Trainer -> server weight channel: versioned bucket snapshots.
+
+The trainer side of live hot-swap.  At a sync boundary the resident
+training state already holds the consensus parameters as worker-stacked
+``(W, rows, 128)`` bucket buffers (:class:`repro.core.flatbuf.BucketState`
+with ``leading=1``); :class:`WeightPublisher` reduces them to one copy
+*bucket-by-bucket* (a mean over the worker axis — after a global sync
+all workers agree, so this is the identity on the consensus and the
+safe average mid-block) and snapshots them through
+:func:`repro.checkpoint.checkpoint.publish_flat`: ``weights_v{n}.npz``
+plus an atomically advanced ``manifest.json``.  No per-leaf pytree view
+is materialized anywhere on the publish path.
+
+:class:`WeightSubscriber` is the server side: it polls the manifest and
+restores a fresh version into a :class:`BucketState` template built
+from :func:`repro.core.flatbuf.abstract_buckets` — again buckets in,
+buckets out; the engine's ``install_weights`` does the single
+``unpack()`` that turns them into live params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint
+from repro.core import flatbuf
+
+
+def consensus_buckets(state: flatbuf.BucketState) -> flatbuf.BucketState:
+    """Reduce a worker-stacked (``leading=1``) resident state to one
+    copy, bucket-by-bucket on device.  Identity on single-copy states."""
+    if state.leading == 0:
+        return state
+    if state.leading != 1:
+        raise ValueError(f"expected worker-stacked leading=1 state, "
+                         f"got leading={state.leading}")
+    mean = lambda b: b.astype(jnp.float32).mean(0).astype(b.dtype)
+    return state.with_buckets([mean(b) for b in state.buckets], leading=0)
+
+
+class WeightPublisher:
+    """Versioned weight publishing for the serving hot-swap channel."""
+
+    def __init__(self, dir: str):
+        self.dir = dir
+        self.last_version: int | None = None
+
+    def publish(self, weights, *, step: int | None = None) -> int:
+        """Publish ``weights`` (a params pytree, or a resident
+        :class:`BucketState` — worker-stacked or single-copy) as the
+        next version; returns the version number."""
+        if flatbuf.is_bucket_state(weights):
+            weights = consensus_buckets(weights)
+        else:       # enter bucket form so every snapshot has one layout
+            weights = flatbuf.BucketState.pack(weights)
+        version, _ = checkpoint.publish_flat(self.dir, weights, step=step)
+        self.last_version = version
+        return version
+
+
+class WeightSubscriber:
+    """Server-side poller: manifest -> resident BucketState buffers.
+
+    ``template`` fixes the expected bucket layout: a params pytree, a
+    ``ParamSpec`` tree (``lm.param_specs``, abstracted at f32), or an
+    explicit :class:`FlatLayout`.
+    ``poll`` restores straight into SDS bucket templates
+    (:func:`flatbuf.abstract_buckets`), so a fresh version arrives as
+    bucket buffers, not as a materialized pytree.
+    """
+
+    def __init__(self, dir: str, template):
+        self.dir = dir
+        if isinstance(template, flatbuf.FlatLayout):
+            layout = template
+        else:
+            from repro.models import base as mbase
+            if any(mbase.is_spec(l) for l in
+                   jax.tree.flatten(template, is_leaf=mbase.is_spec)[0]):
+                template = mbase.abstract(template, jnp.float32)
+            layout = flatbuf.build_layout(template)
+        self._template = flatbuf.BucketState(
+            layout=layout,
+            buckets=tuple(flatbuf.abstract_buckets(layout)), leading=0)
+
+    def latest_version(self) -> int | None:
+        got = checkpoint.latest_flat(self.dir)
+        return None if got is None else got[0]
+
+    def poll(self, *, newer_than: int = -1):
+        """Return ``(version, BucketState)`` for the latest published
+        version if it is ``> newer_than``, else None."""
+        got = checkpoint.latest_flat(self.dir)
+        if got is None or got[0] <= newer_than:
+            return None
+        version, path = got
+        state = checkpoint.restore_flat(path, self._template)
+        return version, state

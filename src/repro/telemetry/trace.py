@@ -1,0 +1,258 @@
+"""Span-based host tracing: the seconds-denominated sensor layer.
+
+The paper's headline claim is about *time-to-accuracy* — local SGD wins
+because it trades wall-clock communication for local computation — but
+until this module the repo could price a round only in analytic/HLO
+*bytes* (``telemetry.ledger``), never in measured *seconds*.  A
+:class:`Tracer` records host-side :class:`Span` s around the round loop
+(``launch/train.fit``), the sync pipeline (``core/syncplan`` stages) and
+the controller decisions, so every quantity the ledger prices in bytes
+also gets a wall-clock figure, exported to Perfetto / Prometheus by
+:mod:`repro.telemetry.export`.
+
+Span taxonomy (the names ``fit`` and the executors emit — exporters and
+the trend tooling key off these):
+
+=============  ============================================================
+``round``      one global sync round: H local steps + the global sync
+``local_steps``one ``bundle.local_step`` call (H fused local steps)
+``sync``       one ``bundle.sync`` call (scope attr: ``block``/``global``)
+``pack``       a sync pack stage (reserved for per-stage executors)
+``collective`` one collective stage of the SyncPlan schedule — carries
+               the SAME ``stage`` id ``CommsLedger.record_plan`` prices,
+               so each stage gets bytes *and* seconds
+``apply``      a sync apply stage (reserved for per-stage executors)
+``controller`` one ``update`` + ``plan_delta`` decision, attrs = the
+               emitted PlanDelta + the policy's ``decisions`` provenance
+``eval``       one ``eval_fn`` call
+``checkpoint`` one ``checkpoint_fn`` call
+``admit``      serving: one admission wave (queue -> engine slots)
+``prefill``    serving: one prompt prefill + page write
+``decode``     serving: one continuous-batching decode step
+``swap``       serving: one live weight install (hot-swap), attrs carry
+               the installed manifest version
+=============  ============================================================
+
+Measurement semantics
+---------------------
+
+JAX dispatch is asynchronous: without fencing, a span around a jitted
+call measures *dispatch* time, with the device work of span *i* possibly
+draining inside span *i+1*.  ``Tracer(fence=True)`` turns
+``Span.fence(value)`` into ``jax.block_until_ready`` at the span
+boundary, so durations become true wall-clock at the cost of breaking
+dispatch pipelining (a perturbation — defaults OFF, see README).  The
+trajectory itself is never affected either way: tracing is host-side
+observation only, and ``fit`` without a tracer runs the exact pre-trace
+code path (pinned bitwise by tests/test_trace.py).
+
+``Tracer(annotate=True)`` additionally enters a
+``jax.profiler.TraceAnnotation`` for the span's lifetime, so host spans
+line up with device traces when a ``jax.profiler.trace`` capture is
+running.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+SPAN_NAMES = ("round", "local_steps", "sync", "pack", "collective", "apply",
+              "controller", "eval", "checkpoint",
+              "admit", "prefill", "decode", "swap")
+
+# span name -> Perfetto category (groups the trace viewer's tracks)
+SPAN_CATEGORIES = {
+    "round": "train", "local_steps": "train",
+    "sync": "sync", "pack": "sync", "collective": "sync", "apply": "sync",
+    "controller": "control", "eval": "eval", "checkpoint": "checkpoint",
+    "admit": "serve", "prefill": "serve", "decode": "serve", "swap": "serve",
+}
+
+
+@dataclass
+class Span:
+    """One traced interval.  ``ts_s`` is seconds since the tracer's
+    origin (``time.perf_counter`` based); ``dur_s`` is set on finish
+    (None while open / on a disabled tracer)."""
+    name: str
+    ts_s: float = 0.0
+    dur_s: float | None = None
+    attrs: dict = field(default_factory=dict)
+    tid: int = 0
+    _tracer: Any = None
+    _annotation: Any = None
+
+    @property
+    def cat(self) -> str:
+        return SPAN_CATEGORIES.get(self.name, "misc")
+
+    def set(self, **attrs) -> "Span":
+        """Attach attributes (exported as Perfetto ``args``)."""
+        if self._tracer is not None:
+            self.attrs.update(attrs)
+        return self
+
+    def fence(self, value):
+        """Opt-in async fence: with ``Tracer(fence=True)``, block until
+        ``value``'s device computation is done so the span measures real
+        wall-clock, not dispatch.  Always returns ``value`` unchanged —
+        safe to wrap any jitted result inline."""
+        if self._tracer is not None and self._tracer.fence:
+            import jax
+            jax.block_until_ready(value)
+        return value
+
+    # context-manager form: ``with tracer.span("sync") as sp: ...``
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, *exc):
+        if self._tracer is not None:
+            self._tracer.finish(self)
+        return False
+
+
+_NULL_SPAN = Span(name="null")          # shared, attr-dropping no-op
+
+
+class Tracer:
+    """Collects :class:`Span` s; thread-safe appends, perf_counter base.
+
+    ``fence``    — make ``Span.fence`` block_until_ready (defaults OFF:
+                   fencing perturbs dispatch pipelining).
+    ``annotate`` — wrap spans in ``jax.profiler.TraceAnnotation`` so a
+                   concurrent device-profiler capture shows them.
+    ``metrics``  — optional :class:`~repro.telemetry.metrics.MetricsRegistry`
+                   consumers feed alongside the spans (``fit`` does).
+    """
+
+    def __init__(self, *, fence: bool = False, annotate: bool = False,
+                 metrics=None):
+        self.fence = bool(fence)
+        self.annotate = bool(annotate)
+        self.metrics = metrics
+        self.spans: list[Span] = []
+        self._origin = time.perf_counter()
+        self._lock = threading.Lock()
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    def now(self) -> float:
+        return time.perf_counter() - self._origin
+
+    def start(self, name: str, **attrs) -> Span:
+        sp = Span(name=name, ts_s=self.now(), attrs=dict(attrs),
+                  tid=threading.get_ident(), _tracer=self)
+        if self.annotate:
+            try:
+                import jax
+                sp._annotation = jax.profiler.TraceAnnotation(name)
+                sp._annotation.__enter__()
+            except Exception:        # profiler backend unavailable: host-only
+                sp._annotation = None
+        return sp
+
+    def finish(self, span: Span, **attrs) -> Span:
+        if span._tracer is None:                 # null span / double finish
+            return span
+        if attrs:
+            span.attrs.update(attrs)
+        if span._annotation is not None:
+            span._annotation.__exit__(None, None, None)
+            span._annotation = None
+        span.dur_s = self.now() - span.ts_s
+        span._tracer = None
+        with self._lock:
+            self.spans.append(span)
+        return span
+
+    def span(self, name: str, **attrs) -> Span:
+        """Context-manager span: finished (and recorded) on exit."""
+        return self.start(name, **attrs)
+
+    def record(self, name: str, ts_s: float, dur_s: float, **attrs) -> Span:
+        """Append an already-measured interval (the per-stage attribution
+        path: ``sync_stage_spans`` splits one measured sync over its
+        collective stages)."""
+        sp = Span(name=name, ts_s=ts_s, dur_s=float(dur_s),
+                  attrs=dict(attrs), tid=threading.get_ident())
+        with self._lock:
+            self.spans.append(sp)
+        return sp
+
+
+class NullTracer(Tracer):
+    """The disabled tracer ``fit`` uses when none is passed: every hook
+    is a cheap no-op and nothing is recorded, so the untraced code path
+    stays byte-for-byte the pre-trace behavior."""
+
+    def __init__(self):                  # no clock, no lock, no list
+        self.fence = False
+        self.annotate = False
+        self.metrics = None
+        self.spans = []
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    def now(self) -> float:
+        return 0.0
+
+    def start(self, name: str, **attrs) -> Span:
+        return _NULL_SPAN
+
+    def finish(self, span: Span, **attrs) -> Span:
+        return span
+
+    def span(self, name: str, **attrs) -> Span:
+        return _NULL_SPAN
+
+    def record(self, name: str, ts_s: float, dur_s: float, **attrs) -> Span:
+        return _NULL_SPAN
+
+
+NULL = NullTracer()
+
+
+def sync_stage_spans(tracer: Tracer, plan, scope: str, parent: Span,
+                     *, seconds: float | None = None) -> list[tuple[int, float]]:
+    """Emit one ``collective`` child span per collective stage of
+    ``plan.schedule(scope)``, apportioning the measured sync duration
+    over the stages by their ring-model wire-byte estimates — the exact
+    mirror of how ``CommsLedger.record_plan`` scales stage byte
+    estimates to a measured HLO total.  Each span carries the SAME
+    ``stage`` id (index among the scope's collective stages) the ledger
+    rows carry, so a stage can be joined bytes<->seconds across the two
+    streams.  Spans are marked ``attributed=True``: the split is modeled
+    (the sync executes as one fused program), only the total is
+    measured.
+
+    Returns ``[(stage_id, seconds), ...]``; empty on a disabled tracer
+    or an unfinished parent.
+    """
+    total = parent.dur_s if seconds is None else seconds
+    if not tracer.enabled or total is None:
+        return []
+    stages = list(plan.collective_stages(scope))
+    if not stages:
+        return []
+    est = sum(s.wire_bytes for s in stages)
+    shares = ([s.wire_bytes / est for s in stages] if est > 0
+              else [1.0 / len(stages)] * len(stages))
+    out = []
+    t = parent.ts_s
+    for i, (s, w) in enumerate(zip(stages, shares)):
+        dur = total * w
+        tracer.record("collective", t, dur, stage=i, scope=scope,
+                      buckets=list(s.buckets), compression=s.compression,
+                      group=s.group, wire_bytes=s.wire_bytes,
+                      collectives=s.collectives, coalesced=s.coalesced,
+                      attributed=True)
+        out.append((i, dur))
+        t += dur
+    return out

@@ -348,6 +348,53 @@ def test_simulated_backend_skew_and_demotion(tmp_path):
         be.base_step_s + 0.05)
 
 
+def test_simulated_backend_promotion_back(tmp_path):
+    """ISSUE-10 satellite: demotion is no longer one-way.  The injected
+    latency demotes worker 2; clearing it mid-run makes the by-id
+    census (which still sees demoted workers) report recovery, and
+    after ``skew_patience`` clean rounds the policy promotes it back —
+    census restored, flat topology and per-round cadence restored."""
+    steps = 40
+    run = make_run(H=2, steps=steps,
+                   controller=ControllerConfig(kind="elastic"))
+    be = SimulatedBackend(4, latency_s={2: 0.05},
+                          build_fn=quad_builder())
+
+    def recover(state):            # eval hook: the straggler heals
+        be.latency_s.clear()
+        return {}
+
+    tracer = Tracer(metrics=MetricsRegistry())
+    jsonl = tmp_path / "t.jsonl"
+    state, _, summary = fit(run, ShardedBatches(quad_data(), 4, 8),
+                            backend=be, num_steps=steps, seed=0,
+                            telemetry_path=str(jsonl), tracer=tracer,
+                            eval_fn=recover, eval_every=10)
+    recs = [json.loads(l) for l in open(jsonl)]
+    demoted = [r for r in recs if "demote" in r]
+    promoted = [r for r in recs if "promote" in r]
+    assert len(demoted) == 1 and demoted[0]["demote"] == 2
+    assert len(promoted) == 1 and promoted[0]["promote"] == 2
+    # recovery observed only after the latency clears (eval at step 10),
+    # then skew_patience clean rounds before the promotion lands
+    assert promoted[0]["step"] > 10
+    assert be.worker_set.demoted == ()             # back in the census
+    assert be.worker_step_times(h=1) == [be.base_step_s] * 4
+    # the promotion undid the demotion-era schedule: flat topology,
+    # block cadence back to the configured per-round value
+    assert summary["topology"] == "flat"
+    post = [r for r in recs if r["round"] > promoted[0]["round"]]
+    assert post and all(r["topology"] == "flat" for r in post)
+    # by-id census rode the JSONL stream (the promotion sensor)
+    assert all("worker_step_s_by_id" in r for r in recs)
+    # decision provenance on the trace span
+    spans = [s for s in tracer.spans if s.name == "controller"
+             and s.attrs.get("promote") is not None]
+    assert len(spans) == 1
+    assert spans[0].attrs["decisions"]["recovered"] == {
+        "promote": 2, "restored": True}
+
+
 def test_demotion_not_scheduled_for_anchored_configs():
     """Compression/global-momentum configs cannot serve block-scope
     syncs (core/local_sgd asserts global scope); the elastic policy

@@ -1,0 +1,348 @@
+"""Serving subsystem tests (ISSUE 10 acceptance).
+
+* decode ≡ prefill: stepwise ``decode_step`` logits match the
+  full-sequence prefill logits position by position (gemma3 + qwen3
+  smoke configs) — the equivalence the engine's padded admission and
+  hot-swap re-prefill both lean on.
+* Paged KV cache: paged decode is numerically IDENTICAL to contiguous
+  decode across a page-size sweep (bitwise); the null page stays zero;
+  recurrent caches are rejected; the free-page allocator conserves
+  pages across admit/retire cycles.
+* Continuous batching: the engine's greedy outputs equal an isolated
+  per-request prefill+decode reference; mixed lengths retire
+  independently; queued work waits for pages and then runs; EOS
+  retirement.
+* Live hot-swap: installing v1 mid-generation continues EXACTLY as a
+  fresh engine restarted on v1 with the emitted history as prompt;
+  worker-stacked publishes reduce bucket-wise to the consensus;
+  manifest versioning + subscriber polling.
+* Telemetry: admit/prefill/decode/swap spans (category ``serve``) and
+  the ``repro_serve_*`` metric families.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import checkpoint
+from repro.core import flatbuf
+from repro.launch.steps import build_engine
+from repro.models import base as mbase
+from repro.models import lm
+from repro.serving import (DecodeEngine, WeightPublisher, WeightSubscriber,
+                           build_page_layout, init_pool, paged)
+from repro.telemetry import MetricsRegistry, Tracer
+from repro.telemetry.trace import SPAN_CATEGORIES
+
+
+def make_params(cfg, seed=0):
+    return mbase.materialize(lm.param_specs(cfg), jax.random.PRNGKey(seed))
+
+
+def ref_greedy(cfg, params, prompt, n, max_len):
+    """Isolated per-request reference: exact-length prefill + decode."""
+    t = jnp.asarray([list(prompt)], jnp.int32)
+    lg, c = lm.prefill(cfg, params, t, max_len=max_len)
+    out = [int(np.asarray(lg)[0, -1].argmax())]
+    ln = len(prompt) + 1
+    for _ in range(n - 1):
+        lg, c = lm.decode_step(cfg, params,
+                               jnp.asarray([[out[-1]]], jnp.int32), c,
+                               jnp.int32(ln))
+        out.append(int(np.asarray(lg)[0, -1].argmax()))
+        ln += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode == prefill, position by position
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "qwen3-32b"])
+def test_decode_matches_prefill_positionwise(arch):
+    cfg = configs.get_smoke(arch)
+    params = make_params(cfg)
+    B, S = 2, 12
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    # full-sequence prefill logits at every position
+    out = lm.forward(cfg, params, tokens, mode="prefill", cache_len=S)
+    full = np.asarray(lm.logits_from_hidden(cfg, params, out["hidden"]))
+    # stepwise: prefill the first token, decode the rest one at a time
+    lg, cache = lm.prefill(cfg, params, tokens[:, :1], max_len=S)
+    np.testing.assert_allclose(np.asarray(lg)[:, 0], full[:, 0],
+                               rtol=1e-4, atol=1e-4)
+    for i in range(1, S):
+        lg, cache = lm.decode_step(cfg, params, tokens[:, i:i + 1], cache,
+                                   jnp.int32(i + 1))
+        np.testing.assert_allclose(np.asarray(lg)[:, 0], full[:, i],
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"position {i}")
+
+
+def test_prefill_lengths_reads_true_last_position():
+    """Right-padded prefill with ``lengths`` returns the logits an
+    exact-length prefill returns (the padded admission path)."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 5)
+    exact = jnp.asarray([prompt], jnp.int32)
+    lg_exact, _ = lm.prefill(cfg, params, exact)
+    padded = np.zeros((1, 16), np.int32)
+    padded[0, :5] = prompt
+    lg_pad, _ = lm.prefill(cfg, params, jnp.asarray(padded),
+                           lengths=jnp.asarray([5]))
+    np.testing.assert_array_equal(np.asarray(lg_exact), np.asarray(lg_pad))
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("page_size", [1, 4, 8])
+def test_paged_decode_identical_to_contiguous(page_size):
+    """Acceptance: paged decode (gather -> decode -> scatter) is
+    bitwise-identical to decoding on the contiguous cache."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    B, L, max_len = 2, 6, 16
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+    logits, cache = lm.prefill(cfg, params, prompts, max_len=max_len)
+
+    pl = build_page_layout(cfg, page_size=page_size, max_len=max_len,
+                          num_pages=1 + B * (-(-max_len // page_size)))
+    pools = init_pool(pl)
+    tables = np.zeros((B, pl.pages_per_seq), np.int32)
+    free = list(range(1, pl.num_pages))
+    for b in range(B):
+        tables[b] = [free.pop(0) for _ in range(pl.pages_per_seq)]
+        leaves = jax.tree.leaves(cache)
+        sel = [jnp.take(leaf, jnp.array([b]), axis=ax.index("batch"))
+               for leaf, ax in zip(leaves, pl.leaf_axes)]
+        cb = jax.tree.unflatten(pl.token_layout.treedef, sel)
+        pools = paged.scatter_prefill(pl, pools, cb,
+                                      jnp.asarray(tables[b]), jnp.int32(L))
+    tok = tok_p = logits.argmax(-1).astype(jnp.int32)
+    cache_c = cache
+    lens = np.full(B, L, np.int32)
+    for _ in range(4):
+        lens += 1
+        lg_c, cache_c = lm.decode_step(cfg, params, tok, cache_c,
+                                       jnp.asarray(lens))
+        lg_p, pools = paged.paged_decode_step(
+            cfg, params, tok_p, pools, jnp.asarray(tables),
+            jnp.asarray(lens), pl)
+        np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+        tok = lg_c.argmax(-1).astype(jnp.int32)
+        tok_p = lg_p.argmax(-1).astype(jnp.int32)
+
+
+def test_page_layout_mirrors_flatbuf_and_rejects_recurrent():
+    cfg = configs.get_smoke("gemma3-1b")
+    pl = build_page_layout(cfg, page_size=4, max_len=16, num_pages=8)
+    # per-token rows follow the flatbuf sublane convention
+    assert all(r % flatbuf.SUBLANE == 0 for r in pl.rows_per_token)
+    assert pl.pages_per_seq == 4 and pl.max_tokens == 16
+    assert pl.pool_bytes() > 0
+    # recurrent mixers keep fixed-size state: no kv_seq axis -> no pages
+    with pytest.raises(ValueError, match="recurrent|kv_seq"):
+        build_page_layout(configs.get_smoke("zamba2-7b"), page_size=4,
+                          max_len=16, num_pages=8)
+
+
+def test_null_page_stays_zero_and_pages_conserve():
+    """Idle-slot writes drop (OOB sentinel), so page 0 keeps the
+    padding-is-zero invariant; retire returns every page."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    eng = DecodeEngine(cfg, params, max_batch=3, max_len=16, page_size=4)
+    total_free = len(eng.free_pages)
+    assert total_free == eng.pl.num_pages - 1       # all but the null page
+    eng.submit([1, 2, 3], max_new=4)
+    eng.run()
+    assert len(eng.free_pages) == total_free        # retire returned them
+    for pool in eng.pools:                          # null page untouched
+        assert not np.asarray(pool[paged.NULL_PAGE]).any()
+
+
+def test_queue_waits_for_pages_then_runs():
+    """With pages for only one resident sequence, the second request
+    queues, admits after the first retires, and still decodes exactly."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    max_len = 16
+    pl = build_page_layout(cfg, page_size=8, max_len=max_len, num_pages=0)
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=max_len,
+                       page_size=8, num_pages=1 + pl.pages_per_seq)
+    rng = np.random.default_rng(3)
+    p0 = rng.integers(0, cfg.vocab_size, 4).tolist()
+    p1 = rng.integers(0, cfg.vocab_size, 3).tolist()
+    u0 = eng.submit(p0, max_new=3)
+    u1 = eng.submit(p1, max_new=3)
+    eng.step()
+    assert eng.num_active == 1 and len(eng.queue) == 1   # no pages for #2
+    res = {r.uid: r for r in eng.run()}
+    assert res[u0].tokens == ref_greedy(cfg, params, p0, 3, max_len)
+    assert res[u1].tokens == ref_greedy(cfg, params, p1, 3, max_len)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching engine
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_isolated_reference_mixed_lengths():
+    """Continuous batching with staggered admissions/retirements emits
+    exactly the tokens each request would get decoded alone."""
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    max_len = 24
+    eng = build_engine(cfg, type("S", (), {"global_batch": 3,
+                                           "seq_len": max_len})(),
+                       params, page_size=4)
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          rng.integers(2, 7)).tolist(),
+             int(rng.integers(2, 9))) for _ in range(6)]
+    uids = [eng.submit(p, max_new=n) for p, n in reqs]
+    results = {r.uid: r for r in eng.run()}
+    assert len(results) == len(reqs)
+    for uid, (p, n) in zip(uids, reqs):
+        assert results[uid].tokens == ref_greedy(cfg, params, p, n, max_len)
+        assert results[uid].finish_reason == "length"
+    assert eng.idle and eng.tokens_out == sum(n for _, n in reqs)
+
+
+def test_engine_eos_retirement():
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    prompt = [5, 9, 2]
+    ref = ref_greedy(cfg, params, prompt, 8, 16)
+    eos = ref[2]                       # force a stop mid-generation
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=16, page_size=4,
+                       eos_id=eos)
+    uid = eng.submit(prompt, max_new=8)
+    res = {r.uid: r for r in eng.run()}
+    assert res[uid].finish_reason == "eos"
+    assert res[uid].tokens == ref[:3]            # up to and incl. the EOS
+
+
+def test_engine_rejects_oversized_and_empty():
+    cfg = configs.get_smoke("gemma3-1b")
+    eng = DecodeEngine(cfg, make_params(cfg), max_batch=1, max_len=8,
+                       page_size=4)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit([1] * 6, max_new=4)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([])
+
+
+# ---------------------------------------------------------------------------
+# live weight hot-swap + publish channel
+# ---------------------------------------------------------------------------
+
+def test_publish_manifest_and_subscriber_roundtrip(tmp_path):
+    cfg = configs.get_smoke("gemma3-1b")
+    p_v0, p_v1 = make_params(cfg, 0), make_params(cfg, 1)
+    pub = WeightPublisher(str(tmp_path))
+    assert pub.publish(p_v0, step=0) == 0
+    # worker-stacked resident publish: bucket-level mean == consensus
+    stacked = flatbuf.BucketState.pack(
+        jax.tree.map(lambda a: jnp.stack([a, a]), p_v1), leading=1)
+    assert pub.publish(stacked, step=10) == 1
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["latest"] == 1
+    assert set(manifest["versions"]) == {"0", "1"}
+    assert manifest["versions"]["1"]["step"] == 10
+    sub = WeightSubscriber(str(tmp_path), lm.param_specs(cfg))
+    ver, state = sub.poll()
+    assert ver == 1 and flatbuf.is_bucket_state(state)
+    for got, want in zip(jax.tree.leaves(state.unpack()),
+                         jax.tree.leaves(p_v1)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+    assert sub.poll(newer_than=1) is None        # already current
+
+
+def test_hot_swap_equals_restart_on_new_weights(tmp_path):
+    """Acceptance: k tokens under v0, install v1 mid-generation, and the
+    continuation equals a fresh engine on v1 whose prompt is the
+    history emitted so far."""
+    cfg = configs.get_smoke("gemma3-1b")
+    p_v0, p_v1 = make_params(cfg, 0), make_params(cfg, 1)
+    max_len = 24
+    pub = WeightPublisher(str(tmp_path))
+    pub.publish(p_v0, step=0)
+    pub.publish(p_v1, step=10)
+    sub = WeightSubscriber(str(tmp_path), lm.param_specs(cfg))
+
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 5).tolist()
+    eng = DecodeEngine(cfg, p_v0, max_batch=2, max_len=max_len, page_size=4)
+    uid = eng.submit(prompt, max_new=10)
+    for _ in range(3):
+        eng.step()
+    k = int(eng.gen[0])
+    hist_k = list(eng.hist[0])
+    assert eng.poll_weights(sub) == 1            # install v1 mid-flight
+    assert eng.poll_weights(sub) is None         # idempotent
+    res = {r.uid: r for r in eng.run()}
+
+    fresh = DecodeEngine(cfg, p_v1, max_batch=2, max_len=max_len,
+                         page_size=4)
+    uid2 = fresh.submit(hist_k, max_new=10 - k)
+    res2 = {r.uid: r for r in fresh.run()}
+    assert res[uid].tokens[k:] == res2[uid2].tokens
+    assert res[uid].weight_versions[-1] == 1     # provenance on the result
+    assert eng.weight_version == 1
+
+
+# ---------------------------------------------------------------------------
+# telemetry: spans + metrics + manifest surface
+# ---------------------------------------------------------------------------
+
+def test_serving_spans_and_metrics():
+    assert all(SPAN_CATEGORIES[n] == "serve"
+               for n in ("admit", "prefill", "decode", "swap"))
+    cfg = configs.get_smoke("gemma3-1b")
+    params = make_params(cfg)
+    tracer = Tracer()
+    reg = MetricsRegistry()
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=16, page_size=4,
+                       tracer=tracer, metrics=reg)
+    eng.submit([1, 2, 3], max_new=4)
+    eng.submit([4, 5], max_new=2)
+    eng.run()
+    eng.install_weights(make_params(cfg, 1), version=7)
+    names = {s.name for s in tracer.spans}
+    assert {"admit", "prefill", "decode", "swap"} <= names
+    swap = [s for s in tracer.spans if s.name == "swap"][0]
+    assert swap.attrs["version"] == 7 and swap.dur_s is not None
+    admits = [s for s in tracer.spans if s.name == "admit"]
+    assert sum(s.attrs["admitted"] for s in admits) == 2
+    expo = reg.exposition()
+    for fam in ("repro_serve_tokens_total", "repro_serve_queue_depth",
+                "repro_serve_batch_occupancy", "repro_serve_decode_seconds",
+                "repro_serve_swap_seconds", "repro_serve_weight_version"):
+        assert fam in expo, fam
+    assert 'repro_serve_weight_version 7' in expo
+    assert eng.describe()["tokens_out"] == 6
+
+
+def test_publish_flat_latest_helpers(tmp_path):
+    """checkpoint.publish_flat / latest_flat: the manifest protocol
+    stands alone (usable without the serving classes)."""
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    assert checkpoint.latest_flat(str(tmp_path)) is None
+    v0, p0 = checkpoint.publish_flat(str(tmp_path), tree, step=1)
+    v1, p1 = checkpoint.publish_flat(str(tmp_path), tree, step=2)
+    assert (v0, v1) == (0, 1) and p0 != p1
+    ver, path = checkpoint.latest_flat(str(tmp_path))
+    assert ver == 1 and path == p1
+    got = checkpoint.restore_flat(path, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree["a"]))
